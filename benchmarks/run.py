@@ -1,0 +1,26 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import tables
+
+    all_rows = []
+    for fn in (tables.table1_compression, tables.table2_ablation,
+               tables.table3_kernel_scaling, tables.table4_latency):
+        try:
+            all_rows.extend(fn())
+        except Exception as e:  # noqa: BLE001
+            all_rows.append((f"{fn.__name__}/ERROR", 0.0,
+                             f"{type(e).__name__}:{e}"))
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

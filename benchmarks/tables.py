@@ -1,0 +1,177 @@
+"""One benchmark per paper table (Tables I-IV of FQ-BERT).
+
+All run on CPU in minutes; each returns rows of (name, us_per_call, derived).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, *args, iters=5, warmup=2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# --- Table I: compression ratio + accuracy proxy -------------------------------
+
+def table1_compression() -> List[Row]:
+    from repro.configs import get_config, smoke_config
+    from repro.models import transformer as T
+    from repro.models import fold as F
+    from repro.models import serve_int as S
+
+    rows: List[Row] = []
+    cfg = get_config("bert-base")
+    # model-size accounting at the paper's exact dims (no allocation needed)
+    p_shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    a_shapes = jax.eval_shape(lambda: T.init_amax(cfg))
+    f_shapes = jax.eval_shape(lambda p, a: F.fold_params(cfg, p, a),
+                              p_shapes, a_shapes)
+
+    def nbytes(tree):
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in jax.tree.leaves(tree))
+
+    fp32_bytes = sum(int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(p_shapes))
+    # weight-stream compression (the paper's 7.94x is weights: fp32 -> int4+scales)
+    blocks32 = sum(int(np.prod(x.shape)) * 4
+                   for x in jax.tree.leaves(p_shapes["blocks"]))
+    blocks_q = nbytes(f_shapes["blocks"])
+    rows.append(("table1/encoder_weight_compression", 0.0,
+                 f"ratio={blocks32 / blocks_q:.2f}x_target=7.94x"))
+    rows.append(("table1/full_model_compression", 0.0,
+                 f"ratio={fp32_bytes / nbytes(f_shapes):.2f}x"))
+
+    # accuracy proxy at smoke scale: fp32 vs FQ logit agreement after QAT fold
+    cfg_s = smoke_config("bert-base")
+    params = T.init_params(cfg_s, jax.random.PRNGKey(0))
+    amax = T.init_amax(cfg_s)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                              cfg_s.vocab_size)
+    lg_f, obs, _ = T.forward(cfg_s, params, amax, toks)
+    folded = F.fold_params(cfg_s, params, obs)
+    lg_i, _ = S.serve_forward(cfg_s, folded, toks, mode="prefill")
+    pf = jax.nn.softmax(lg_f, -1)
+    kl = float(jnp.mean(jnp.sum(
+        pf * (jax.nn.log_softmax(lg_f, -1) - jax.nn.log_softmax(lg_i, -1)),
+        -1)))
+    agree = float((jnp.argmax(lg_f, -1) == jnp.argmax(lg_i, -1)).mean())
+    rows.append(("table1/fq_vs_fp_logit_kl", 0.0, f"kl={kl:.5f}"))
+    rows.append(("table1/fq_vs_fp_argmax_agreement", 0.0, f"acc={agree:.3f}"))
+    return rows
+
+
+# --- Table II: quantization ablation ------------------------------------------
+
+def table2_ablation() -> List[Row]:
+    import dataclasses
+    from repro.configs import smoke_config
+    from repro.core.policy import TABLE2_ROWS
+    from repro.models import transformer as T
+
+    rows: List[Row] = []
+    base = smoke_config("bert-base")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                              base.vocab_size)
+    ref_logits = None
+    from repro.core.policy import POLICY_W8A8
+    for name, pol in TABLE2_ROWS + [("w8a8 (Q8BERT pt)", POLICY_W8A8)]:
+        cfg = dataclasses.replace(base, quant=pol)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        amax = T.init_amax(cfg)
+        lg, obs, _ = T.forward(cfg, params, amax, toks)
+        lg, _, _ = T.forward(cfg, params, obs, toks)  # calibrated pass
+        if ref_logits is None:
+            ref_logits = lg
+            rows.append((f"table2/{name}", 0.0, "kl=0.0(reference)"))
+            continue
+        pf = jax.nn.softmax(ref_logits, -1)
+        kl = float(jnp.mean(jnp.sum(pf * (
+            jax.nn.log_softmax(ref_logits, -1) - jax.nn.log_softmax(lg, -1)),
+            -1)))
+        rows.append((f"table2/{name.replace(' ', '_')}", 0.0, f"kl={kl:.5f}"))
+    return rows
+
+
+# --- Table III: PE/BIM scaling analog (kernel tile sweep) -----------------------
+
+def table3_kernel_scaling() -> List[Row]:
+    from repro.core import packing as pk
+    from repro.core import fixedpoint as fxp
+    from repro.kernels import ref as R
+
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    M, K, N = 128, 768, 768  # BERT-base projection at seq 128
+    x = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    codes = jnp.asarray(rng.integers(-8, 8, (K, N)), jnp.int8)
+    wp = pk.pack_int4_planar(codes, axis=0)
+    bias = jnp.zeros((N,), jnp.int32)
+    Mq, sh = fxp.quantize_multiplier(0.001)
+    f = jax.jit(lambda a, b: R.int4_matmul_ref(a, b, bias, jnp.int32(Mq),
+                                               jnp.int32(sh)))
+    us = _timeit(f, x, wp)
+    rows.append(("table3/w4a8_768x768_xla", us, f"gops={2*M*K*N/us/1e3:.1f}"))
+    f8 = jax.jit(lambda a, w: R.int8_bitsplit_matmul_ref(
+        a, w, bias, jnp.int32(Mq), jnp.int32(sh)))
+    w8 = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    us8 = _timeit(f8, x, w8)
+    rows.append(("table3/w8a8_bitsplit_768x768_xla", us8,
+                 f"gops={2*M*K*N/us8/1e3:.1f}"))
+    # (N, M) analog: Pallas tile configs -> VMEM working set per grid step
+    for bm, bn, bk2 in ((128, 128, 256), (256, 128, 256), (128, 256, 512)):
+        vmem = bm * bk2 * 2 + bk2 * bn + bm * bn * 4 + bm * bn
+        rows.append((f"table3/tile_bm{bm}_bn{bn}_bk2{bk2}", 0.0,
+                     f"vmem_kb={vmem/1024:.0f}"))
+    return rows
+
+
+# --- Table IV: fp32 vs quantized latency (CPU analog of CPU/GPU/FPGA) -----------
+
+def table4_latency() -> List[Row]:
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core.policy import POLICY_FP32
+    from repro.models import transformer as T
+    from repro.models import fold as F
+    from repro.models import serve_int as S
+
+    rows: List[Row] = []
+    # paper operating point: BERT-base, seq 128, batch 1 — but at a reduced
+    # depth so the CPU benchmark stays in seconds; latency scales linearly in
+    # depth (scan), so report per-layer too.
+    cfg = get_config("bert-base", n_layers=4, remat=False)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    amax = T.init_amax(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0,
+                              cfg.vocab_size)
+    cfg_fp = dataclasses.replace(cfg, quant=POLICY_FP32)
+    fp = jax.jit(lambda p, a, t: T.forward(cfg_fp, p, a, t)[0])
+    us_fp = _timeit(fp, params, amax, toks, iters=3)
+    _, obs, _ = T.forward(cfg, params, amax, toks)
+    folded = F.fold_params(cfg, params, obs)
+    qt = jax.jit(lambda f, t: S.serve_forward(cfg, f, t, mode="prefill")[0])
+    us_q = _timeit(qt, folded, toks, iters=3)
+    rows.append(("table4/bert4L_fp32_cpu", us_fp, f"fps={1e6/us_fp:.2f}"))
+    rows.append(("table4/bert4L_int_cpu", us_q, f"fps={1e6/us_q:.2f}"))
+    rows.append(("table4/speedup", 0.0, f"x={us_fp/us_q:.2f}"))
+    # bytes-moved proxy for fps/W (the paper's energy win is weight bytes)
+    import numpy as _np
+    p_bytes = sum(int(_np.prod(x.shape)) * 4 for x in jax.tree.leaves(params))
+    f_bytes = sum(int(_np.prod(_np.asarray(x).shape)) * _np.asarray(x).dtype.itemsize
+                  for x in jax.tree.leaves(folded))
+    rows.append(("table4/weight_bytes_fp32", 0.0, f"mb={p_bytes/2**20:.1f}"))
+    rows.append(("table4/weight_bytes_int", 0.0, f"mb={f_bytes/2**20:.1f}"))
+    return rows

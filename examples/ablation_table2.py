@@ -1,0 +1,32 @@
+"""Paper Table II ablation: progressively quantize w/a -> scales -> softmax
+-> layernorm and measure the output divergence at each step.
+
+    PYTHONPATH=src python examples/ablation_table2.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.core.policy import TABLE2_ROWS
+from repro.models import transformer as T
+
+base = smoke_config("bert-base")
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, base.vocab_size)
+ref = None
+print(f"{'config':<24} {'logit KL vs fp32':>18}")
+for name, pol in TABLE2_ROWS:
+    cfg = dataclasses.replace(base, quant=pol)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    amax = T.init_amax(cfg)
+    _, obs, _ = T.forward(cfg, params, amax, toks)      # calibrate
+    lg, _, _ = T.forward(cfg, params, obs, toks)
+    if ref is None:
+        ref = lg
+        print(f"{name:<24} {'(reference)':>18}")
+        continue
+    p = jax.nn.softmax(ref, -1)
+    kl = float(jnp.mean(jnp.sum(p * (jax.nn.log_softmax(ref, -1)
+                                     - jax.nn.log_softmax(lg, -1)), -1)))
+    print(f"{name:<24} {kl:>18.6f}")

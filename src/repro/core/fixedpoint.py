@@ -1,0 +1,149 @@
+"""32-bit fixed-point requantization — paper Eq. 5, int32-ONLY arithmetic.
+
+After an integer matmul the int32 accumulator must be rescaled to the output
+activation's 8-bit grid:
+
+    y_I = round(y * s_y) = (sum_i a_I w_I + b_I) * s_f,   s_f = s_y / (s_a s_w)
+
+The paper stores s_f as "a 32-bit integer" — a fixed-point multiplier.  TPU
+(and this JAX config) has no fast 64-bit path, so the datapath here is
+strictly 32-bit, exactly like the FPGA's DSP48 chain:
+
+    s_f ~= M * 2^(-shift),  M a Q15 mantissa in [2^14, 2^15),  shift >= 0
+
+    rescale(acc) = ((clamp(acc >>r pre) * M) + rnd) >> (shift - pre)
+
+where ``pre = max(0, shift + out_bits - 30)`` pre-drops bits so the
+multiplicand fits 15 bits: any accumulator value large enough to be clamped
+by the pre-shift would have saturated the out_bits output anyway, so the
+clamp is exact w.r.t. the saturating output.  ``>>r`` = rounding right shift.
+
+Error budget vs. the real product: <= 0.5 output LSB (final shift) +
+2^-14 relative (M mantissa) + ~0.002 LSB (pre-shift) — comfortably inside
+the 1-LSB contract the tests enforce.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MANT_BITS = 15  # Q15 mantissa
+
+
+def quantize_multiplier(s_f: float) -> Tuple[int, int]:
+    """Real multiplier -> (M, shift): s_f ~= M * 2^-shift, M in [2^14, 2^15)."""
+    if s_f <= 0:
+        return 0, 0
+    m, e = np.frexp(np.float64(s_f))  # s_f = m * 2^e, m in [0.5, 1)
+    M = int(np.round(m * (1 << MANT_BITS)))
+    if M == (1 << MANT_BITS):
+        M //= 2
+        e += 1
+    shift = MANT_BITS - int(e)
+    if shift < 0:  # s_f >= 2^15-ish: fold into M (never hits for requant scales)
+        M = min(M << (-shift), (1 << 31) - 1)
+        shift = 0
+    return M, shift
+
+
+def quantize_multiplier_array(s_f: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Traced version for scales computed inside a jitted graph."""
+    s_f = jnp.maximum(s_f.astype(jnp.float32), 1e-30)
+    e = jnp.floor(jnp.log2(s_f)) + 1.0  # s_f = m * 2^e, m in [0.5, 1)
+    m = s_f * jnp.exp2(-e)
+    M = jnp.round(m * (1 << MANT_BITS))
+    renorm = M >= (1 << MANT_BITS)
+    M = jnp.where(renorm, M / 2, M)
+    e = jnp.where(renorm, e + 1, e)
+    shift = MANT_BITS - e
+    neg = shift < 0
+    M = jnp.where(neg, jnp.minimum(M * jnp.exp2(jnp.where(neg, -shift, 0)), 2.0**31 - 1), M)
+    shift = jnp.maximum(shift, 0.0)
+    return M.astype(jnp.int32), shift.astype(jnp.int32)
+
+
+def _rshift_round(x: jax.Array, n: jax.Array) -> jax.Array:
+    """Rounding arithmetic right shift (round half away from zero), n >= 0."""
+    n = jnp.asarray(n, jnp.int32)
+    bias = jnp.where(n > 0, (jnp.int32(1) << jnp.maximum(n - 1, 0)), 0)
+    pos = (x + bias) >> n
+    neg = -((-x + bias) >> n)
+    return jnp.where(x >= 0, pos, neg)
+
+
+def rescale(
+    acc: jax.Array, M: jax.Array, shift: jax.Array, out_bits: int = 8
+) -> jax.Array:
+    """round(acc * M * 2^-shift) in pure int32, exact up to output saturation.
+
+    ``out_bits`` bounds the useful output magnitude (2^(out_bits-1)); larger
+    results are saturated to +-(2^(out_bits) - 1) — callers clamp tighter.
+    """
+    acc = acc.astype(jnp.int32)
+    M = jnp.asarray(M, jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    pre = jnp.maximum(shift + (out_bits - 30), 0)
+    v = _rshift_round(acc, pre)
+    lim = jnp.int32((1 << MANT_BITS) - 1)
+    v = jnp.clip(v, -lim - 1, lim)
+    t = v * M  # |v| <= 2^15, M < 2^15  ->  |t| <= 2^30, no overflow
+    return _rshift_round(t, shift - pre)
+
+
+def requantize(acc: jax.Array, M, shift, bits: int = 8) -> jax.Array:
+    """int32 accumulator -> k-bit code (int8 storage), clamped symmetric."""
+    y = rescale(acc, M, shift, out_bits=bits)
+    lim = (1 << (bits - 1)) - 1
+    return jnp.clip(y, -lim, lim).astype(jnp.int8)
+
+
+# --- integer rsqrt for the LN core (int32-only Newton, mantissa/exponent) ---
+
+RSQRT_FRAC = 14
+
+
+def rsqrt_mantexp(x: jax.Array, iters: int = 3) -> Tuple[jax.Array, jax.Array]:
+    """Block-normalized integer rsqrt: 1/sqrt(x) = (y / 2^15) * 2^-s.
+
+    x int32 in [1, 2^30).  Returns (y, s) with y the Q15 mantissa in
+    (2^14, 2^15] (value 1/sqrt(m), m = x/4^s in [1,4)) and s = floor(e/2).
+    Normalizing first keeps every Newton quantity in a narrow range so no
+    fixed Q-format ever underflows (the failure mode of a naive global-Q
+    iteration): y2 = Y^2 in Q15 in (2^13, 2^15]; t = m*Y^2 in Q14 ~ 2^14;
+    f = 3*2^14 - t in [2^14, 2^15]; y*f <= 2^30.  Strictly int32.
+    """
+    x = jnp.maximum(x.astype(jnp.int32), 1)
+    # e = floor(log2 x): float32 log2 is exact-enough for a *branch* decision
+    # on powers of two boundaries and identical in kernel & oracle.
+    e = jnp.floor(jnp.log2(x.astype(jnp.float32) * (1.0 + 1e-7))).astype(jnp.int32)
+    s = e >> 1
+    # m in Q14: m14 = x * 2^(14-2s)  in [2^14, 2^16)
+    sh = 14 - 2 * s
+    m14 = jnp.where(sh >= 0, x << jnp.maximum(sh, 0), x >> jnp.maximum(-sh, 0))
+    # 2-entry seed table: m in [1,2) -> Y~0.85;  m in [2,4) -> Y~0.60
+    y = jnp.where(m14 < (1 << 15), jnp.int32(27853), jnp.int32(19661))
+    three = jnp.int32(3 << 14)
+    for _ in range(iters):
+        y2 = (y * y) >> 15          # Q15 of Y^2
+        t = (m14 * y2) >> 15        # Q14 of m*Y^2  (~2^14 near convergence)
+        y = (y * (three - t)) >> 15 # Q15, Y' = Y*(3 - m*Y^2)/2
+    return y, s
+
+
+def fixed_rsqrt(x: jax.Array, iters: int = 3) -> jax.Array:
+    """y ~= 2^14 / sqrt(x) for int32 x >= 1 (convenience Q14 form)."""
+    y, s = rsqrt_mantexp(x, iters)
+    return _rshift_round(y, s + 1)
+
+
+# --- small Q-format helpers --------------------------------------------------
+
+def to_fixed(x: jax.Array, frac_bits: int, dtype=jnp.int32) -> jax.Array:
+    return jnp.round(x * (1 << frac_bits)).astype(dtype)
+
+
+def from_fixed(x: jax.Array, frac_bits: int) -> jax.Array:
+    return x.astype(jnp.float32) / (1 << frac_bits)

@@ -1,0 +1,101 @@
+"""Fully-quantized LayerNorm — paper §III-B "LN Core" (3-stage integer SIMD).
+
+Stage 1: int32 row sum            -> mean code (rounded integer divide)
+Stage 2: centered sum of squares  -> variance code
+Stage 3: integer Newton rsqrt (Q14), multiply by int8 gamma, add aligned
+         beta, fixed-point requantize to the 8-bit output grid.
+
+Strictly int32 arithmetic (TPU-native; no 64-bit anywhere):
+  x real = x_I / s_x, |x_I| <= 127 -> |c| <= 254, c^2 <= 2^16,
+  sum-of-squares <= 2^16 * N  (N <= 16384 => fits int32),
+  rstd  = fixed_rsqrt(var) : Q14 code of 1/sqrt(var_codes)  in [64, 2^14]
+  n     = c * rstd          : Q14 code of (x-mu)/sigma, <= 254*2^14 = 2^22
+  acc   = n * gamma_I + beta_aligned : <= 2^22 * 127 ~ 2^29
+  y_I   = requant(acc, M_out, sh_out),  M_out*2^-sh ~ s_y / (2^14 * s_g)
+
+RMSNorm (no mean subtraction, no beta) is the same pipeline with stage 1
+skipped — used by the llama-family archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core import quant as q
+
+FRAC = fxp.RSQRT_FRAC  # Q14 normalized-value domain
+
+
+@dataclasses.dataclass(frozen=True)
+class QLNParams:
+    """Folded integer parameters of one quantized LayerNorm."""
+
+    gamma_i: jax.Array       # int8 codes, scale s_g
+    beta_aligned: jax.Array  # int32, pre-aligned into the n*gamma accumulator
+    M_out: jax.Array         # Q15 fixed-point output multiplier
+    shift_out: jax.Array
+    subtract_mean: bool = True
+
+
+def fold_layernorm(
+    gamma: np.ndarray, beta: np.ndarray | None, s_y: float, subtract_mean: bool = True
+) -> QLNParams:
+    """Quantize gamma/beta to 8-bit (paper: 'parameters of layer normalization
+    to 8-bit fixed-point values') and fold all scales into integer constants."""
+    gamma = np.asarray(gamma, np.float64)
+    s_g = float(q.qmax(8)) / max(float(np.max(np.abs(gamma))), 1e-8)
+    gamma_i = np.clip(np.round(gamma * s_g), -127, 127).astype(np.int8)
+    acc_scale = float(1 << FRAC) * s_g  # accumulator codes per real unit
+    if beta is not None:
+        # beta is quantized to 8-bit on its own grid, then re-aligned into the
+        # accumulator domain (exactly what the FPGA does with a constant add)
+        s_b = float(q.qmax(8)) / max(float(np.max(np.abs(beta))), 1e-8)
+        beta_i = np.clip(np.round(np.asarray(beta, np.float64) * s_b), -127, 127)
+        beta_aligned = np.round(beta_i / s_b * acc_scale).astype(np.int64)
+        beta_aligned = np.clip(beta_aligned, -(2**30), 2**30).astype(np.int32)
+    else:
+        beta_aligned = np.zeros_like(gamma_i, dtype=np.int32)
+    M, sh = fxp.quantize_multiplier(s_y / acc_scale)
+    return QLNParams(
+        gamma_i=jnp.asarray(gamma_i),
+        beta_aligned=jnp.asarray(beta_aligned),
+        M_out=jnp.asarray(M, jnp.int32),
+        shift_out=jnp.asarray(sh, jnp.int32),
+        subtract_mean=subtract_mean,
+    )
+
+
+def quant_layernorm(x_int: jax.Array, p: QLNParams, eps_codes: int = 1) -> jax.Array:
+    """Reference integer LayerNorm.  x_int: int8 codes (..., N) with scale
+    s_x; returns int8 codes on the folded output grid.
+
+    Mirrors the 3-stage hardware pipeline; variance is the biased (1/N)
+    estimator like the paper's LN core.  N must be <= 16384 (int32 budget).
+    """
+    xi = x_int.astype(jnp.int32)
+    n = xi.shape[-1]
+    assert n <= 16384, "int32 sum-of-squares budget exceeded"
+    if p.subtract_mean:
+        s = jnp.sum(xi, axis=-1, keepdims=True)
+        mean = _rounded_div(s, n)
+        c = xi - mean
+    else:
+        c = xi
+    ss = jnp.sum(c * c, axis=-1, keepdims=True)
+    var = jnp.maximum(_rounded_div(ss, n), eps_codes)
+    # full-precision Q15 mantissa + exponent; shift AFTER the c* multiply so
+    # no precision is lost for large-variance rows
+    y_m, s_e = fxp.rsqrt_mantexp(var)
+    n_q = fxp._rshift_round(c * y_m, s_e + 1)   # Q14 of (x-mu)/sigma
+    acc = n_q * p.gamma_i.astype(jnp.int32) + p.beta_aligned
+    y = fxp.rescale(acc, p.M_out, p.shift_out)
+    return jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+def _rounded_div(a: jax.Array, n: int) -> jax.Array:
+    half = n // 2
+    return jnp.where(a >= 0, (a + half) // n, -((-a + half) // n))

@@ -1,0 +1,132 @@
+"""Quantized linear layer: QAT (fake-quant) and folded-integer representations.
+
+One logical layer, two physical forms:
+
+* **QAT form** (training, paper §IV-A procedure): float master weights W, bias
+  b; forward fake-quantizes activations (8-bit, EMA scale) and weights (4-bit,
+  max|W| scale) with STE gradients.  This is what ``train_step`` lowers.
+* **Folded form** (serving): nibble-packed int4 codes + int32 bias + a 32-bit
+  fixed-point requantization multiplier (paper Eq. 4/5).  This is what
+  ``serve_step`` lowers, and what the Pallas int4 matmul kernel consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core import packing
+from repro.core import quant as q
+from repro.core.policy import QuantPolicy, quantize_scale_8bit
+
+
+class FoldedLinear(NamedTuple):
+    """Integer serving form of a linear layer y = x @ W + b.
+
+    ``w_packed``: uint8 (K//2, N) — K-axis nibble-planar packed int4 codes
+    (rows [0, K/2) in low nibbles, [K/2, K) in high nibbles; Type-A BIM layout).
+    For w_bits == 8 the codes are plain int8 (K, N) and ``w_packed`` is int8.
+    """
+
+    w_packed: jax.Array
+    bias_i: jax.Array      # int32 (N,)
+    M: jax.Array           # int32 requant multiplier
+    shift: jax.Array       # int32 requant shift
+    w_bits: int
+
+
+def qat_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    a_max: jax.Array,
+    policy: QuantPolicy,
+) -> jax.Array:
+    """QAT forward: fake-quant activations + weights, float matmul.
+
+    ``a_max``: EMA max|activation| for this site (0 on the very first step —
+    falls back to the batch statistic so calibration bootstraps itself).
+    """
+    if policy.quantize_wa:
+        a_obs = jax.lax.stop_gradient(q.per_tensor_max(x))
+        a_m = jnp.where(a_max > 0, a_max, a_obs)
+        x = q.fake_quant(x, a_m, policy.a_bits)
+        if policy.per_channel_w:
+            w_m = jax.lax.stop_gradient(q.per_channel_max(w, axis=-1))
+        else:
+            w_m = jax.lax.stop_gradient(q.per_tensor_max(w))
+        w = q.fake_quant(w, w_m, policy.w_bits)
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def observe(x: jax.Array) -> jax.Array:
+    """Batch statistic for the EMA calibrator (Eq. 3)."""
+    return jax.lax.stop_gradient(q.per_tensor_max(x)).astype(jnp.float32)
+
+
+def fold_linear(
+    w: np.ndarray,
+    b: Optional[np.ndarray],
+    s_a: float,
+    s_y: float,
+    policy: QuantPolicy,
+) -> FoldedLinear:
+    """Fold a trained float linear layer into the integer serving form.
+
+    s_a: input activation scale (from EMA), s_y: output activation scale.
+    """
+    w = np.asarray(w, np.float64)
+    k_in = w.shape[0]
+    s_w = float(q.qmax(policy.w_bits) / max(float(np.max(np.abs(w))), 1e-8))
+    if policy.quantize_scale:
+        s_w = quantize_scale_8bit(s_w)
+        s_a = quantize_scale_8bit(s_a)
+        s_y = quantize_scale_8bit(s_y)
+    codes = np.clip(np.round(w * s_w), -q.qmax(policy.w_bits), q.qmax(policy.w_bits))
+    if policy.w_bits == 4:
+        assert k_in % 2 == 0, "int4 packing needs even K"
+        w_packed = np.asarray(
+            packing.pack_int4_planar(jnp.asarray(codes.astype(np.int8)), axis=0)
+        )
+    else:
+        w_packed = codes.astype(np.int8)
+    if b is not None:
+        bias_i = np.round(np.asarray(b, np.float64) * (s_a * s_w)).astype(np.int64)
+        bias_i = np.clip(bias_i, -(2**31 - 1), 2**31 - 1).astype(np.int32)
+    else:
+        bias_i = np.zeros(w.shape[1], np.int32)
+    s_f = s_y / (s_a * s_w)
+    M, shift = fxp.quantize_multiplier(s_f)
+    return FoldedLinear(
+        w_packed=jnp.asarray(w_packed),
+        bias_i=jnp.asarray(bias_i),
+        M=jnp.asarray(M, jnp.int32),
+        shift=jnp.asarray(shift, jnp.int32),
+        w_bits=policy.w_bits,
+    )
+
+
+def integer_linear_ref(x_i: jax.Array, f: FoldedLinear) -> jax.Array:
+    """Pure-jnp integer forward (oracle; the Pallas kernel must match exactly).
+
+    x_i: int8 codes (..., K).  Returns int8 codes (..., N) on the s_y grid.
+    """
+    if f.w_bits == 4:
+        w_codes = packing.unpack_int4_planar(f.w_packed, axis=0)  # int8 (K, N)
+    else:
+        w_codes = f.w_packed
+    acc = jax.lax.dot_general(
+        x_i.astype(jnp.int8),
+        w_codes.astype(jnp.int8),
+        (((x_i.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + f.bias_i.astype(jnp.int32)
+    return fxp.requantize(acc, f.M, f.shift, bits=8)

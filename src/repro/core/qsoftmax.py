@@ -1,0 +1,97 @@
+"""LUT-based fully-quantized softmax — paper §III-B "Softmax Core".
+
+The paper's trick: softmax is shift-invariant, so subtract the row max first;
+then exp(x - max) is always in (0, 1], and because the OUTPUT of exp is
+quantized to 8 bits, a 256-entry lookup table covers the whole function.
+
+Fixed-point semantics (shared bit-exactly by kernels/ref.py, the Pallas kernel
+and this module):
+
+  input   x_I : int32 codes with real value x = x_I / s_x
+  1. m    = rowmax(x_I)
+  2. d    = m - x_I                       (>= 0, int32)
+  3. idx  = clamp(rescale(d, M_idx, sh),  0, 255)    # fixed-point d/s_x/DELTA
+  4. num  = LUT[idx]                      (codes of exp(-idx*DELTA), Q0.8)
+  5. den  = sum(num)                      (int32; >= 255 since max -> LUT[0])
+  6. p_I  = clamp((num << 7 + den/2) // den, 0, 127)  (int8, scale 128)
+
+LUT construction: LUT[i] = round(exp(-i*DELTA) * 255) with
+DELTA = T / 255, T = 16*ln2 (so the table spans 16 octaves; entries underflow
+to 0 well before the end).  LUT[255] is forced to 0 so that a saturated index
+doubles as the attention-mask value: masked logits add -2^30 to d's input,
+clamp to index 255, contribute exactly zero probability.
+
+TPU note: the paper stores probabilities as 8-bit fixed point; the MXU's
+integer dot is signed-8-bit, so the output code here is Q1.7 (scale 128,
+max code 127) — one bit spent on sign, documented in DESIGN.md.  The P@V
+accumulator then stays far inside int32 even at 500k context because the
+codes sum to ~128 per row (probabilities sum to 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+
+LUT_SIZE = 256
+LUT_T = math.log(1024.0)            # table domain: exp(-t), t in [0, ln 1024];
+                                    # entries past t ~ ln(510) quantize to 0, so
+                                    # the whole 8-bit output range is covered with
+                                    # the finest index step that still reaches 0
+
+LUT_DELTA = LUT_T / (LUT_SIZE - 1)  # index step in real units
+MASK_OFFSET = 1 << 30               # subtracted from masked logit codes
+
+
+def make_exp_lut() -> np.ndarray:
+    """(256,) int32 table of round(exp(-i*DELTA)*255); LUT[255] forced to 0."""
+    i = np.arange(LUT_SIZE, dtype=np.float64)
+    vals = np.round(np.exp(-i * LUT_DELTA) * 255.0).astype(np.int32)
+    vals[-1] = 0
+    return vals
+
+
+def index_multiplier(s_x: float) -> Tuple[int, int]:
+    """Fixed-point (M, shift) for idx = d / (s_x * DELTA).
+
+    d is in code units (real = d / s_x); dividing by DELTA converts to table
+    steps.  s_x is the scale of the softmax INPUT (logits), typically
+    s_q * s_k / sqrt(head_dim) folded together.
+    """
+    return fxp.quantize_multiplier(1.0 / (s_x * LUT_DELTA))
+
+
+def quant_softmax(
+    x_int: jax.Array,
+    M_idx: jax.Array,
+    shift_idx: jax.Array,
+    lut: jax.Array,
+    mask: jax.Array | None = None,
+    axis: int = -1,
+) -> jax.Array:
+    """Reference (pure-jnp) fully-quantized softmax.  Returns uint8-coded
+    probabilities (stored int32 for downstream matmul convenience), scale 256.
+
+    ``mask``: optional boolean, True = attend, False = masked out.
+    """
+    x_int = x_int.astype(jnp.int32)
+    if mask is not None:
+        # masked positions become "infinitely far below the max"
+        x_int = jnp.where(mask, x_int, x_int - MASK_OFFSET)
+    m = jnp.max(x_int, axis=axis, keepdims=True)
+    d = (m - x_int).astype(jnp.int32)             # >= 0
+    idx = fxp.rescale(d, M_idx, shift_idx, out_bits=9)
+    idx = jnp.clip(idx, 0, LUT_SIZE - 1)
+    num = jnp.take(lut.astype(jnp.int32), idx)    # Q0.8 codes
+    den = jnp.sum(num, axis=axis, keepdims=True)
+    den = jnp.maximum(den, 1)
+    p = (num * 128 + den // 2) // den
+    return jnp.clip(p, 0, 127).astype(jnp.int8)
+
+
+SOFTMAX_OUT_SCALE = 128.0  # p_real = p_I / 128

@@ -1,0 +1,127 @@
+"""Symmetric linear quantization — the FQ-BERT scheme (paper Eq. 1-3).
+
+The paper's quantizer, for k-bit symmetric quantization of a tensor x:
+
+    x_c = clamp(x, MIN, MAX)            MIN = -MAX (symmetric), tuned in QAT
+    s   = (2^(k-1) - 1) / MAX           "scale" multiplies REAL -> INT
+    x_I = round(x_c * s)                integer code
+    x_q = x_I / s                       dequantized (fake-quant) value
+
+Weights use MAX = max|W| (Eq. 2); activations use an EMA of max|A| collected
+during training (Eq. 3). Everything here is pure JAX and differentiable via a
+straight-through estimator so the same code serves QAT and calibration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+def qmax(bits: int) -> int:
+    """Largest positive code of a symmetric k-bit quantizer: 2^(k-1) - 1."""
+    return (1 << (bits - 1)) - 1
+
+
+def storage_dtype(bits: int):
+    """Storage dtype for k-bit codes (4-bit rides sign-extended in int8;
+    nibble packing lives in packing.py)."""
+    if bits <= 8:
+        return jnp.int8
+    if bits <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+def compute_scale(max_abs: jax.Array, bits: int) -> jax.Array:
+    """Paper Eq. 2/3: s = (2^(k-1)-1) / MAX.  REAL * s -> code."""
+    max_abs = jnp.maximum(max_abs, 1e-8)  # guard all-zero tensors
+    return qmax(bits) / max_abs
+
+
+def quantize(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """x -> integer codes (round-to-nearest-even, clamped to symmetric range)."""
+    q = jnp.clip(jnp.round(x * scale), -qmax(bits), qmax(bits))
+    return q.astype(storage_dtype(bits))
+
+
+def dequantize(x_int: jax.Array, scale: jax.Array) -> jax.Array:
+    return x_int.astype(jnp.float32) / scale
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(x: jax.Array, max_abs: jax.Array, bits: int) -> jax.Array:
+    """Fake quantization with a straight-through estimator (QAT forward).
+
+    Matches the integer path bit-for-bit: fake_quant(x) == dequantize(quantize(x)).
+    Gradients flow straight through the round; the clamp DOES gate gradients
+    (values outside [MIN, MAX] get zero grad), which is what lets the clip
+    thresholds train — the paper notes MIN/MAX "need to be carefully tuned".
+    """
+    max_abs = jnp.maximum(jnp.asarray(max_abs, x.dtype), 1e-8)
+    s = qmax(bits) / max_abs
+    x_c = jnp.clip(x, -max_abs, max_abs)
+    return _ste_round(x_c * s) / s
+
+
+def per_tensor_max(x: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(x))
+
+
+def per_channel_max(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Beyond-paper option: per-output-channel MAX (paper is per-tensor)."""
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    return jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class EMACalibrator:
+    """Paper Eq. 3 — exponential moving average of max|A| for activation scales.
+
+    Functional: state is a scalar (or per-channel) array threaded by the caller.
+    """
+
+    decay: float = 0.99
+
+    def init(self, shape=()) -> jax.Array:
+        return jnp.zeros(shape, jnp.float32)
+
+    def update(self, ema: jax.Array, x: jax.Array) -> jax.Array:
+        batch_max = per_tensor_max(x).astype(jnp.float32)
+        # First observation (ema == 0) adopts the batch statistic directly.
+        new = self.decay * ema + (1.0 - self.decay) * batch_max
+        return jnp.where(ema == 0.0, batch_max, new)
+
+
+def quantize_bias(bias: jax.Array, s_a: jax.Array, s_w: jax.Array) -> jax.Array:
+    """Paper Eq. 4: bias_I = round(bias * s_bias), s_bias = s_a * s_w -> int32."""
+    s_bias = s_a * s_w
+    return jnp.round(bias * s_bias).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Activation-statistics pytree helpers.  QAT threads a dict of EMA maxima
+# (one scalar per quantized activation site) through the model; these helpers
+# keep that bookkeeping in one place.
+# ---------------------------------------------------------------------------
+
+def ema_tree_update(ema_tree: dict, obs_tree: dict, decay: float = 0.99) -> dict:
+    cal = EMACalibrator(decay)
+    return jax.tree.map(lambda e, o: cal.update(e, o), ema_tree, obs_tree)

@@ -1,0 +1,130 @@
+"""Public jit'd wrappers over the Pallas kernels, with backend dispatch.
+
+Backends (env ``REPRO_KERNELS`` or per-call override):
+  * ``pallas``    — compiled Pallas (the TPU target).
+  * ``interpret`` — Pallas interpret mode (CPU correctness; used by tests).
+  * ``ref``       — pure-jnp oracles from ``kernels/ref.py`` (identical
+                    integer semantics; what the dry-run lowers on CPU so
+                    cost_analysis reflects the real algorithm, not the
+                    interpreter).
+  * ``auto``      — pallas on TPU, ref elsewhere (default).
+
+Wrappers flatten leading dims, pad rows to tile multiples, and unpad —
+model code never sees tiling constraints.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlayernorm import QLNParams
+from repro.core.qlinear import FoldedLinear
+from repro.core.qsoftmax import MASK_OFFSET
+from repro.kernels import ref as _ref
+from repro.kernels import int4_matmul as _mm
+from repro.kernels import quant_softmax as _sm
+from repro.kernels import quant_layernorm as _ln
+from repro.kernels import flash_qattention as _fa
+
+
+def backend(override: Optional[str] = None) -> str:
+    b = override or os.environ.get("REPRO_KERNELS", "auto")
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return b
+
+
+def _pad_rows(x: jax.Array, mult: int):
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def linear_w4a8(x_i8: jax.Array, f: FoldedLinear, *, impl: Optional[str] = None):
+    """y_i8 = requant(x_i8 @ unpack(W4) + b).  x: int8 (..., K) -> (..., N)."""
+    lead = x_i8.shape[:-1]
+    k = x_i8.shape[-1]
+    x2 = x_i8.reshape(-1, k)
+    b = backend(impl)
+    if b == "ref" or f.w_bits != 4:
+        if f.w_bits == 4:
+            y = _ref.int4_matmul_ref(x2, f.w_packed, f.bias_i, f.M, f.shift)
+        else:
+            y = _ref.int8_bitsplit_matmul_ref(x2, f.w_packed, f.bias_i, f.M, f.shift)
+        return y.reshape(*lead, -1)
+    x2p, m = _pad_rows(x2, 8)
+    y = _mm.int4_matmul(x2p, f.w_packed, f.bias_i, f.M, f.shift,
+                        interpret=(b == "interpret"))
+    return y[:m].reshape(*lead, -1)
+
+
+def linear_w8a8_bitsplit(x_i8, w_i8, bias_i, M, shift, *, impl=None):
+    """8x8 matmul realized as two 8x4 passes (BIM Type-A)."""
+    lead = x_i8.shape[:-1]
+    x2 = x_i8.reshape(-1, x_i8.shape[-1])
+    b = backend(impl)
+    if b == "ref":
+        y = _ref.int8_bitsplit_matmul_ref(x2, w_i8, bias_i, M, shift)
+        return y.reshape(*lead, -1)
+    x2p, m = _pad_rows(x2, 8)
+    y = _mm.int8_bitsplit_matmul(x2p, w_i8, bias_i, M, shift,
+                                 interpret=(b == "interpret"))
+    return y[:m].reshape(*lead, -1)
+
+
+def softmax_q(x_int, M_idx, shift_idx, lut, mask=None, *, impl=None):
+    """Quantized softmax over the last axis.  x_int: int32 codes."""
+    b = backend(impl)
+    if b == "ref":
+        return _ref.quant_softmax_ref(x_int, M_idx, shift_idx, lut, mask=mask)
+    if mask is not None:
+        x_int = jnp.where(mask, x_int, x_int - MASK_OFFSET)
+    lead = x_int.shape[:-1]
+    s = x_int.shape[-1]
+    x2 = x_int.reshape(-1, s)
+    x2p, m = _pad_rows(x2, 8)
+    y = _sm.quant_softmax(x2p, M_idx, shift_idx, lut, interpret=(b == "interpret"))
+    return y[:m].reshape(*lead, s)
+
+
+def layernorm_q(x_i8, p: QLNParams, *, eps_codes: int = 1, impl=None):
+    b = backend(impl)
+    if b == "ref":
+        return _ref.quant_layernorm_ref(x_i8, p, eps_codes)
+    lead = x_i8.shape[:-1]
+    n = x_i8.shape[-1]
+    x2 = x_i8.reshape(-1, n)
+    x2p, m = _pad_rows(x2, 8)
+    y = _ln.quant_layernorm(
+        x2p, p.gamma_i, p.beta_aligned, p.M_out, p.shift_out,
+        subtract_mean=p.subtract_mean, eps_codes=eps_codes,
+        interpret=(b == "interpret"))
+    return y[:m].reshape(*lead, n)
+
+
+def attention_q(
+    q_i8, k_i8, v_i8, M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+    *, causal: bool = True, q_offset: int = 0, impl=None,
+):
+    """Quantized attention, (B, H, Sq, D) x (B, Hkv, Skv, D) -> (B, H, Sq, D).
+
+    ref backend = paper-style row softmax (exact); pallas = online flash.
+    """
+    b = backend(impl)
+    bsz = q_i8.shape[0]
+
+    if b == "ref":
+        fn = lambda qq, kk, vv: _ref.qattention_ref(
+            qq, kk, vv, M_idx, shift_idx, lut_q7, out_scale,
+            causal=causal, q_offset=q_offset)
+        return jax.vmap(fn)(q_i8, k_i8, v_i8)
+    assert causal, "flash kernel is causal-only; BERT uses softmax_q"
+    fn = lambda qq, kk, vv: _fa.flash_qattention(
+        qq, kk, vv, M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+        q_offset=q_offset, interpret=(b == "interpret"))
+    return jax.vmap(fn)(q_i8, k_i8, v_i8)

@@ -1,0 +1,75 @@
+"""Integer LayerNorm Pallas kernel — the paper's 3-stage "LN Core" on the VPU.
+
+Stage 1 (row sum -> mean), stage 2 (centered sum of squares -> variance) and
+stage 3 (integer Newton rsqrt, gamma multiply, aligned beta add, fixed-point
+requantize) run per row-block, all int32.  Bit-identical to
+``repro.core.qlayernorm.quant_layernorm``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import fixedpoint as fxp
+
+
+def _ln_kernel(sub_mean: bool, eps_codes: int,
+               x_ref, g_ref, b_ref, m_ref, s_ref, o_ref):
+    xi = x_ref[...].astype(jnp.int32)
+    n = xi.shape[-1]
+    if sub_mean:
+        ssum = jnp.sum(xi, axis=-1, keepdims=True)
+        half = n // 2
+        mean = jnp.where(ssum >= 0, (ssum + half) // n, -((-ssum + half) // n))
+        c = xi - mean
+    else:
+        c = xi
+    ss = jnp.sum(c * c, axis=-1, keepdims=True)
+    half = n // 2
+    var = jnp.where(ss >= 0, (ss + half) // n, 0)
+    var = jnp.maximum(var, eps_codes)
+    y_m, s_e = fxp.rsqrt_mantexp(var)
+    n_q = fxp._rshift_round(c * y_m, s_e + 1)
+    acc = n_q * g_ref[...].astype(jnp.int32) + b_ref[...].astype(jnp.int32)
+    y = fxp.rescale(acc, m_ref[0], s_ref[0])
+    o_ref[...] = jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("subtract_mean", "eps_codes",
+                                              "block_rows", "interpret"))
+def quant_layernorm(
+    x_i8: jax.Array,        # int8 (R, N)
+    gamma_i: jax.Array,     # int8 (N,)
+    beta_aligned: jax.Array,  # int32 (N,)
+    M_out: jax.Array,
+    shift_out: jax.Array,
+    *,
+    subtract_mean: bool = True,
+    eps_codes: int = 1,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    r, n = x_i8.shape
+    br = min(block_rows, r)
+    assert r % br == 0
+    kernel = functools.partial(_ln_kernel, subtract_mean, eps_codes)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.int8),
+        interpret=interpret,
+    )(x_i8, gamma_i, beta_aligned,
+      jnp.asarray(M_out, jnp.int32).reshape(1),
+      jnp.asarray(shift_out, jnp.int32).reshape(1))

@@ -1,0 +1,70 @@
+"""LUT softmax Pallas kernel — the paper's "Softmax Core" on the TPU VPU.
+
+One grid step owns a block of rows held fully in VMEM.  The 256-entry exp
+table is realized MXU/VPU-natively as an equality-select against an iota —
+the systolic-array idiom for a small LUT (a gather would serialize on TPU).
+All arithmetic is int32; semantics are bit-identical to
+``repro.core.qsoftmax.quant_softmax`` (tests assert exact equality).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import fixedpoint as fxp
+from repro.core.qsoftmax import LUT_SIZE
+
+
+def lut_lookup(idx: jax.Array, lut: jax.Array) -> jax.Array:
+    """TPU-native 256-entry LUT: one-hot select-and-sum (no gather).
+
+    idx: int32 (..., n) in [0, 255]; lut: (256,) int32.
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, (*idx.shape, LUT_SIZE), idx.ndim)
+    onehot = (idx[..., None] == iota)
+    return jnp.sum(jnp.where(onehot, lut, 0), axis=-1)
+
+
+def _softmax_kernel(x_ref, lut_ref, m_ref, s_ref, o_ref):
+    x = x_ref[...].astype(jnp.int32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    d = m - x
+    idx = jnp.clip(fxp.rescale(d, m_ref[0], s_ref[0], out_bits=9), 0, LUT_SIZE - 1)
+    num = lut_lookup(idx, lut_ref[...].astype(jnp.int32))
+    den = jnp.maximum(jnp.sum(num, axis=-1, keepdims=True), 1)
+    p = (num * 128 + den // 2) // den
+    o_ref[...] = jnp.clip(p, 0, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quant_softmax(
+    x_int: jax.Array,   # int32 (R, S) pre-masked logit codes
+    M_idx: jax.Array,
+    shift_idx: jax.Array,
+    lut: jax.Array,     # (256,) int32
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    r, s = x_int.shape
+    br = min(block_rows, r)
+    assert r % br == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, s), lambda i: (i, 0)),
+            pl.BlockSpec((LUT_SIZE,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((br, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, s), jnp.int8),
+        interpret=interpret,
+    )(x_int, lut,
+      jnp.asarray(M_idx, jnp.int32).reshape(1),
+      jnp.asarray(shift_idx, jnp.int32).reshape(1))

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Integer kernels must match these BIT-EXACTLY in interpret mode (tests assert
+array equality, not allclose).  The flash attention kernel is block-online and
+carries its cross-block state in fp32 (see DESIGN.md), so it is compared to
+``qattention_ref`` with a small LSB tolerance — and bit-exactly when a single
+KV block covers the row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+from repro.core import packing
+from repro.core import qlayernorm as qln
+from repro.core import qsoftmax as qs
+
+
+def int4_matmul_ref(
+    x_i8: jax.Array,      # int8 (M, K)
+    w_packed: jax.Array,  # uint8 (K//2, N), K-planar nibble packing
+    bias_i32: jax.Array,  # int32 (N,)
+    M_q: jax.Array,
+    shift_q: jax.Array,
+) -> jax.Array:
+    """W4A8 integer matmul + bias + fixed-point requantize -> int8 (M, N)."""
+    w = packing.unpack_int4_planar(w_packed, axis=0).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        x_i8.astype(jnp.int8), w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + bias_i32.astype(jnp.int32)
+    return fxp.requantize(acc, M_q, shift_q, bits=8)
+
+
+def int8_bitsplit_matmul_ref(
+    x_i8: jax.Array,   # int8 (M, K)
+    w_i8: jax.Array,   # int8 (K, N) full 8-bit codes
+    bias_i32: jax.Array,
+    M_q: jax.Array,
+    shift_q: jax.Array,
+) -> jax.Array:
+    """8x8 product via two 8x4 passes + shift-add — the BIM Type-A identity.
+
+    w = (w >> 4) * 16 + (w & 15): hi is signed int4, lo unsigned 4-bit.
+    Mathematically identical to a direct int8 dot; computed the bit-split way
+    so the kernel and oracle share the exact accumulation order budget.
+    """
+    w32 = w_i8.astype(jnp.int32)
+    hi = (w32 >> 4).astype(jnp.int8)          # arithmetic shift: signed high nibble
+    lo = (w32 & 15).astype(jnp.int8)          # unsigned low nibble, fits int8
+    x = x_i8.astype(jnp.int8)
+    dn = (((1,), (0,)), ((), ()))
+    acc_hi = jax.lax.dot_general(x, hi, dn, preferred_element_type=jnp.int32)
+    acc_lo = jax.lax.dot_general(x, lo, dn, preferred_element_type=jnp.int32)
+    acc = (acc_hi << 4) + acc_lo + bias_i32.astype(jnp.int32)
+    return fxp.requantize(acc, M_q, shift_q, bits=8)
+
+
+def quant_softmax_ref(x_int, M_idx, shift_idx, lut, mask=None, axis=-1):
+    return qs.quant_softmax(x_int, M_idx, shift_idx, lut, mask=mask, axis=axis)
+
+
+def quant_layernorm_ref(x_int, p: qln.QLNParams, eps_codes: int = 1):
+    return qln.quant_layernorm(x_int, p, eps_codes)
+
+
+def qattention_ref(
+    q_i8: jax.Array,    # int8 (H, Sq, D)
+    k_i8: jax.Array,    # int8 (Hkv, Skv, D)
+    v_i8: jax.Array,    # int8 (Hkv, Skv, D)
+    M_idx: jax.Array,   # LUT index multiplier for (max - s) -> table steps
+    shift_idx: jax.Array,
+    lut: jax.Array,     # (256,) int32, Q0.7 codes (flash-compatible table)
+    out_scale: jax.Array,  # fp32: s_o / s_v  (epilogue projection to out grid)
+    causal: bool = True,
+    q_offset: int = 0,  # absolute position of q row 0 (decode: cache length)
+) -> jax.Array:
+    """Row-wise fully-quantized attention oracle (paper-style, non-flash).
+
+    Integer datapath: int8 QK^T -> int32 scores -> LUT numerators (Q0.7) ->
+    integer P (codes sum ~127 per row) -> int32 P@V; the final division and
+    output projection are the fp32 epilogue shared with the flash kernel.
+    """
+    h, sq, d = q_i8.shape
+    hkv = k_i8.shape[0]
+    group = h // hkv
+    k_g = jnp.repeat(k_i8, group, axis=0)
+    v_g = jnp.repeat(v_i8, group, axis=0)
+    dn = (((2,), (2,)), ((0,), (0,)))
+    s = jax.lax.dot_general(q_i8, k_g, dn, preferred_element_type=jnp.int32)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(k_i8.shape[1])[None, :]
+        s = jnp.where((kpos <= qpos)[None], s, s - qs.MASK_OFFSET)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    dgap = (m - s).astype(jnp.int32)
+    idx = jnp.clip(fxp.rescale(dgap, M_idx, shift_idx, out_bits=9), 0, 255)
+    num = jnp.take(lut.astype(jnp.int32), idx)           # Q0.7 codes, <= 127
+    den = jnp.maximum(jnp.sum(num, axis=-1, keepdims=True), 1)
+    pv = jax.lax.dot_general(
+        num.astype(jnp.int8), v_g.astype(jnp.int8),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )
+    o = pv.astype(jnp.float32) / den.astype(jnp.float32)
+    y = jnp.round(o * out_scale)
+    return jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+def make_exp_lut_q7():
+    """Q0.7 exp table for the attention kernels (max code 127, fits int8)."""
+    import numpy as np
+
+    from repro.core.qsoftmax import LUT_DELTA, LUT_SIZE
+
+    i = np.arange(LUT_SIZE, dtype=np.float64)
+    vals = np.round(np.exp(-i * LUT_DELTA) * 127.0).astype(np.int32)
+    vals[-1] = 0
+    return vals

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+
+Outputs one JSON per cell under results/dryrun/.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, get_config, cell_is_runnable, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.sharding import partition as Pt
+from repro.train import steps as St
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend == "audio_codebooks":
+            return {"tokens": jax.ShapeDtypeStruct((b, cfg.n_codebooks, s), i32)}
+        if cfg.frontend == "vision_stub":
+            n_img = 256  # stub: 256 patch embeddings per example
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s - n_img), i32),
+                "extra_embeds": jax.ShapeDtypeStruct((b, n_img, cfg.d_model),
+                                                     cfg.dtype),
+                "pos3": jax.ShapeDtypeStruct((b, s, 3), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.frontend == "audio_codebooks":
+            return {"tokens": jax.ShapeDtypeStruct((b, cfg.n_codebooks, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a cache of seq_len
+    if cfg.frontend == "audio_codebooks":
+        return {"tokens": jax.ShapeDtypeStruct((b, cfg.n_codebooks, 1), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes extraction from lowered/compiled HLO
+# ---------------------------------------------------------------------------
+
+_DT_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+             "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+             "f64": 8}
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _tensor_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str):
+    """Sum result sizes of every collective op in (post-SPMD) HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", ls)
+        if m:
+            shape_str, op = m.groups()
+            out[op]["count"] += 1
+            out[op]["bytes"] += _tensor_bytes(shape_str)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell runners
+# ---------------------------------------------------------------------------
+
+def lower_train(cfg, shape, mesh, fsdp=True, accum_steps=4):
+    opt_cfg = AdamWConfig(quantize_moments=True)
+    batch = input_specs(cfg, shape)
+    jitted, state_shard, batch_shard = St.jit_train_step(
+        cfg, mesh, opt_cfg, batch, fsdp=fsdp, accum_steps=accum_steps)
+    state_shape = jax.eval_shape(
+        lambda k: St.init_train_state(cfg, k, opt_cfg), jax.random.PRNGKey(0))
+    return jitted.lower(state_shape, batch)
+
+
+def lower_serve(cfg, shape, mesh):
+    from repro.models import fold as F
+    from repro.models import serve_int as S
+    from repro.models import transformer as T
+
+    opt = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+    amax_shape = jax.eval_shape(lambda: T.init_amax(cfg))
+    folded_shape = jax.eval_shape(lambda p, a: F.fold_params(cfg, p, a),
+                                  opt, amax_shape)
+    f_shard = Pt.make_param_shardings(mesh, folded_shape, mode="serve")
+    batch = input_specs(cfg, shape)
+    tok_shard = Pt.batch_sharding(mesh, batch["tokens"].ndim,
+                                  batch["tokens"].shape)
+
+    if shape.kind == "prefill":
+        def step(folded, tokens):
+            logits, _ = S.serve_forward(cfg, folded, tokens, mode="prefill")
+            return logits
+
+        jitted = jax.jit(step, in_shardings=(f_shard, tok_shard),
+                         out_shardings=tok_shard)
+        return jitted.lower(folded_shape, batch["tokens"])
+
+    cache_shape = jax.eval_shape(
+        lambda: S.init_cache(cfg, shape.global_batch, shape.seq_len))
+    c_shard = Pt.cache_sharding(mesh, cache_shape)
+
+    def step(folded, cache, tokens, pos):
+        logits, new_cache = S.serve_forward(
+            cfg, folded, tokens, cache=cache, pos_offset=pos, mode="decode")
+        return logits, new_cache
+
+    jitted = jax.jit(step,
+                     in_shardings=(f_shard, c_shard, tok_shard, None),
+                     out_shardings=(tok_shard, c_shard),
+                     donate_argnums=(1,))
+    return jitted.lower(folded_shape, cache_shape, batch["tokens"],
+                        jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=True,
+             save=True, cfg_overrides=None, tag=""):
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "chips": n_chips, "fsdp": fsdp, "tag": tag}
+    try:
+        Pt.set_mesh_ctx(mesh)
+        if shape.kind == "train":
+            lowered = lower_train(cfg, shape, mesh, fsdp=fsdp,
+                                  accum_steps=int(os.environ.get(
+                                      "REPRO_ACCUM", "4")))
+        else:
+            lowered = lower_serve(cfg, shape, mesh)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                              getattr(mem, "temp_size_in_bytes", 0)),
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "transcendentals")}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_stats(hlo)
+        # loop-aware (trip-count-scaled) costs — the roofline's real inputs
+        try:
+            sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+            from benchmarks import hlo_cost
+            hc = hlo_cost.analyze(hlo)
+            hc.pop("loop_report", None)
+            rec["hlo_cost"] = hc
+        except Exception as e:  # noqa: BLE001
+            rec["hlo_cost_error"] = str(e)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    finally:
+        Pt.set_mesh_ctx(None)
+    rec["total_s"] = round(time.time() - t0, 1)
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        mp = "multipod" if multi_pod else "pod"
+        suffix = f"-{tag}" if tag else ""
+        out = RESULTS / f"{arch}--{shape_name}--{mp}{suffix}.json"
+        out.write_text(json.dumps(rec, indent=1))
+    status = "OK " if rec["ok"] else "FAIL"
+    print(f"[{status}] {arch} x {shape_name} x {'2pod' if multi_pod else '1pod'}"
+          f" lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s"
+          + ("" if rec["ok"] else f"  {rec['error'][:200]}"), flush=True)
+    return rec
+
+
+ALL_ARCHS = [
+    "qwen2-moe-a2.7b", "mixtral-8x22b", "llama3-405b", "qwen3-4b", "yi-6b",
+    "stablelm-1.6b", "jamba-1.5-large-398b", "xlstm-1.3b", "qwen2-vl-2b",
+    "musicgen-medium",
+]
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"], default="off")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+    cells = []
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = ALL_SHAPES if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for sh in shapes:
+            if not cell_is_runnable(a, sh):
+                continue
+            for mp in pods:
+                cells.append((a, sh, mp))
+    n_fail = 0
+    for a, sh, mp in cells:
+        rec = run_cell(a, sh, mp, fsdp=not args.no_fsdp, tag=args.tag)
+        n_fail += 0 if rec["ok"] else 1
+    print(f"done: {len(cells) - n_fail}/{len(cells)} cells OK")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — 'pod' composes
+with 'data' for gradient reduction / batch sharding; XLA emits hierarchical
+collectives (reduce-scatter on ICI inside the pod, all-reduce across DCN).
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state — the dry-run sets XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever-fits mesh for CPU tests: (1, n_devices//model, model)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,72 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 50 --ckpt-dir /tmp/ck
+
+``--smoke`` uses the reduced same-family config (CPU-runnable); without it
+the full published config is used (needs a real TPU slice; the mesh comes
+from make_production_mesh or the host mesh fallback).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ShapeConfig, SHAPES
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainerConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--global-batch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--quant-moments", action="store_true")
+    ap.add_argument("--grad-compress", type=int, default=0)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = smoke_config(args.arch)
+    else:
+        cfg = get_config(args.arch)
+    if args.grad_compress:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, quant=dataclasses.replace(cfg.quant,
+                                           grad_compress_bits=args.grad_compress))
+    shape = SHAPES[args.shape]
+    if args.seq_len or args.global_batch:
+        shape = ShapeConfig("custom", args.seq_len or shape.seq_len,
+                            args.global_batch or shape.global_batch, "train")
+    if args.smoke and args.shape == "train_4k" and not args.seq_len:
+        shape = ShapeConfig("smoke", 128, min(8, len(jax.devices()) * 4), "train")
+
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+    opt_cfg = AdamWConfig(lr=args.lr, quantize_moments=args.quant_moments)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, accum_steps=args.accum)
+
+    def log(step, m):
+        print(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+              f"gnorm {m['grad_norm']:.3f} {m['step_s']*1e3:.0f} ms",
+              flush=True)
+
+    train(cfg, shape, mesh, opt_cfg, tcfg, fsdp=not args.smoke, log_fn=log)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""BERT-base (the paper's own model): bidirectional encoder + SST-2-style
+classification head, built on the same quantized transformer substrate.
+
+The paper's operating point: seq 128, batch 1, 12 layers, d=768 — config
+``bert-base`` with shape ``paper_128``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models import layers as L
+
+
+def init_bert_params(cfg: ModelConfig, key, n_classes: int = 2) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "backbone": T.init_params(cfg, k1),
+        "pooler": {"w": (jax.random.normal(k2, (d, d)) * 0.02).astype(cfg.dtype),
+                   "b": jnp.zeros((d,), cfg.dtype)},
+        "classifier": {"w": (jax.random.normal(k3, (d, n_classes)) * 0.02
+                             ).astype(cfg.dtype),
+                       "b": jnp.zeros((n_classes,), cfg.dtype)},
+    }
+
+
+def init_bert_amax(cfg: ModelConfig) -> Dict:
+    a = T.init_amax(cfg)
+    a["pool_in"] = jnp.zeros((), jnp.float32)
+    a["cls_in"] = jnp.zeros((), jnp.float32)
+    return a
+
+
+def bert_forward(
+    cfg: ModelConfig,
+    params: Dict,
+    amax: Dict,
+    tokens: jax.Array,                    # (B, S)
+    attn_mask: Optional[jax.Array] = None,  # (B, S) bool padding mask
+) -> Tuple[jax.Array, jax.Array, Dict, jax.Array]:
+    """Returns (cls_logits, mlm_logits, obs, aux)."""
+    b, s = tokens.shape
+    if attn_mask is None:
+        attn_mask = jnp.ones((b, s), bool)
+    mask4 = attn_mask[:, None, None, :] & jnp.ones((b, 1, s, 1), bool)
+    backbone_amax = {k: amax[k] for k in ("blocks", "embed_out", "head_in")}
+    mlm_logits, obs, aux = T.forward(
+        cfg, params["backbone"], backbone_amax, tokens, mask=mask4)
+    # [CLS] pooling + classifier (quantized linears, paper's task-specific head)
+    # NOTE: transformer.forward returns logits; for the pooled path we re-embed
+    # the final hidden via the obs-free helper below.
+    return mlm_logits, obs, aux
+
+
+def bert_classify(
+    cfg: ModelConfig,
+    params: Dict,
+    amax: Dict,
+    tokens: jax.Array,
+    attn_mask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Classification forward: pooled [CLS] -> tanh -> classifier."""
+    b, s = tokens.shape
+    if attn_mask is None:
+        attn_mask = jnp.ones((b, s), bool)
+    mask4 = attn_mask[:, None, None, :] & jnp.ones((b, 1, s, 1), bool)
+    backbone_amax = {k: amax[k] for k in ("blocks", "embed_out", "head_in")}
+    hidden, obs, aux = forward_hidden(cfg, params["backbone"], backbone_amax,
+                                      tokens, mask4)
+    policy = cfg.quant
+    cls = hidden[:, 0]
+    pooled, ob_p = L.qdense(cls, params["pooler"]["w"], params["pooler"]["b"],
+                            amax["pool_in"], policy)
+    pooled = jnp.tanh(pooled)
+    logits, ob_c = L.qdense(pooled, params["classifier"]["w"],
+                            params["classifier"]["b"], amax["cls_in"], policy)
+    obs = dict(obs)
+    obs["pool_in"] = ob_p
+    obs["cls_in"] = ob_c
+    return logits.astype(jnp.float32), obs, aux
+
+
+def forward_hidden(cfg, params, amax, tokens, mask):
+    """Backbone forward that returns final hidden states (pre-LM-head)."""
+    policy = cfg.quant
+    b, s = tokens.shape
+    x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+    if cfg.learned_pos:
+        x = x + params["embed"]["pos"][None, :s]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, obs_embed = L.fake_quant_act(x, amax["embed_out"], policy.a_bits,
+                                    policy.quantize_wa)
+    kinds = T.slot_kinds(cfg)
+
+    def body(carry, xs):
+        xc, aux_sum = carry
+        p_rep, a_rep = xs
+        obs_rep = {}
+        for i, (mixer, ffn) in enumerate(kinds):
+            xc, o, aux = T._apply_slot(cfg, mixer, ffn, xc, p_rep[f"slot{i}"],
+                                       a_rep[f"slot{i}"], pos, mask)
+            obs_rep[f"slot{i}"] = o
+            aux_sum = aux_sum + aux
+        return (xc, aux_sum), obs_rep
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), obs_blocks = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], amax["blocks"]))
+    x = L.qnorm(x, params["final_norm"], policy, cfg.norm_type)
+    x, obs_head = L.fake_quant_act(x, amax["head_in"], policy.a_bits,
+                                   policy.quantize_wa)
+    obs = {"blocks": obs_blocks, "embed_out": obs_embed, "head_in": obs_head}
+    return x, obs, aux

@@ -1,0 +1,292 @@
+"""Fold trained QAT params + EMA activation stats into the integer serving
+form (paper Eq. 4/5): packed-int4 weights, int32 biases, 32-bit fixed-point
+requantization multipliers, integer LN constants, LUT index multipliers.
+
+Everything here is **traceable jnp** so ``jax.eval_shape(fold_params, ...)``
+yields the serving param ShapeDtypeStructs for the dry-run without ever
+materializing a tensor, and the same code runs for real at deployment.
+
+Grid/scale bookkeeping: every quantized activation site s has scale
+``s(site) = 127 / amax[site]``; a tensor's int8 codes live on exactly one
+site grid at a time, and every grid change is an explicit fixed-point
+rescale folded here as (M, shift).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import fixedpoint as fxp
+from repro.core import packing
+from repro.core import quant as q
+from repro.core.policy import QuantPolicy
+from repro.core.qsoftmax import LUT_DELTA
+from repro.models import transformer as T
+from repro.models import mamba as Mb
+
+
+def _scale8(s, policy: QuantPolicy):
+    """Traceable 8-significant-bit scale quantization (Table II 'scale')."""
+    if not policy.quantize_scale:
+        return s
+    e = jnp.floor(jnp.log2(jnp.maximum(s, 1e-30))) - 7.0
+    return jnp.round(s * jnp.exp2(-e)) * jnp.exp2(e)
+
+
+def site_scale(amax_val, policy: QuantPolicy):
+    s = q.qmax(policy.a_bits) / jnp.maximum(amax_val.astype(jnp.float32), 1e-8)
+    return _scale8(s, policy)
+
+
+def fold_linear_t(w, b, s_a, s_y, policy: QuantPolicy) -> Dict:
+    """Traceable fold of y = x@w + b into the integer form.
+
+    w_bits == 4: nibble-planar packed (the paper's FQ-BERT).
+    w_bits == 8: plain int8 codes (the Q8BERT comparison point); the serving
+    path then uses the BIM bit-split 8x8 kernel."""
+    w = w.astype(jnp.float32)
+    s_w = _scale8(q.qmax(policy.w_bits) / jnp.maximum(q.per_tensor_max(w), 1e-8),
+                  policy)
+    codes = jnp.clip(jnp.round(w * s_w), -q.qmax(policy.w_bits),
+                     q.qmax(policy.w_bits)).astype(jnp.int8)
+    if policy.w_bits == 8:
+        w_packed = codes
+    else:
+        w_packed = packing.pack_int4_planar(codes, axis=0)
+    bias = jnp.zeros((w.shape[1],), jnp.float32) if b is None else b.astype(jnp.float32)
+    bias_i = jnp.clip(jnp.round(bias * (s_a * s_w)), -(2.0**31 - 1), 2.0**31 - 1
+                      ).astype(jnp.int32)
+    M, sh = fxp.quantize_multiplier_array(s_y / (s_a * s_w))
+    return {"w": w_packed, "b": bias_i, "M": M, "sh": sh}
+
+
+def fold_linear_weightonly(w, b, policy: QuantPolicy) -> Dict:
+    """W4-only fold (SSM inner projections: fp activations, int4 weights)."""
+    w = w.astype(jnp.float32)
+    s_w = q.qmax(policy.w_bits) / jnp.maximum(q.per_tensor_max(w), 1e-8)
+    codes = jnp.clip(jnp.round(w * s_w), -q.qmax(policy.w_bits),
+                     q.qmax(policy.w_bits)).astype(jnp.int8)
+    out = {"w": packing.pack_int4_planar(codes, axis=0), "inv_s_w": 1.0 / s_w}
+    if b is not None:
+        out["b"] = b.astype(jnp.float32)
+    return out
+
+
+def fold_norm_t(p_norm, s_y, norm_type: str) -> Dict:
+    gamma = p_norm["gamma"].astype(jnp.float32)
+    beta = p_norm.get("beta")
+    s_g = q.qmax(8) / jnp.maximum(q.per_tensor_max(gamma), 1e-8)
+    gamma_i = jnp.clip(jnp.round(gamma * s_g), -127, 127).astype(jnp.int8)
+    acc_scale = float(1 << 14) * s_g
+    if beta is not None:
+        beta_aligned = jnp.clip(jnp.round(beta.astype(jnp.float32) * acc_scale),
+                                -(2.0**30), 2.0**30).astype(jnp.int32)
+    else:
+        beta_aligned = jnp.zeros_like(gamma_i, dtype=jnp.int32)
+    M, sh = fxp.quantize_multiplier_array(s_y / acc_scale)
+    # subtract_mean is cfg-static (norm_type), NOT stored here: bools can't
+    # ride through the vmapped fold.
+    return {"gamma_i": gamma_i, "beta_al": beta_aligned, "M": M, "sh": sh}
+
+
+def fold_rescale(s_from, s_to) -> Dict:
+    M, sh = fxp.quantize_multiplier_array(s_to / s_from)
+    return {"M": M, "sh": sh}
+
+
+def make_silu_lut(s_in, s_out) -> jax.Array:
+    """int8 -> int8 elementwise LUT for SiLU (256 entries; the paper's LUT
+    idea applied to the activation function).  Traceable."""
+    codes = jnp.arange(-128, 128, dtype=jnp.float32)
+    x = codes / s_in
+    y = x * jax.nn.sigmoid(x)
+    return jnp.clip(jnp.round(y * s_out), -127, 127).astype(jnp.int8)
+
+
+def make_gelu_lut(s_in, s_out) -> jax.Array:
+    codes = jnp.arange(-128, 128, dtype=jnp.float32)
+    x = codes / s_in
+    y = 0.5 * x * (1 + jnp.tanh(math.sqrt(2 / math.pi) * (x + 0.044715 * x**3)))
+    return jnp.clip(jnp.round(y * s_out), -127, 127).astype(jnp.int8)
+
+
+def fold_slot(cfg: ModelConfig, mixer: str, ffn: str, p: Dict, a: Dict,
+              s_res_in) -> Dict:
+    """Fold one super-block slot.  ``s_res_in``: scale of the incoming
+    residual grid.  Returns (folded dict, s_res_out)."""
+    pol = cfg.quant
+    f: Dict = {}
+    s = lambda name: site_scale(a[name], pol)
+
+    if mixer == "attn":
+        s_in, s_q, s_k, s_v = s("attn_in"), s("q"), s("k"), s("v")
+        s_qp, s_kp = s("q_pre"), s("k_pre")
+        s_ctx, s_ra = s("attn_out_in"), s("resid_a")
+        f["ln1"] = fold_norm_t(p["norm1"], s_in, cfg.norm_type)
+        f["wq"] = fold_linear_t(p["attn"]["wq"], p["attn"].get("bq"), s_in, s_qp, pol)
+        f["wk"] = fold_linear_t(p["attn"]["wk"], p["attn"].get("bk"), s_in, s_kp, pol)
+        f["wv"] = fold_linear_t(p["attn"]["wv"], p["attn"].get("bv"), s_in, s_v, pol)
+        f["wo"] = fold_linear_t(p["attn"]["wo"], p["attn"].get("bo"), s_ctx, s_ra, pol)
+        s_logit = math.sqrt(cfg.hd) * s_q * s_k  # codes per real logit
+        M_idx, sh_idx = fxp.quantize_multiplier_array(1.0 / (s_logit * LUT_DELTA))
+        M_pv, sh_pv = fxp.quantize_multiplier_array(s_ctx / (128.0 * s_v))
+        f["attn_q"] = {
+            "M_idx": M_idx, "sh_idx": sh_idx,
+            "inv_s_logit": 1.0 / s_logit,
+            "out_scale": s_ctx / s_v,          # flash fp epilogue
+            "M_pv": M_pv, "sh_pv": sh_pv,      # decode integer P@V requant
+            "inv_s_qp": 1.0 / s_qp, "inv_s_kp": 1.0 / s_kp,  # rope island in
+            "s_q": s_q, "s_k": s_k,                          # rope island out
+        }
+        if cfg.qk_norm:
+            f["attn_q"]["qn"] = p["attn"]["qn"].astype(jnp.float32)
+            f["attn_q"]["kn"] = p["attn"]["kn"].astype(jnp.float32)
+        f["res_a"] = fold_rescale(s_res_in, s_ra)
+        s_res = s_ra
+    elif mixer == "mamba":
+        # weight-only int4; fp island inside (DESIGN.md §4)
+        s_ra = s("resid_a")
+        f["ln1"] = fold_norm_t(p["norm1"], s("mamba_in"), cfg.norm_type)
+        f["inv_s_in"] = 1.0 / s("mamba_in")
+        m = p["mixer"]
+        f["mx"] = {
+            "w_in": fold_linear_weightonly(m["w_in"], None, pol),
+            "w_x": fold_linear_weightonly(m["w_x"], None, pol),
+            "w_out": fold_linear_weightonly(m["w_out"], None, pol),
+            "conv_w": m["conv_w"].astype(jnp.float32),
+            "conv_b": m["conv_b"].astype(jnp.float32),
+            "w_dt": m["w_dt"].astype(jnp.float32),
+            "dt_bias": m["dt_bias"], "A_log": m["A_log"], "D": m["D"],
+        }
+        f["s_ra"] = s_ra
+        f["res_a"] = fold_rescale(s_res_in, s_ra)
+        s_res = s_ra
+    elif mixer in ("mlstm", "slstm"):
+        key = "mlstm_in" if mixer == "mlstm" else "slstm_in"
+        s_ra = s("resid_a")
+        f["ln1"] = fold_norm_t(p["norm1"], s(key), cfg.norm_type)
+        f["inv_s_in"] = 1.0 / s(key)
+        f["mx"] = jax.tree.map(lambda t: t.astype(jnp.float32)
+                               if t.dtype != jnp.float32 else t, p["mixer"])
+        f["mx"] = {k: (fold_linear_weightonly(v, None, pol)
+                       if k.startswith("w") and v.ndim == 2 and k not in
+                       ("w_ig", "w_fg", "w_og") else v)
+                   for k, v in f["mx"].items()}
+        f["s_ra"] = s_ra
+        f["res_a"] = fold_rescale(s_res_in, s_ra)
+        s_res = s_ra
+
+    if ffn == "dense":
+        s_mi, s_rm = s("mlp_in"), s("resid_m")
+        f["ln2"] = fold_norm_t(p["norm2"], s_mi, cfg.norm_type)
+        if cfg.act == "swiglu":
+            s_gp, s_g, s_u, s_h = s("g_pre"), s("g_out"), s("u_out"), s("h_in")
+            f["wg"] = fold_linear_t(p["mlp"]["wg"], None, s_mi, s_gp, pol)
+            f["wu"] = fold_linear_t(p["mlp"]["wu"], None, s_mi, s_u, pol)
+            f["silu_lut"] = make_silu_lut(s_gp, s_g)
+            f["prod"] = fold_rescale(s_g * s_u, s_h)   # (g_i*u_i) int16 -> s_h
+            f["wd"] = fold_linear_t(p["mlp"]["wd"], None, s_h, s_rm, pol)
+        else:
+            s_hp, s_g, s_h = s("h_pre"), s("g_out"), s("h_in")
+            f["w1"] = fold_linear_t(p["mlp"]["w1"], p["mlp"].get("b1"),
+                                    s_mi, s_hp, pol)
+            f["gelu_lut"] = make_gelu_lut(s_hp, s_g)
+            f["gelu_rescale"] = fold_rescale(s_g, s_h)
+            f["w2"] = fold_linear_t(p["mlp"]["w2"], p["mlp"].get("b2"),
+                                    s_h, s_rm, pol)
+        f["res_m"] = fold_rescale(s_res, s_rm)
+        s_res = s_rm
+    elif ffn == "moe":
+        s_mi = s("exp_in")
+        s_rm = s("resid_m")
+        f["ln2"] = fold_norm_t(p["norm2"], s_mi, cfg.norm_type)
+        f["router"] = p["moe"]["router"].astype(jnp.float32)
+        f["inv_s_mi"] = 1.0 / s_mi
+
+        def fold_expert_group(grp, pre):
+            s_g, s_u, s_h = s(f"{pre}_g"), s(f"{pre}_u"), s(f"{pre}_h")
+            fe = {}
+            fe["wg"] = jax.vmap(lambda w: fold_linear_t(w, None, s_mi, s_g, pol)
+                                )(grp["wg"])
+            fe["wu"] = jax.vmap(lambda w: fold_linear_t(w, None, s_mi, s_u, pol)
+                                )(grp["wu"])
+            fe["silu_lut"] = make_silu_lut(s_g, s_g)
+            fe["prod"] = fold_rescale(s_g * s_u, s_h)
+            fe["wd"] = jax.vmap(lambda w: fold_linear_t(w, None, s_h, 128.0, pol)
+                                )(grp["wd"])  # expert out on a fixed Q1.7-ish grid
+            fe["inv_s_out"] = 1.0 / 128.0
+            return fe
+
+        f["experts"] = fold_expert_group(p["moe"]["experts"], "exp")
+        if cfg.n_shared_experts:
+            f["shared"] = fold_expert_group(p["moe"]["shared"], "shr")
+        f["s_rm"] = s_rm
+        f["res_m"] = fold_rescale(s_res, s_rm)
+        s_res = s_rm
+    return f, s_res
+
+
+def fold_params(cfg: ModelConfig, params: Dict, amax: Dict) -> Dict:
+    """Whole-model fold.  Per-rep slot params are folded under vmap so the
+    result keeps the (n_reps, ...) stacked layout the serving scan consumes."""
+    pol = cfg.quant
+    kinds = T.slot_kinds(cfg)
+    s_emb = site_scale(amax["embed_out"], pol)
+    folded: Dict = {"embed": {}}
+    emb = params["embed"]["tokens"].astype(jnp.float32)
+    folded["embed"]["tokens_i8"] = jnp.clip(
+        jnp.round(emb * s_emb), -127, 127).astype(jnp.int8)
+    if "pos" in params["embed"]:
+        folded["embed"]["pos_i8"] = jnp.clip(jnp.round(
+            params["embed"]["pos"].astype(jnp.float32) * s_emb), -127, 127
+        ).astype(jnp.int8)
+    if "codebooks" in params["embed"]:
+        folded["embed"]["codebooks_i8"] = jnp.clip(jnp.round(
+            params["embed"]["codebooks"].astype(jnp.float32) * s_emb),
+            -127, 127).astype(jnp.int8)
+
+    # NOTE on residual grids with scan: the cross-rep residual grid must be
+    # rep-independent for a scanned stack, so the residual rescale of slot 0
+    # uses the PER-REP incoming grid only through its own folded constants.
+    # We chain grids within the super-block and close the loop by rescaling
+    # the block output back to the embed grid (one extra 8-bit requant per
+    # super-block; <=0.4% added rms error, measured in tests).
+    blocks = {}
+    s_head = site_scale(amax["head_in"], pol)
+
+    def fold_rep(p_rep, a_rep):
+        out = {}
+        s_res = s_emb
+        for i, (mixer, ffn) in enumerate(kinds):
+            out[f"slot{i}"], s_res = fold_slot(
+                cfg, mixer, ffn, p_rep[f"slot{i}"], a_rep[f"slot{i}"], s_res)
+        out["block_out_rescale"] = fold_rescale(s_res, s_emb)
+        return out
+
+    blocks = jax.vmap(fold_rep)(params["blocks"], amax["blocks"])
+    folded["blocks"] = blocks
+    folded["final_norm"] = fold_norm_t(params["final_norm"], s_head,
+                                       cfg.norm_type)
+    # LM head keeps the int32 accumulator (logits are consumed in fp32 by
+    # sampling/loss): W4 codes + a single dequant scale, no int8 requant.
+    def fold_head(w):
+        w = w.astype(jnp.float32)
+        s_w = q.qmax(pol.w_bits) / jnp.maximum(q.per_tensor_max(w), 1e-8)
+        codes = jnp.clip(jnp.round(w * s_w), -q.qmax(pol.w_bits),
+                         q.qmax(pol.w_bits)).astype(jnp.int8)
+        wq = codes if pol.w_bits == 8 else packing.pack_int4_planar(codes, axis=0)
+        return {"w": wq, "inv_acc": 1.0 / (s_head * s_w)}
+
+    if cfg.tied_embeddings:
+        folded["lm_head"] = fold_head(params["embed"]["tokens"].T)
+    elif cfg.n_lm_heads > 1:
+        folded["lm_head"] = jax.vmap(fold_head)(params["lm_head"])
+    else:
+        folded["lm_head"] = fold_head(params["lm_head"])
+    folded["s_embed"] = s_emb
+    folded["s_head"] = s_head
+    return folded

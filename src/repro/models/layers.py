@@ -1,0 +1,296 @@
+"""QAT building blocks shared by every architecture in the zoo.
+
+Conventions
+-----------
+* Pure functions; params are nested dicts of arrays; no framework.
+* Every activation that the integer path quantizes has a **site**: a scalar
+  EMA of max|activation| (paper Eq. 3) threaded in via ``amax[site]`` and an
+  observation returned via ``obs[site]`` so the trainer can update the EMA.
+* ``qdense`` fake-quantizes its input activation (8-bit) and weight (4-bit,
+  STE) — paper Eq. 1/2 — so the QAT graph numerically mirrors the integer
+  serving graph.
+* The quantized-softmax and quantized-LayerNorm *simulators* here reproduce
+  the integer pipeline's rounding through straight-through estimators, which
+  is exactly how the paper fine-tunes ("fine-tune the model with quantization
+  function").
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as q
+from repro.core.policy import QuantPolicy
+from repro.core.qsoftmax import LUT_DELTA
+from repro.core.quant import _ste_round as ste_round
+
+Obs = Dict[str, jax.Array]
+
+
+def _amax_or_obs(amax: jax.Array, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    ob = q.per_tensor_max(jax.lax.stop_gradient(x)).astype(jnp.float32)
+    return jnp.where(amax > 0, amax, ob), ob
+
+
+def fake_quant_act(x, amax, bits, enabled: bool):
+    a, ob = _amax_or_obs(amax, x)
+    if not enabled:
+        return x, ob
+    return q.fake_quant(x, a.astype(x.dtype), bits), ob
+
+
+def qdense(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    amax_in: jax.Array,
+    policy: QuantPolicy,
+) -> Tuple[jax.Array, jax.Array]:
+    """Quantization-aware linear; returns (y, observed max|x|)."""
+    x_q, ob = fake_quant_act(x, amax_in, policy.a_bits, policy.quantize_wa)
+    if policy.quantize_wa:
+        w_m = jax.lax.stop_gradient(
+            q.per_channel_max(w, axis=-1) if policy.per_channel_w
+            else q.per_tensor_max(w))
+        w = q.fake_quant(w, w_m.astype(w.dtype), policy.w_bits)
+    y = x_q @ w
+    if b is not None:
+        y = y + b
+    return y, ob
+
+
+# --- norms -------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    n = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (n * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    c = x32 - mu
+    n = c * jax.lax.rsqrt(jnp.mean(c * c, -1, keepdims=True) + eps)
+    return (n * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def qnorm(x, p, policy: QuantPolicy, norm_type: str):
+    """Norm with (optionally) fake-quantized 8-bit gamma/beta — the QAT mirror
+    of the integer LN core."""
+    gamma = p["gamma"]
+    beta = p.get("beta")
+    if policy.quantize_layernorm:
+        gm = jax.lax.stop_gradient(q.per_tensor_max(gamma))
+        gamma = q.fake_quant(gamma, gm.astype(gamma.dtype), 8)
+        if beta is not None:
+            bm = jax.lax.stop_gradient(q.per_tensor_max(beta))
+            beta = q.fake_quant(beta, jnp.maximum(bm, 1e-8).astype(beta.dtype), 8)
+    if norm_type == "layernorm":
+        return layernorm(x, gamma, beta if beta is not None else jnp.zeros_like(gamma))
+    return rmsnorm(x, gamma)
+
+
+# --- rotary embeddings ---------------------------------------------------------
+
+def rope_freqs(hd_rot: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32) / hd_rot))
+
+
+def apply_rope(x, pos, theta, partial: float = 1.0):
+    """x: (B, S, H, D); pos: (B, S) int32.  Split-half (llama) convention."""
+    d = x.shape[-1]
+    d_rot = int(d * partial)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_freqs(d_rot, theta)                       # (d_rot/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs       # (B, S, d_rot/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return jnp.concatenate([out, xp], -1)
+
+
+def apply_mrope(x, pos3, theta, sections: Tuple[int, int, int]):
+    """Qwen2-VL M-RoPE: pos3 (B, S, 3) = (t, h, w) indices; frequency bands are
+    split into |sections| groups, each rotated by its own position stream."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)                           # (half,)
+    sec = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+    band = jnp.searchsorted(sec[1:], jnp.arange(half), side="right")  # 0/1/2
+    # pick the position stream per frequency band
+    p = jnp.take_along_axis(
+        pos3.astype(jnp.float32),                          # (B, S, 3)
+        jnp.broadcast_to(band[None, None, :], (*pos3.shape[:2], half)),
+        axis=-1,
+    )                                                      # (B, S, half)
+    ang = p * freqs
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+# --- quantized-softmax QAT simulator -----------------------------------------
+
+def lut_softmax_qat(logits, s_logit, enabled: bool):
+    """STE simulation of the 256-entry LUT softmax (paper §III-B).
+
+    logits: real-valued, mask already applied as -inf/-1e9.
+    s_logit: codes-per-real-unit of the integer logit grid (sqrt(d)*s_q*s_k).
+    The index grid, 8-bit LUT values and Q1.7 output rounding all match the
+    integer pipeline; gradients flow via STE.
+    """
+    if not enabled:
+        return jax.nn.softmax(logits, axis=-1)
+    lf = logits.astype(jnp.float32)
+    # quantize logits onto the integer grid first (they arrive via int8 QK^T)
+    lq = ste_round(lf * s_logit) / s_logit
+    m = jax.lax.stop_gradient(jnp.max(lq, -1, keepdims=True))
+    dgap = m - lq                                      # >= 0 real units
+    idx = jnp.clip(ste_round(dgap / LUT_DELTA), 0, 255)
+    num = ste_round(jnp.exp(-idx * LUT_DELTA) * 255.0) / 255.0
+    num = jnp.where(idx >= 255, 0.0, num)              # LUT[255] == 0
+    den = jnp.maximum(jnp.sum(num, -1, keepdims=True), 1e-9)
+    p = num / den
+    p = ste_round(p * 128.0) / 128.0                   # Q1.7 output codes
+    return p.astype(logits.dtype)
+
+
+# --- attention (QAT path, materialized scores) --------------------------------
+
+def attention_qat(
+    x: jax.Array,                  # (B, S, d)
+    p: Dict,                       # {'wq','wk','wv','wo', optional 'qn','kn'}
+    amax: Dict[str, jax.Array],
+    policy: QuantPolicy,
+    cfg,
+    pos: jax.Array,                # (B, S) or (B, S, 3) for mrope
+    mask: Optional[jax.Array] = None,   # (B, 1, Sq, Skv) bool, True = attend
+) -> Tuple[jax.Array, Obs]:
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    obs: Obs = {}
+    qp, obs["attn_in"] = qdense(x, p["wq"], p.get("bq"), amax["attn_in"], policy)
+    kp, _ = qdense(x, p["wk"], p.get("bk"), amax["attn_in"], policy)
+    vp, _ = qdense(x, p["wv"], p.get("bv"), amax["attn_in"], policy)
+    qh = qp.reshape(b, s, nh, hd)
+    kh = kp.reshape(b, s, nkv, hd)
+    vh = vp.reshape(b, s, nkv, hd)
+    # pre-rope 8-bit grid (the linear's own output is an int8 intermediate;
+    # RoPE is a dequant->rotate->requant island between two grids)
+    qh, obs["q_pre"] = fake_quant_act(qh, amax["q_pre"], policy.a_bits,
+                                      policy.quantize_wa)
+    kh, obs["k_pre"] = fake_quant_act(kh, amax["k_pre"], policy.a_bits,
+                                      policy.quantize_wa)
+    if cfg.qk_norm:
+        qh = rmsnorm(qh, p["qn"])
+        kh = rmsnorm(kh, p["kn"])
+    if cfg.mrope_sections is not None:
+        qh = apply_mrope(qh, pos, cfg.rope_theta, cfg.mrope_sections)
+        kh = apply_mrope(kh, pos, cfg.rope_theta, cfg.mrope_sections)
+    elif not cfg.learned_pos:
+        qh = apply_rope(qh, pos, cfg.rope_theta, cfg.partial_rotary)
+        kh = apply_rope(kh, pos, cfg.rope_theta, cfg.partial_rotary)
+    # 8-bit fake-quant of q, k, v — these ARE the integer path's q/k/v codes
+    # (and the quantized KV cache at serving time)
+    qh, obs["q"] = fake_quant_act(qh, amax["q"], policy.a_bits, policy.quantize_wa)
+    kh, obs["k"] = fake_quant_act(kh, amax["k"], policy.a_bits, policy.quantize_wa)
+    vh, obs["v"] = fake_quant_act(vh, amax["v"], policy.a_bits, policy.quantize_wa)
+    from repro.sharding import partition as Pt
+    dp = Pt.dp_axes_or_none()
+    msize = Pt.model_axis_size()
+    group = nh // nkv
+    kg = jnp.repeat(kh, group, axis=2)
+    vg = jnp.repeat(vh, group, axis=2)
+    # integer logit grid: s_logit_codes = sqrt(hd) * s_q * s_k
+    a_q, _ = _amax_or_obs(amax["q"], qh)
+    a_k, _ = _amax_or_obs(amax["k"], kh)
+    s_logit = jax.lax.stop_gradient(
+        math.sqrt(hd) * (127.0 / a_q) * (127.0 / a_k))
+
+    def rows(q_rows, row0, row_mask):
+        """Full-row LUT softmax for a block of query rows — the paper's
+        Softmax Core granularity.  (B, Cq, H, hd) -> (B, Cq, H*hd)."""
+        cq = q_rows.shape[1]
+        lg = jnp.einsum("bqhd,bkhd->bhqk", q_rows, kg) / math.sqrt(hd)
+        if msize:
+            if nh % msize == 0:
+                lg = Pt.constrain(lg, dp, "model", None, None)
+            elif cq % msize == 0:
+                lg = Pt.constrain(lg, dp, None, "model", None)
+        if row_mask is None and cfg.causal:
+            qpos = row0 + jnp.arange(cq)[:, None]
+            kpos = jnp.arange(s)[None, :]
+            m2 = kpos <= qpos
+            if cfg.sliding_window:
+                m2 &= kpos > (qpos - cfg.sliding_window)
+            row_mask = m2[None, None]
+        if row_mask is not None:
+            lg = jnp.where(row_mask, lg, -1e9)
+        pr = lut_softmax_qat(lg, s_logit, policy.quantize_softmax)
+        return jnp.einsum("bhqk,bkhd->bqhd", pr, vg).reshape(b, cq, nh * hd)
+
+    # Row-chunked evaluation: softmax rows are independent (full Skv per row)
+    # so semantics are exactly the row oracle; memory per layer drops from
+    # O(S^2) to O(chunk*S), which is what makes train_4k/backward fit HBM.
+    chunk = 512
+    if s > chunk and s % chunk == 0 and mask is None:
+        qc = qh.reshape(b, s // chunk, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+
+        def body(_, inp):
+            i, qq = inp
+            return None, rows(qq, i * chunk, None)
+
+        body = jax.checkpoint(body)
+        _, ctxs = jax.lax.scan(body, None, (jnp.arange(s // chunk), qc))
+        ctx = ctxs.transpose(1, 0, 2, 3).reshape(b, s, nh * hd)
+    else:
+        ctx = rows(qh, 0, mask)
+    if msize and (nh * hd) % msize == 0:
+        ctx = Pt.constrain(ctx, dp, None, "model")
+    out, obs["attn_out_in"] = qdense(ctx, p["wo"], p.get("bo"),
+                                     amax["attn_out_in"], policy)
+    return out, obs
+
+
+# --- MLPs ---------------------------------------------------------------------
+
+def mlp_qat(x, p, amax, policy, act: str) -> Tuple[jax.Array, Obs]:
+    obs: Obs = {}
+    if act == "swiglu":
+        g, obs["mlp_in"] = qdense(x, p["wg"], None, amax["mlp_in"], policy)
+        u, _ = qdense(x, p["wu"], None, amax["mlp_in"], policy)
+        # integer path: linear out is an int8 intermediate (g_pre grid), SiLU is
+        # an int8->int8 256-entry LUT onto the g_out grid, the gate product is
+        # an int8 x int8 multiply requantized to the h_in grid.
+        g, obs["g_pre"] = fake_quant_act(g, amax["g_pre"],
+                                         policy.a_bits, policy.quantize_wa)
+        g, obs["g_out"] = fake_quant_act(jax.nn.silu(g), amax["g_out"],
+                                         policy.a_bits, policy.quantize_wa)
+        u, obs["u_out"] = fake_quant_act(u, amax["u_out"],
+                                         policy.a_bits, policy.quantize_wa)
+        h = g * u
+        y, obs["h_in"] = qdense(h, p["wd"], None, amax["h_in"], policy)
+    else:  # gelu
+        h, obs["mlp_in"] = qdense(x, p["w1"], p.get("b1"), amax["mlp_in"], policy)
+        h, obs["h_pre"] = fake_quant_act(h, amax["h_pre"],
+                                         policy.a_bits, policy.quantize_wa)
+        h, obs["g_out"] = fake_quant_act(jax.nn.gelu(h), amax["g_out"],
+                                         policy.a_bits, policy.quantize_wa)
+        y, obs["h_in"] = qdense(h, p["w2"], p.get("b2"), amax["h_in"], policy)
+    return y, obs
+
+
+def residual_add(x, delta, amax, policy) -> Tuple[jax.Array, jax.Array]:
+    """int8 residual stream: both operands live on the residual grid."""
+    y = x + delta
+    y, ob = fake_quant_act(y, amax, policy.a_bits, policy.quantize_wa)
+    return y, ob

@@ -1,0 +1,127 @@
+"""Mamba-1 selective-SSM block (for jamba's hybrid stack) with QAT projections.
+
+Projections (in/x/dt/out) are W4A8-quantized like every linear; the selective
+scan itself runs fp32 (recurrent 8-bit state diverges — DESIGN.md §4 records
+this as the documented partial-applicability case).
+
+Training uses a chunked scan: outer ``lax.scan`` over sequence chunks carries
+the (B, d_in, N) state; within a chunk an associative scan runs in parallel.
+Decode is the O(1) single-step recurrence on the same state layout.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.models.layers import Obs, qdense, fake_quant_act
+
+import os
+CHUNK = int(os.environ.get("REPRO_MAMBA_CHUNK", "128"))
+
+
+def mamba_dims(cfg):
+    d_in = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_in, dt_rank
+
+
+def _ssm_chunked(x, dt, B, C, A, D):
+    """x (Bt, S, d_in); dt (Bt, S, d_in); B,C (Bt, S, N); A (d_in, N); D (d_in,)
+    -> y (Bt, S, d_in).  h_t = exp(dt*A) h_{t-1} + dt*B_t x_t ; y = C_t.h + D x.
+    """
+    bt, s, d_in = x.shape
+    n = B.shape[-1]
+    chunk = min(CHUNK, s)
+    pad = (-s) % chunk
+    if pad:
+        pz = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        x, dt, B, C = pz(x), pz(dt), pz(B), pz(C)
+    sp = s + pad
+    nchunk = sp // chunk
+    xr = x.reshape(bt, nchunk, chunk, d_in)
+    dtr = dt.reshape(bt, nchunk, chunk, d_in)
+    Br = B.reshape(bt, nchunk, chunk, n)
+    Cr = C.reshape(bt, nchunk, chunk, n)
+
+    def chunk_step(h0, inp):
+        xc, dtc, bc, cc = inp                       # (Bt, L, ...)
+        # decay and input terms, (Bt, L, d_in, N)
+        a = jnp.exp(dtc[..., None] * A)             # exp(dt*A)
+        u = (dtc * xc)[..., None] * bc[:, :, None, :]
+
+        def op(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        a_cum, u_cum = jax.lax.associative_scan(op, (a, u), axis=1)
+        h = a_cum * h0[:, None] + u_cum             # (Bt, L, d_in, N)
+        y = jnp.einsum("bldn,bln->bld", h, cc)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((bt, d_in, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xr.transpose(1, 0, 2, 3), dtr.transpose(1, 0, 2, 3),
+         Br.transpose(1, 0, 2, 3), Cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(bt, sp, d_in)[:, :s]
+    return y + x[:, :s] * D
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d.  x (B, S, d); w (K, d).  Returns y and the
+    last K-1 inputs (decode state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], 1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return y, xp[:, -(k - 1):]
+
+
+def mamba_qat(
+    x: jax.Array,            # (B, S, d)
+    p: Dict,
+    amax: Dict[str, jax.Array],
+    policy: QuantPolicy,
+    cfg,
+    state: Dict | None = None,   # decode: {'h': (B,d_in,N), 'conv': (B,K-1,d_in)}
+) -> Tuple[jax.Array, Obs, Dict | None]:
+    b, s, d = x.shape
+    d_in, dt_rank = mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    obs: Obs = {}
+    xz, obs["mamba_in"] = qdense(x, p["w_in"], None, amax["mamba_in"], policy)
+    xi, z = jnp.split(xz, 2, axis=-1)               # (B, S, d_in) each
+    xc, conv_state = _causal_conv(xi, p["conv_w"],
+                                  None if state is None else state["conv"])
+    xc = jax.nn.silu(xc + p["conv_b"])
+    xc, obs["mamba_conv"] = fake_quant_act(xc, amax["mamba_conv"],
+                                           policy.a_bits, policy.quantize_wa)
+    prm, obs["mamba_x"] = qdense(xc, p["w_x"], None, amax["mamba_x"], policy)
+    dt_r, B_, C_ = jnp.split(prm.astype(jnp.float32),
+                             [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["w_dt"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))    # (d_in, N), negative
+    xf = xc.astype(jnp.float32)
+    if state is None:
+        y = _ssm_chunked(xf, dt, B_, C_, A, p["D"].astype(jnp.float32))
+        new_state = None
+    else:
+        # single-step decode (s == 1)
+        a = jnp.exp(dt[:, 0, :, None] * A)          # (B, d_in, N)
+        h = a * state["h"] + (dt[:, 0] * xf[:, 0])[..., None] * B_[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_[:, 0])[:, None] + xf * p["D"]
+        new_state = {"h": h, "conv": conv_state}
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out, obs["mamba_out"] = qdense(y, p["w_out"], None, amax["mamba_out"], policy)
+    return out, obs, new_state
+
+
+MAMBA_SITES = ("mamba_in", "mamba_conv", "mamba_x", "mamba_out")

@@ -1,0 +1,482 @@
+"""Integer serving forward: prefill (+KV-cache build) and single-token decode
+over the folded params (models/fold.py).  This is the paper's deployment
+datapath: int8 activations end-to-end, packed-int4 weights, LUT softmax,
+integer LN, int8 KV cache — with documented fp islands (RoPE rotation, MoE
+router/combine, SSM inner recurrence).
+
+Depth is a lax.scan over super-block reps; the KV/SSM cache rides as scan
+xs/ys with a leading (n_reps,) axis per slot.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import fixedpoint as fxp
+from repro.core.qlayernorm import QLNParams
+from repro.core.qlinear import FoldedLinear
+from repro.core.qsoftmax import MASK_OFFSET, make_exp_lut
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.flash_qattention import flash_qattention_jax
+from repro.models import layers as L
+from repro.models import mamba as Mb
+from repro.models import xlstm as Xl
+from repro.models.transformer import slot_kinds
+from repro.models.fold import make_silu_lut  # noqa: F401  (re-export)
+
+
+# --- primitive appliers -------------------------------------------------------
+
+def _ln(x_i8, f, cfg):
+    p = QLNParams(gamma_i=f["gamma_i"], beta_aligned=f["beta_al"],
+                  M_out=f["M"], shift_out=f["sh"],
+                  subtract_mean=(cfg.norm_type == "layernorm"))
+    return ops.layernorm_q(x_i8, p)
+
+
+_W_BITS = 4  # set per-forward from cfg.quant.w_bits (module-static is safe:
+             # serve_forward is re-traced per config)
+
+
+def _lin(x_i8, f, w_bits=None):
+    fl = FoldedLinear(w_packed=f["w"], bias_i=f["b"], M=f["M"], shift=f["sh"],
+                      w_bits=w_bits if w_bits is not None else _W_BITS)
+    return ops.linear_w4a8(x_i8, fl)
+
+
+def _lin_wonly(x_f, f):
+    """Weight-only int4 linear on fp activations (SSM islands)."""
+    from repro.core import packing
+    w = packing.unpack_int4_planar(f["w"], axis=0).astype(jnp.float32) * f["inv_s_w"]
+    y = x_f @ w
+    if "b" in f:
+        y = y + f["b"]
+    return y
+
+
+def _rescale_i8(x_i8, f):
+    y = fxp.rescale(x_i8.astype(jnp.int32), f["M"], f["sh"])
+    return jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+def _resid_add(x_i8, f_rescale, delta_i8):
+    xr = fxp.rescale(x_i8.astype(jnp.int32), f_rescale["M"], f_rescale["sh"])
+    return jnp.clip(xr + delta_i8.astype(jnp.int32), -127, 127).astype(jnp.int8)
+
+
+def _lut8(x_i8, lut_i8):
+    """int8 -> int8 elementwise via 256-entry LUT (one-hot select)."""
+    idx = x_i8.astype(jnp.int32) + 128
+    return jnp.take(lut_i8, idx).astype(jnp.int8)
+
+
+def _rope_island(h_i8, inv_s_in, s_out, pos, cfg, qn=None):
+    """dequant -> (qk_norm) -> rotate -> requant.  (B,S,H,D) int8."""
+    hf = h_i8.astype(jnp.float32) * inv_s_in
+    if qn is not None:
+        hf = L.rmsnorm(hf, qn)
+    if cfg.mrope_sections is not None:
+        hf = L.apply_mrope(hf, pos, cfg.rope_theta, cfg.mrope_sections)
+    elif not cfg.learned_pos:
+        hf = L.apply_rope(hf, pos, cfg.rope_theta, cfg.partial_rotary)
+    return jnp.clip(jnp.round(hf * s_out), -127, 127).astype(jnp.int8)
+
+
+LUT_Q7 = None  # materialized lazily (module-level jnp constants break pallas)
+
+
+def _lut_q7():
+    return jnp.asarray(kref.make_exp_lut_q7())
+
+
+def _lut_q8():
+    return jnp.asarray(make_exp_lut())
+
+
+# --- attention slot -----------------------------------------------------------
+
+def _attn_prefill(x_i8, f, cfg, pos):
+    b, s, d = x_i8.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = _ln(x_i8, f["ln1"], cfg)
+    qc = _lin(h, f["wq"]).reshape(b, s, nh, hd)
+    kc = _lin(h, f["wk"]).reshape(b, s, nkv, hd)
+    vc = _lin(h, f["wv"]).reshape(b, s, nkv, hd)
+    aq = f["attn_q"]
+    qc = _rope_island(qc, aq["inv_s_qp"], aq["s_q"], pos, cfg, f["attn_q"].get("qn"))
+    kc = _rope_island(kc, aq["inv_s_kp"], aq["s_k"], pos, cfg, f["attn_q"].get("kn"))
+    if cfg.causal:
+        # blocked integer flash over KV (fp32 carry), per-batch vmap
+        fn = lambda qq, kk, vv: flash_qattention_jax(
+            qq, kk, vv, aq["M_idx"], aq["sh_idx"], _lut_q7(),
+            aq["inv_s_logit"], aq["out_scale"], window=cfg.sliding_window,
+            bkv=min(512, s))
+        ctx = jax.vmap(fn)(qc.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+                           vc.transpose(0, 2, 1, 3))      # (B,H,S,D) int8
+    else:
+        # bidirectional (BERT): paper-style row LUT softmax, materialized
+        group = nh // nkv
+        kg = jnp.repeat(kc, group, axis=2)
+        vg = jnp.repeat(vc, group, axis=2)
+        scores = jax.lax.dot_general(
+            qc.transpose(0, 2, 1, 3), kg.transpose(0, 2, 3, 1),
+            (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)             # (B,H,S,S)
+        probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
+        pv = jax.lax.dot_general(
+            probs.astype(jnp.int8), vg.transpose(0, 2, 1, 3),
+            (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)
+        ctx = jnp.clip(fxp.rescale(pv, aq["M_pv"], aq["sh_pv"]),
+                       -127, 127).astype(jnp.int8)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    out = _lin(ctx, f["wo"])
+    return out, kc, vc
+
+
+def _attn_decode(x_i8, f, cfg, cache, pos_scalar):
+    """x (B,1,d); cache {'k','v'}: (B, Smax, Hkv, hd) int8.  pos may be traced."""
+    b, s, d = x_i8.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    smax = cache["k"].shape[1]
+    h = _ln(x_i8, f["ln1"], cfg)
+    qc = _lin(h, f["wq"]).reshape(b, s, nh, hd)
+    kc = _lin(h, f["wk"]).reshape(b, s, nkv, hd)
+    vc = _lin(h, f["wv"]).reshape(b, s, nkv, hd)
+    aq = f["attn_q"]
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos_scalar, (b, s, 3)).astype(jnp.int32)
+    else:
+        pos = jnp.broadcast_to(pos_scalar, (b, s)).astype(jnp.int32)
+    qc = _rope_island(qc, aq["inv_s_qp"], aq["s_q"], pos, cfg, aq.get("qn"))
+    kc = _rope_island(kc, aq["inv_s_kp"], aq["s_k"], pos, cfg, aq.get("kn"))
+    # match the cache layout before the in-place update (avoids the SPMD
+    # "involuntary full rematerialization" reshard of the whole cache)
+    from repro.sharding import partition as Pt
+    dpax = Pt.dp_axes_or_none()
+    if dpax:
+        kc = Pt.constrain(kc, dpax, None, None, "model")
+        vc = Pt.constrain(vc, dpax, None, None, "model")
+    # ring-buffer write for SWA; plain append otherwise
+    widx = (pos_scalar % smax) if cfg.sliding_window else pos_scalar
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], kc, (0, widx, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], vc, (0, widx, 0, 0))
+    group = nh // nkv
+    # GQA WITHOUT materializing repeated KV: q heads grouped per kv head and
+    # batched into the dot.  The jnp.repeat formulation multiplies KV-cache
+    # HBM traffic by `group` (16x on llama3-405b) — EXPERIMENTS.md §Perf it.3.
+    assert s == 1
+    qg = qc.reshape(b, nkv, group, hd)                    # (B,kv,g,hd) int8
+    kt = k_cache.transpose(0, 2, 3, 1)                    # (B,kv,hd,Smax) int8
+    scores = jax.lax.dot_general(
+        qg, kt, (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.int32)                 # (B,kv,g,Smax)
+    slot = jnp.arange(smax)
+    if cfg.sliding_window:
+        valid = slot < jnp.minimum(pos_scalar + 1, smax)
+    else:
+        valid = slot <= pos_scalar
+    scores = jnp.where(valid[None, None, None, :], scores,
+                       scores - MASK_OFFSET)
+    probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
+    vt = v_cache.transpose(0, 2, 1, 3)                    # (B,kv,Smax,hd)
+    pv = jax.lax.dot_general(
+        probs.astype(jnp.int8), vt, (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.int32)                 # (B,kv,g,hd)
+    pv = pv.reshape(b, nh, s, hd)                         # == (B,H,1,hd)
+    ctx = fxp.rescale(pv, aq["M_pv"], aq["sh_pv"])
+    ctx = jnp.clip(ctx, -127, 127).astype(jnp.int8)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    out = _lin(ctx, f["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# --- ffn slots ----------------------------------------------------------------
+
+def _mlp_int(x_i8, f, cfg):
+    h = _ln(x_i8, f["ln2"], cfg)
+    if cfg.act == "swiglu":
+        g = _lin(h, f["wg"])
+        u = _lin(h, f["wu"])
+        g = _lut8(g, f["silu_lut"])
+        prod = g.astype(jnp.int32) * u.astype(jnp.int32)       # int16-range
+        hh = jnp.clip(fxp.rescale(prod, f["prod"]["M"], f["prod"]["sh"]),
+                      -127, 127).astype(jnp.int8)
+        return _lin(hh, f["wd"])
+    g = _lin(h, f["w1"])
+    g = _lut8(g, f["gelu_lut"])
+    g = _rescale_i8(g, f["gelu_rescale"])
+    return _lin(g, f["w2"])
+
+
+def _moe_int(x_i8, f, cfg):
+    """Integer experts; fp32 router + combine (documented islands)."""
+    from repro.models.moe import capacity, topk_routing, scatter_dispatch, \
+        gather_combine
+    b, s, d = x_i8.shape
+    t = b * s
+    h = _ln(x_i8, f["ln2"], cfg).reshape(t, d)
+    hf = h.astype(jnp.float32) * f["inv_s_mi"]
+    gate_logits = hf @ f["router"]
+    cap = capacity(t, cfg.n_experts, cfg.top_k)
+    dest, gates, _ = topk_routing(gate_logits, cfg.top_k, cap)
+    # integer dispatch: rows are moved, padding is 0 (on-grid), codes exact
+    xe = scatter_dispatch(h, dest, cfg.n_experts, cap)
+    xe = xe.reshape(cfg.n_experts, cap, d)
+    fe = f["experts"]
+
+    def expert_ffn(xe_i8, grp):
+        def one(x1, wg, wu, wd):
+            g = _lin(x1, wg)
+            u = _lin(x1, wu)
+            g = _lut8(g, grp["silu_lut"])
+            prod = g.astype(jnp.int32) * u.astype(jnp.int32)
+            hh = jnp.clip(fxp.rescale(prod, grp["prod"]["M"], grp["prod"]["sh"]),
+                          -127, 127).astype(jnp.int8)
+            return _lin(hh, wd)
+        return jax.vmap(one)(xe_i8, grp["wg"], grp["wu"], grp["wd"])
+
+    ye = expert_ffn(xe, fe)                                     # (E,C,d) int8
+    yf = ye.astype(jnp.float32) * fe["inv_s_out"]
+    yt = gather_combine(yf.reshape(cfg.n_experts * cap, d), dest, gates,
+                        jnp.float32)
+    if "shared" in f:
+        sh = f["shared"]
+        xs = jnp.broadcast_to(h[None], (cfg.n_shared_experts, t, d))
+        ys = expert_ffn(xs, sh)
+        yt = yt + jnp.sum(ys.astype(jnp.float32) * sh["inv_s_out"], 0)
+    y_i8 = jnp.clip(jnp.round(yt * f["s_rm"]), -127, 127).astype(jnp.int8)
+    return y_i8.reshape(b, s, d)
+
+
+# --- ssm slots (weight-only int4, fp core — DESIGN.md §4) ----------------------
+
+def _mamba_int(x_i8, f, cfg, state):
+    b, s, d = x_i8.shape
+    h = _ln(x_i8, f["ln1"], cfg)
+    hf = h.astype(jnp.float32) * f["inv_s_in"]
+    m = f["mx"]
+    d_in, dt_rank = Mb.mamba_dims(cfg)
+    n = cfg.mamba_d_state
+    xz = _lin_wonly(hf, m["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = Mb._causal_conv(xi, m["conv_w"],
+                                     None if state is None else state["conv"])
+    xc = jax.nn.silu(xc + m["conv_b"])
+    prm = _lin_wonly(xc, m["w_x"])
+    dt_r, B_, C_ = jnp.split(prm, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ m["w_dt"] + m["dt_bias"])
+    A = -jnp.exp(m["A_log"])
+    if state is None:
+        y = Mb._ssm_chunked(xc, dt, B_, C_, A, m["D"])
+        new_state = None
+    else:
+        a = jnp.exp(dt[:, 0, :, None] * A)
+        hstate = a * state["h"] + (dt[:, 0] * xc[:, 0])[..., None] * B_[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", hstate, C_[:, 0])[:, None] + xc * m["D"]
+        new_state = {"h": hstate, "conv": conv_state}
+    y = y * jax.nn.silu(z)
+    out = _lin_wonly(y, m["w_out"])
+    out_i8 = jnp.clip(jnp.round(out * f["s_ra"]), -127, 127).astype(jnp.int8)
+    return out_i8, new_state
+
+
+def _xlstm_int(x_i8, f, cfg, state, kind):
+    b, s, d = x_i8.shape
+    h = _ln(x_i8, f["ln1"], cfg)
+    hf = (h.astype(jnp.float32) * f["inv_s_in"]).astype(jnp.float32)
+    m = f["mx"]
+
+    def lw(name):
+        return lambda xx: _lin_wonly(xx, m[name])
+
+    if kind == "mlstm":
+        nh = cfg.n_heads
+        qh = Xl._heads(lw("wq")(hf), nh)
+        kh = Xl._heads(lw("wk")(hf), nh) / math.sqrt(d // nh)
+        vh = Xl._heads(lw("wv")(hf), nh)
+        gi = hf @ m["w_ig"] + m["b_ig"]
+        gf = hf @ m["w_fg"] + m["b_fg"]
+        logf = jax.nn.log_sigmoid(gf)
+        if state is None:
+            y = Xl.mlstm_parallel(qh, kh, vh, gi, logf)
+            new_state = None
+        else:
+            qt, kt, vt = qh[:, 0], kh[:, 0], vh[:, 0]
+            git, logft = gi[:, 0], logf[:, 0]
+            m_new = jnp.maximum(logft + state["m"], git)
+            fdec = jnp.exp(logft + state["m"] - m_new)[..., None]
+            iinc = jnp.exp(git - m_new)[..., None]
+            C = fdec[..., None] * state["C"] + iinc[..., None] * (
+                kt[..., :, None] * vt[..., None, :])
+            nvec = fdec * state["n"] + iinc * kt
+            num = jnp.einsum("bhe,bhef->bhf", qt, C)
+            den = jnp.maximum(jnp.abs(jnp.sum(nvec * qt, -1)), jnp.exp(-m_new))
+            y = (num / den[..., None])[:, None]
+            new_state = {"C": C, "n": nvec, "m": m_new}
+        y = y.reshape(b, s, d)
+        og = jax.nn.sigmoid(hf @ m["w_og"] + m["b_og"])
+        y = L.rmsnorm(y, m["ln_y"]) * og
+        out = _lin_wonly(y, m["wo"])
+    else:  # slstm — reuse the QAT fp implementation on dequantized input
+        pol_off = cfg.quant
+        params_fp = {k: (v if not (isinstance(v, dict)) else v) for k, v in m.items()}
+        # reconstruct float weights from weight-only folds
+        from repro.core import packing
+        def unw(t):
+            return (packing.unpack_int4_planar(t["w"], axis=0).astype(jnp.float32)
+                    * t["inv_s_w"]) if isinstance(t, dict) and "w" in t else t
+        pf = {k: unw(v) for k, v in m.items()}
+        amax_stub = {kk: jnp.float32(0) for kk in Xl.SLSTM_SITES}
+        import dataclasses as _dc
+        cfg_fp = _dc.replace(cfg, quant=_dc.replace(cfg.quant, quantize_wa=False))
+        y, _, new_state = Xl.slstm_qat(hf, pf, amax_stub, cfg_fp.quant, cfg_fp,
+                                       state)
+        out = y
+    out_i8 = jnp.clip(jnp.round(out * f["s_ra"]), -127, 127).astype(jnp.int8)
+    return out_i8, new_state
+
+
+# --- whole-model serving forward -----------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Per-slot decode state, stacked (n_reps, ...)."""
+    kinds = slot_kinds(cfg)
+    smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    cache = {}
+    for i, (mixer, _) in enumerate(kinds):
+        if mixer == "attn":
+            c = {"k": jnp.zeros((cfg.n_reps, batch, smax, cfg.n_kv_heads, cfg.hd),
+                                jnp.int8),
+                 "v": jnp.zeros((cfg.n_reps, batch, smax, cfg.n_kv_heads, cfg.hd),
+                                jnp.int8)}
+        elif mixer == "mamba":
+            d_in, _ = Mb.mamba_dims(cfg)
+            c = {"h": jnp.zeros((cfg.n_reps, batch, d_in, cfg.mamba_d_state),
+                                jnp.float32),
+                 "conv": jnp.zeros((cfg.n_reps, batch, cfg.mamba_d_conv - 1, d_in),
+                                   jnp.float32)}
+        elif mixer == "mlstm":
+            dh = cfg.d_model // cfg.n_heads
+            c = {"C": jnp.zeros((cfg.n_reps, batch, cfg.n_heads, dh, dh), jnp.float32),
+                 "n": jnp.zeros((cfg.n_reps, batch, cfg.n_heads, dh), jnp.float32),
+                 "m": jnp.zeros((cfg.n_reps, batch, cfg.n_heads), jnp.float32)}
+        else:  # slstm
+            dh = cfg.d_model // cfg.n_heads
+            z = lambda: jnp.zeros((cfg.n_reps, batch, cfg.n_heads, dh), jnp.float32)
+            c = {"c": z(), "n": z(), "h": z(), "m": z()}
+        cache[f"slot{i}"] = c
+    return cache
+
+
+def _embed_int(cfg, folded, tokens):
+    if cfg.frontend == "audio_codebooks":
+        acc = sum(jnp.take(folded["embed"]["codebooks_i8"][ci], tokens[:, ci], 0
+                           ).astype(jnp.int32) for ci in range(cfg.n_codebooks))
+        return jnp.clip(acc, -127, 127).astype(jnp.int8)
+    return jnp.take(folded["embed"]["tokens_i8"], tokens, axis=0)
+
+
+def serve_forward(
+    cfg: ModelConfig,
+    folded: Dict,
+    tokens: jax.Array,
+    *,
+    cache: Optional[Dict] = None,
+    pos_offset: jax.Array | int = 0,
+    mode: str = "prefill",            # prefill | decode
+    extra_embeds_i8: Optional[jax.Array] = None,
+    pos3: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Integer forward.  prefill: tokens (B,S) [no cache update — evaluation
+    path]; decode: tokens (B,1) + cache -> (logits, new_cache)."""
+    global _W_BITS
+    _W_BITS = cfg.quant.w_bits
+    kinds = slot_kinds(cfg)
+    x = _embed_int(cfg, folded, tokens)
+    if extra_embeds_i8 is not None:
+        x = jnp.concatenate([extra_embeds_i8, x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    if cfg.learned_pos:
+        if mode == "decode":
+            posrow = jax.lax.dynamic_slice_in_dim(
+                folded["embed"]["pos_i8"], pos_offset, 1, 0)
+        else:
+            posrow = folded["embed"]["pos_i8"][:s]
+        x = jnp.clip(x.astype(jnp.int32) + posrow[None].astype(jnp.int32),
+                     -127, 127).astype(jnp.int8)
+    if mode == "decode":
+        pos = None
+    else:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.mrope_sections is not None:
+            pos = pos3 if pos3 is not None else jnp.broadcast_to(
+                pos[..., None], (*pos.shape, 3))
+
+    def body(x_i8, f_rep, cache_rep):
+        new_cache_rep = {}
+        for i, (mixer, ffn) in enumerate(kinds):
+            f = f_rep[f"slot{i}"]
+            cslot = None if cache_rep is None else cache_rep[f"slot{i}"]
+            if mixer == "attn":
+                if mode == "decode":
+                    out, nc = _attn_decode(x_i8, f, cfg, cslot, pos_offset)
+                else:
+                    out, _, _ = _attn_prefill(x_i8, f, cfg, pos)
+                    nc = cslot
+            elif mixer == "mamba":
+                out, nc = _mamba_int(x_i8, f, cfg,
+                                     cslot if mode == "decode" else None)
+            else:
+                out, nc = _xlstm_int(x_i8, f, cfg,
+                                     cslot if mode == "decode" else None, mixer)
+            new_cache_rep[f"slot{i}"] = nc if nc is not None else cslot
+            x_i8 = _resid_add(x_i8, f["res_a"], out)
+            if ffn == "dense":
+                out = _mlp_int(x_i8, f, cfg)
+                x_i8 = _resid_add(x_i8, f["res_m"], out)
+            elif ffn == "moe":
+                out = _moe_int(x_i8, f, cfg)
+                x_i8 = _resid_add(x_i8, f["res_m"], out)
+        x_i8 = _rescale_i8(x_i8, f_rep["block_out_rescale"])
+        return x_i8, new_cache_rep
+
+    def scan_body(carry, xs):
+        if cache is None:
+            f_rep = xs
+            y, _ = body(carry, f_rep, None)
+            return y, None
+        f_rep, cache_rep = xs
+        y, nc = body(carry, f_rep, cache_rep)
+        return y, nc
+
+    if cache is None:
+        x, _ = jax.lax.scan(scan_body, x, folded["blocks"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(scan_body, x, (folded["blocks"], cache))
+
+    x = _ln(x, folded["final_norm"], cfg)
+    head = folded["lm_head"]
+
+    def head_apply(hw):
+        from repro.core import packing
+        if cfg.quant.w_bits == 8:
+            w = hw["w"].astype(jnp.int8)
+        else:
+            w = packing.unpack_int4_planar(hw["w"], axis=0).astype(jnp.int8)
+        acc = jax.lax.dot_general(x, w, (((2,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * hw["inv_acc"]
+
+    if cfg.n_lm_heads > 1 and not cfg.tied_embeddings:
+        logits = jnp.stack([head_apply(jax.tree.map(lambda t: t[i], head))
+                            for i in range(cfg.n_lm_heads)], axis=1)
+    else:
+        logits = head_apply(head)
+    return logits, new_cache

