@@ -1,4 +1,8 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   python benchmarks/run.py                   # all tables
+#   python benchmarks/run.py --tables table1,table3   # CI smoke subset
+import argparse
 import sys
 from pathlib import Path
 
@@ -9,9 +13,23 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 def main() -> None:
     from benchmarks import tables
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default=None,
+                    help="comma-separated prefixes (table1..table4); "
+                         "default: all")
+    args = ap.parse_args()
+
+    fns = [tables.table1_compression, tables.table2_ablation,
+           tables.table3_kernel_scaling, tables.table4_latency]
+    if args.tables:
+        keep = tuple(args.tables.split(","))
+        fns = [fn for fn in fns if fn.__name__.startswith(keep)]
+        if not fns:
+            sys.exit(f"--tables {args.tables!r} matched nothing "
+                     f"(valid prefixes: table1..table4)")
+
     all_rows = []
-    for fn in (tables.table1_compression, tables.table2_ablation,
-               tables.table3_kernel_scaling, tables.table4_latency):
+    for fn in fns:
         try:
             all_rows.extend(fn())
         except Exception as e:  # noqa: BLE001

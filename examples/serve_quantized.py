@@ -1,6 +1,8 @@
-"""Batched serving example: calibrate, fold to integers, generate with the
-engine (quantized KV cache, greedy + temperature sampling).
+"""Continuous-batching serving example: calibrate, fold to integers, then
+stream mixed-length requests through the slot-table engine (quantized KV
+cache, one-shot integer prefill, per-slot positions, greedy + temperature).
 
+    PYTHONPATH=src python examples/serve_quantized.py --arch yi-6b
     PYTHONPATH=src python examples/serve_quantized.py --arch mixtral-8x22b
 """
 import argparse
@@ -10,11 +12,12 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.launch.serve import calibrated_folded
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Request, make_engine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="yi-6b")
-ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--requests", type=int, default=10)
 ap.add_argument("--max-new", type=int, default=12)
 args = ap.parse_args()
 
@@ -22,9 +25,17 @@ cfg = smoke_config(args.arch)
 key = jax.random.PRNGKey(0)
 calib = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
 folded = calibrated_folded(cfg, key, calib)
-eng = Engine(cfg, folded, batch_slots=args.batch, max_len=128)
+
+eng = make_engine(cfg, folded, batch_slots=args.slots, max_len=128)
 rng = np.random.default_rng(0)
-reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32),
-                max_new_tokens=args.max_new) for _ in range(args.batch)]
+# more requests than slots: the scheduler streams them through mid-flight
+reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                    (int(rng.integers(4, 24)),)
+                                    ).astype(np.int32),
+                max_new_tokens=args.max_new)
+        for _ in range(args.requests)]
 for i, r in enumerate(eng.generate(reqs)):
-    print(f"req{i}: prompt={r.prompt[:6].tolist()}.. -> {r.out.tolist()}")
+    print(f"req{i}: prompt[{len(r.prompt)}]={r.prompt[:6].tolist()}.. "
+          f"-> {r.out.tolist()}")
+if hasattr(eng, "stats"):
+    print(f"engine stats: {eng.stats}")

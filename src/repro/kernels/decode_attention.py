@@ -1,0 +1,162 @@
+"""Batched single-query decode attention over the int8 KV cache — the
+continuous-batching serving kernel.
+
+One grid step = (slot, kv head, KV block).  Every slot in the table decodes
+at its own depth: the per-slot ``lengths`` vector rides as a scalar-prefetch
+argument, so it is available both to the kernel body (per-slot masking) and
+to the BlockSpec index maps, which CLAMP the KV block index to the slot's
+last live block — grid steps past a slot's length re-address the block that
+is already resident in VMEM, so the pipeliner issues no new DMA and short
+slots genuinely pay no HBM traffic for the unused tail of their cache.
+
+Per KV block the datapath is exactly the paper's Softmax Core —
+
+    int8 q @ kᵀ -> int32 scores -> (max - s) -> fixed-point LUT index ->
+    Q0.7 exp numerators -> int8 P @ int8 V on the MXU -> int32 partial
+
+— with the same fp32 cross-block carry (running max rescale, denominator,
+output accumulator) as ``flash_qattention``.  With a single KV block the
+kernel degenerates to the paper's row-wise softmax and is bit-exact vs.
+``kernels/ref.py::decode_qattention_ref``.
+
+GQA: q heads arrive pre-grouped per kv head, (B, Hkv, G, D); K/V arrive in
+the cache's native (B, Smax, Hkv, D) layout and each live KV block is
+streamed from HBM exactly once, shared by the whole group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import fixedpoint as fxp
+from repro.core.qsoftmax import LUT_SIZE, MASK_OFFSET
+from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.quant_softmax import lut_lookup
+
+NEG_INIT = -(1 << 30)
+
+
+def _decode_kernel(g, bkv, len_ref, q_ref, k_ref, v_ref, lut_ref, mi_ref,
+                   si_ref, inv_ref, osc_ref, o_ref, m_scr, den_scr, acc_scr):
+    b_i = pl.program_id(0)
+    k_i = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        den_scr[...] = jnp.zeros_like(den_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b_i]                         # this slot's valid prefix
+    live = (k_i * bkv) < length                   # dead blocks: no compute
+                                                  # (and no DMA — index map
+                                                  # re-addresses a resident
+                                                  # block)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0, 0]                           # (G, D) int8 — whole group
+        k = k_ref[0, :, 0]                        # (bkv, D) int8
+        v = v_ref[0, :, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.int32)  # (G, bkv)
+        kpos = k_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (g, bkv), 1)
+        s = jnp.where(kpos < length, s, s - MASK_OFFSET)
+        lm = jnp.max(s, axis=-1, keepdims=True)
+        m_old = m_scr[:, :1]
+        m_new = jnp.maximum(m_old, lm)
+        idx = jnp.clip(fxp.rescale(m_new - s, mi_ref[0], si_ref[0], out_bits=9),
+                       0, LUT_SIZE - 1)
+        num = lut_lookup(idx, lut_ref[...].astype(jnp.int32))      # Q0.7
+        den_b = jnp.sum(num, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(num.astype(jnp.int8), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)  # (G, D)
+        f = jnp.exp((m_old - m_new).astype(jnp.float32) * inv_ref[0])
+        f = jnp.where(m_old == NEG_INIT, 0.0, f)
+        den_scr[...] = den_scr[...] * f + den_b.astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * f + pv.astype(jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(k_i == nk - 1)
+    def _epilogue():
+        den = jnp.maximum(den_scr[:, :1], 1.0)
+        o = acc_scr[...] / den * osc_ref[0]
+        o_ref[0, 0] = jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
+
+
+def _block_divisor(bkv: int, smax: int) -> int:
+    """Largest block size <= bkv that divides smax (grid must tile exactly)."""
+    bkv = min(bkv, smax)
+    while smax % bkv:
+        bkv -= 1
+    return bkv
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def decode_qattention(
+    q_i8: jax.Array,       # int8 (B, Hkv, G, D) — one token/slot, grouped q
+    k_i8: jax.Array,       # int8 (B, Smax, Hkv, D) — cache-NATIVE layout
+    v_i8: jax.Array,
+    lengths: jax.Array,    # int32 (B,): valid cache prefix per slot
+    M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+    *, bkv: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """Continuous-batching decode attention: int8 (B, Hkv, G, D) context on
+    the attn_out grid, each slot masked to its own ``lengths[b]`` prefix.
+
+    K/V come in the cache's native (B, Smax, Hkv, D) layout — the BlockSpec
+    index maps gather the (bkv, D) slab per kv head directly, so no per-step
+    transpose of the whole cache ever materializes in HBM."""
+    b, hkv, g, d = q_i8.shape
+    smax = k_i8.shape[1]
+    bkv = _block_divisor(bkv, smax)
+    grid = (b, hkv, smax // bkv)
+    kernel = functools.partial(_decode_kernel, g, bkv)
+
+    def kv_map(bb, h, k, lens):
+        # clamp dead blocks onto the slot's last live block: same address as
+        # the previous grid step -> the pipeliner skips the DMA entirely
+        last_live = jnp.maximum((lens[bb] - 1) // bkv, 0)
+        return (bb, jnp.minimum(k, last_live), h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                    # lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, k, lens: (bb, h, 0, 0)),
+            pl.BlockSpec((1, bkv, 1, d), kv_map),
+            pl.BlockSpec((1, bkv, 1, d), kv_map),
+            pl.BlockSpec((LUT_SIZE,), lambda bb, h, k, lens: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, h, k, lens: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.int32),     # running max (col-broadcast)
+            pltpu.VMEM((g, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((g, d), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.int8),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32).reshape(-1),
+      q_i8, k_i8, v_i8, lut_q7,
+      jnp.asarray(M_idx, jnp.int32).reshape(1),
+      jnp.asarray(shift_idx, jnp.int32).reshape(1),
+      jnp.asarray(inv_s_logit, jnp.float32).reshape(1),
+      jnp.asarray(out_scale, jnp.float32).reshape(1))

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 from repro.core import fixedpoint as fxp
 
 # Default MXU-aligned tile sizes (v5e: 128x128 MXU, ~16 MB VMEM/core).
@@ -104,7 +106,7 @@ def int4_matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -167,7 +169,7 @@ def int8_bitsplit_matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

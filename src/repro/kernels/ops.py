@@ -107,6 +107,28 @@ def layernorm_q(x_i8, p: QLNParams, *, eps_codes: int = 1, impl=None):
     return y[:m].reshape(*lead, n)
 
 
+def decode_attention_q(
+    q_i8, k_i8, v_i8, lengths, M_idx, shift_idx, lut_q7, inv_s_logit,
+    out_scale, *, bkv: int = 512, impl=None,
+):
+    """Continuous-batching decode attention with per-slot length masking.
+
+    (B, Hkv, G, D) grouped queries x (B, Smax, Hkv, D) cache-native int8 KV
+    -> (B, Hkv, G, D) int8 context.  ref backend = row oracle (exact);
+    pallas = the batched single-query flash kernel (skips KV blocks past
+    each slot's length).
+    """
+    b = backend(impl)
+    if b == "ref":
+        return _ref.decode_qattention_ref(
+            q_i8, k_i8.transpose(0, 2, 1, 3), v_i8.transpose(0, 2, 1, 3),
+            lengths, M_idx, shift_idx, lut_q7, out_scale)
+    from repro.kernels.decode_attention import decode_qattention
+    return decode_qattention(q_i8, k_i8, v_i8, lengths, M_idx, shift_idx,
+                             lut_q7, inv_s_logit, out_scale, bkv=bkv,
+                             interpret=(b == "interpret"))
+
+
 def attention_q(
     q_i8, k_i8, v_i8, M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
     *, causal: bool = True, q_offset: int = 0, impl=None,

@@ -109,6 +109,35 @@ def qattention_ref(
     return jnp.clip(y, -127, 127).astype(jnp.int8)
 
 
+def decode_qattention_ref(
+    q_i8: jax.Array,      # int8 (B, Hkv, G, D) — one query token per slot
+    k_i8: jax.Array,      # int8 (B, Hkv, Smax, D) — int8 KV cache
+    v_i8: jax.Array,
+    lengths: jax.Array,   # int32 (B,): valid cache prefix per slot
+    M_idx: jax.Array,
+    shift_idx: jax.Array,
+    lut: jax.Array,       # (256,) int32 Q0.7 codes
+    out_scale: jax.Array,
+) -> jax.Array:
+    """Row-wise oracle for the continuous-batching decode kernel: per slot,
+    paper-style LUT attention of one query over the first ``lengths[b]``
+    cached positions.  int8 (B, Hkv, G, D) on the attn_out grid.
+
+    Realized as ``qattention_ref`` with the query at absolute position
+    ``lengths[b] - 1`` — the causal mask then admits exactly the valid
+    prefix, so the masking semantics match the kernel bit-for-bit.
+    """
+    b, hkv, g, d = q_i8.shape
+
+    def one(qb, kb, vb, ln):
+        o = qattention_ref(qb.reshape(hkv * g, 1, d), kb, vb,
+                           M_idx, shift_idx, lut, out_scale,
+                           causal=True, q_offset=ln - 1)
+        return o.reshape(hkv, g, d)
+
+    return jax.vmap(one)(q_i8, k_i8, v_i8, lengths)
+
+
 def make_exp_lut_q7():
     """Q0.7 exp table for the attention kernels (max code 127, fits int8)."""
     import numpy as np

@@ -100,7 +100,40 @@ def _lut_q8():
 
 # --- attention slot -----------------------------------------------------------
 
-def _attn_prefill(x_i8, f, cfg, pos):
+def _pos_vector(pos, b):
+    """Normalize a scalar-or-(B,) position argument to a (B,) int32 vector.
+
+    The decode graph is compiled once for the whole slot table; per-slot
+    positions are what let requests at different depths share one step.
+    """
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+
+
+def _attn_rows_q8(qc, kc, vc, aq, cfg, mask):
+    """Materialized row attention through the decode-identical integer
+    datapath (q8 LUT softmax + M_pv requant).  ``mask`` (S,S) bool or None.
+    Row r is bit-identical to a decode step at pos r over the same KV, which
+    is what makes one-shot cached prefill + continuous decode reproduce
+    lockstep replay token-for-token."""
+    group = cfg.n_heads // cfg.n_kv_heads
+    kg = jnp.repeat(kc, group, axis=2)
+    vg = jnp.repeat(vc, group, axis=2)
+    scores = jax.lax.dot_general(
+        qc.transpose(0, 2, 1, 3), kg.transpose(0, 2, 3, 1),
+        (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.int32)                 # (B,H,S,S)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, scores - MASK_OFFSET)
+    probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
+    pv = jax.lax.dot_general(
+        probs.astype(jnp.int8), vg.transpose(0, 2, 1, 3),
+        (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.int32)
+    return jnp.clip(fxp.rescale(pv, aq["M_pv"], aq["sh_pv"]),
+                    -127, 127).astype(jnp.int8)
+
+
+def _attn_prefill(x_i8, f, cfg, pos, row_exact: bool = False):
     b, s, d = x_i8.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     h = _ln(x_i8, f["ln1"], cfg)
@@ -110,7 +143,15 @@ def _attn_prefill(x_i8, f, cfg, pos):
     aq = f["attn_q"]
     qc = _rope_island(qc, aq["inv_s_qp"], aq["s_q"], pos, cfg, f["attn_q"].get("qn"))
     kc = _rope_island(kc, aq["inv_s_kp"], aq["s_k"], pos, cfg, f["attn_q"].get("kn"))
-    if cfg.causal:
+    if cfg.causal and row_exact:
+        # decode-identical rows (see _attn_rows_q8) with a causal/SWA mask
+        qpos = jnp.arange(s, dtype=jnp.int32)[:, None]
+        kpos = jnp.arange(s, dtype=jnp.int32)[None, :]
+        live = kpos <= qpos
+        if cfg.sliding_window:
+            live &= kpos > qpos - cfg.sliding_window
+        ctx = _attn_rows_q8(qc, kc, vc, aq, cfg, live)
+    elif cfg.causal:
         # blocked integer flash over KV (fp32 carry), per-batch vmap
         fn = lambda qq, kk, vv: flash_qattention_jax(
             qq, kk, vv, aq["M_idx"], aq["sh_idx"], _lut_q7(),
@@ -120,39 +161,32 @@ def _attn_prefill(x_i8, f, cfg, pos):
                            vc.transpose(0, 2, 1, 3))      # (B,H,S,D) int8
     else:
         # bidirectional (BERT): paper-style row LUT softmax, materialized
-        group = nh // nkv
-        kg = jnp.repeat(kc, group, axis=2)
-        vg = jnp.repeat(vc, group, axis=2)
-        scores = jax.lax.dot_general(
-            qc.transpose(0, 2, 1, 3), kg.transpose(0, 2, 3, 1),
-            (((3,), (2,)), ((0, 1), (0, 1))),
-            preferred_element_type=jnp.int32)             # (B,H,S,S)
-        probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
-        pv = jax.lax.dot_general(
-            probs.astype(jnp.int8), vg.transpose(0, 2, 1, 3),
-            (((3,), (2,)), ((0, 1), (0, 1))),
-            preferred_element_type=jnp.int32)
-        ctx = jnp.clip(fxp.rescale(pv, aq["M_pv"], aq["sh_pv"]),
-                       -127, 127).astype(jnp.int8)
+        ctx = _attn_rows_q8(qc, kc, vc, aq, cfg, None)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
     out = _lin(ctx, f["wo"])
     return out, kc, vc
 
 
-def _attn_decode(x_i8, f, cfg, cache, pos_scalar):
-    """x (B,1,d); cache {'k','v'}: (B, Smax, Hkv, hd) int8.  pos may be traced."""
+def _attn_decode(x_i8, f, cfg, cache, pos_offset):
+    """x (B,1,d); cache {'k','v'}: (B, Smax, Hkv, hd) int8.
+
+    ``pos_offset`` may be a traced scalar (lockstep: all slots at the same
+    depth) or a traced (B,) vector of per-slot positions (continuous
+    batching: every slot decodes at its own depth within one compiled step).
+    """
     b, s, d = x_i8.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     smax = cache["k"].shape[1]
+    pos_vec = _pos_vector(pos_offset, b)                  # (B,) int32
     h = _ln(x_i8, f["ln1"], cfg)
     qc = _lin(h, f["wq"]).reshape(b, s, nh, hd)
     kc = _lin(h, f["wk"]).reshape(b, s, nkv, hd)
     vc = _lin(h, f["wv"]).reshape(b, s, nkv, hd)
     aq = f["attn_q"]
     if cfg.mrope_sections is not None:
-        pos = jnp.broadcast_to(pos_scalar, (b, s, 3)).astype(jnp.int32)
+        pos = jnp.broadcast_to(pos_vec[:, None, None], (b, s, 3))
     else:
-        pos = jnp.broadcast_to(pos_scalar, (b, s)).astype(jnp.int32)
+        pos = jnp.broadcast_to(pos_vec[:, None], (b, s))
     qc = _rope_island(qc, aq["inv_s_qp"], aq["s_q"], pos, cfg, aq.get("qn"))
     kc = _rope_island(kc, aq["inv_s_kp"], aq["s_k"], pos, cfg, aq.get("kn"))
     # match the cache layout before the in-place update (avoids the SPMD
@@ -162,35 +196,48 @@ def _attn_decode(x_i8, f, cfg, cache, pos_scalar):
     if dpax:
         kc = Pt.constrain(kc, dpax, None, None, "model")
         vc = Pt.constrain(vc, dpax, None, None, "model")
-    # ring-buffer write for SWA; plain append otherwise
-    widx = (pos_scalar % smax) if cfg.sliding_window else pos_scalar
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], kc, (0, widx, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], vc, (0, widx, 0, 0))
+    # per-slot ring-buffer write for SWA; plain per-slot append otherwise
+    widx = (pos_vec % smax) if cfg.sliding_window else pos_vec
+    upd = jax.vmap(lambda c, u, w: jax.lax.dynamic_update_slice(c, u, (w, 0, 0)))
+    k_cache = upd(cache["k"], kc, widx)
+    v_cache = upd(cache["v"], vc, widx)
     group = nh // nkv
-    # GQA WITHOUT materializing repeated KV: q heads grouped per kv head and
-    # batched into the dot.  The jnp.repeat formulation multiplies KV-cache
-    # HBM traffic by `group` (16x on llama3-405b) — EXPERIMENTS.md §Perf it.3.
     assert s == 1
-    qg = qc.reshape(b, nkv, group, hd)                    # (B,kv,g,hd) int8
-    kt = k_cache.transpose(0, 2, 3, 1)                    # (B,kv,hd,Smax) int8
-    scores = jax.lax.dot_general(
-        qg, kt, (((3,), (2,)), ((0, 1), (0, 1))),
-        preferred_element_type=jnp.int32)                 # (B,kv,g,Smax)
-    slot = jnp.arange(smax)
     if cfg.sliding_window:
-        valid = slot < jnp.minimum(pos_scalar + 1, smax)
+        lengths = jnp.minimum(pos_vec + 1, smax)          # valid ring prefix
     else:
-        valid = slot <= pos_scalar
-    scores = jnp.where(valid[None, None, None, :], scores,
-                       scores - MASK_OFFSET)
-    probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
-    vt = v_cache.transpose(0, 2, 1, 3)                    # (B,kv,Smax,hd)
-    pv = jax.lax.dot_general(
-        probs.astype(jnp.int8), vt, (((3,), (2,)), ((0, 1), (0, 1))),
-        preferred_element_type=jnp.int32)                 # (B,kv,g,hd)
-    pv = pv.reshape(b, nh, s, hd)                         # == (B,H,1,hd)
-    ctx = fxp.rescale(pv, aq["M_pv"], aq["sh_pv"])
-    ctx = jnp.clip(ctx, -127, 127).astype(jnp.int8)
+        lengths = pos_vec + 1
+    qg = qc.reshape(b, nkv, group, hd)                    # (B,kv,g,hd) int8
+    if ops.backend() == "pallas":
+        # TPU fast path: cache-native layout straight into the kernel (no
+        # per-step transpose of the whole cache), one KV stream per block
+        # shared by the whole q group, per-slot length masking inside.
+        from repro.kernels.decode_attention import decode_qattention
+        ctx = decode_qattention(
+            qg, k_cache, v_cache, lengths,
+            aq["M_idx"], aq["sh_idx"], _lut_q7(),
+            aq["inv_s_logit"], aq["out_scale"])           # (B,kv,g,hd) int8
+    else:
+        # GQA WITHOUT materializing repeated KV: q heads grouped per kv head
+        # and batched into the dot.  The jnp.repeat formulation multiplies
+        # KV-cache HBM traffic by `group` (16x on llama3-405b) —
+        # EXPERIMENTS.md §Perf it.3.
+        kt = k_cache.transpose(0, 2, 3, 1)                # (B,kv,hd,Smax) int8
+        scores = jax.lax.dot_general(
+            qg, kt, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)             # (B,kv,g,Smax)
+        slot = jnp.arange(smax)
+        valid = slot[None, :] < lengths[:, None]          # (B,Smax)
+        scores = jnp.where(valid[:, None, None, :], scores,
+                           scores - MASK_OFFSET)
+        probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
+        vt = v_cache.transpose(0, 2, 1, 3)                # (B,kv,Smax,hd)
+        pv = jax.lax.dot_general(
+            probs.astype(jnp.int8), vt, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)             # (B,kv,g,hd)
+        ctx = jnp.clip(fxp.rescale(pv, aq["M_pv"], aq["sh_pv"]),
+                       -127, 127).astype(jnp.int8)
+    ctx = ctx.reshape(b, nh, s, hd)                       # == (B,H,1,hd)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
     out = _lin(ctx, f["wo"])
     return out, {"k": k_cache, "v": v_cache}
@@ -344,10 +391,17 @@ def _xlstm_int(x_i8, f, cfg, state, kind):
 
 # --- whole-model serving forward -----------------------------------------------
 
+def cache_rows(cfg: ModelConfig, max_len: int) -> int:
+    """KV rows allocated per slot (the SWA ring buffer is window-sized).
+    Single source of truth shared by init_cache and the serving engine's
+    one-shot-prefill eligibility check."""
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     """Per-slot decode state, stacked (n_reps, ...)."""
     kinds = slot_kinds(cfg)
-    smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    smax = cache_rows(cfg, max_len)
     cache = {}
     for i, (mixer, _) in enumerate(kinds):
         if mixer == "attn":
@@ -393,8 +447,16 @@ def serve_forward(
     extra_embeds_i8: Optional[jax.Array] = None,
     pos3: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Integer forward.  prefill: tokens (B,S) [no cache update — evaluation
-    path]; decode: tokens (B,1) + cache -> (logits, new_cache)."""
+    """Integer forward.
+
+    prefill without cache: tokens (B,S) -> logits (evaluation path, no cache
+    update).  prefill WITH cache (attention archs only): additionally writes
+    the per-layer K/V rows for positions [0, S) into the cache and returns it
+    — the one-shot admission path of the continuous-batching engine, computed
+    through the decode-identical row datapath so a later decode continues
+    bit-exactly.  decode: tokens (B,1) + cache -> (logits, new_cache);
+    ``pos_offset`` is a scalar or a per-slot (B,) vector.
+    """
     global _W_BITS
     _W_BITS = cfg.quant.w_bits
     kinds = slot_kinds(cfg)
@@ -404,11 +466,11 @@ def serve_forward(
     b, s = x.shape[0], x.shape[1]
     if cfg.learned_pos:
         if mode == "decode":
-            posrow = jax.lax.dynamic_slice_in_dim(
-                folded["embed"]["pos_i8"], pos_offset, 1, 0)
+            posrow = jnp.take(folded["embed"]["pos_i8"],
+                              _pos_vector(pos_offset, b), axis=0)[:, None]
         else:
-            posrow = folded["embed"]["pos_i8"][:s]
-        x = jnp.clip(x.astype(jnp.int32) + posrow[None].astype(jnp.int32),
+            posrow = folded["embed"]["pos_i8"][:s][None]
+        x = jnp.clip(x.astype(jnp.int32) + posrow.astype(jnp.int32),
                      -127, 127).astype(jnp.int8)
     if mode == "decode":
         pos = None
@@ -427,8 +489,20 @@ def serve_forward(
                 if mode == "decode":
                     out, nc = _attn_decode(x_i8, f, cfg, cslot, pos_offset)
                 else:
-                    out, _, _ = _attn_prefill(x_i8, f, cfg, pos)
-                    nc = cslot
+                    # cached prefill matches the decode datapath per backend:
+                    # row-exact q8 softmax mirrors the jnp decode (bit-exact
+                    # continuation); on pallas both sides use the q7 flash
+                    # family instead (self-consistent, not bit-identical)
+                    row_exact = cslot is not None and ops.backend() != "pallas"
+                    out, kc, vc = _attn_prefill(x_i8, f, cfg, pos,
+                                                row_exact=row_exact)
+                    if cslot is not None:   # one-shot prefill into the cache
+                        nc = {"k": jax.lax.dynamic_update_slice(
+                                  cslot["k"], kc, (0, 0, 0, 0)),
+                              "v": jax.lax.dynamic_update_slice(
+                                  cslot["v"], vc, (0, 0, 0, 0))}
+                    else:
+                        nc = cslot
             elif mixer == "mamba":
                 out, nc = _mamba_int(x_i8, f, cfg,
                                      cslot if mode == "decode" else None)

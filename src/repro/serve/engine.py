@@ -1,15 +1,28 @@
-"""Batched serving engine over the folded integer model.
+"""Serving engines over the folded integer model.
 
-Continuous-batching-lite: requests join a fixed-size slot table; each engine
-step decodes one token for every active slot (the decode graph is compiled
-once for the full batch — idle slots carry a pad token).  Prefill fills the
-quantized KV cache slot-by-slot via the decode graph for SSM/hybrid archs or
-in one shot for attention archs.  Greedy or temperature sampling.
+``Engine`` — true continuous batching: a fixed slot table shares one compiled
+decode graph; every slot carries its own position (per-slot ``pos`` vector
+into ``serve_forward``), requests are admitted mid-flight into free slots and
+evicted on EOS/max-tokens by the ``Scheduler``.  Attention architectures
+prefill in ONE forward (``serve_forward(mode="prefill")`` with a cache)
+through the decode-identical row datapath, so on the ref/interpret kernel
+backends (CPU serving and CI) a request's greedy tokens are bit-for-bit what
+the lockstep engine produces for it alone — continuous batching changes
+throughput, not outputs.  On the compiled pallas backend both prefill and
+decode dispatch to the q7 flash kernels instead (self-consistent integer
+datapath, but not bit-identical to the jnp path).  SSM/hybrid architectures
+(whose prefill is a recurrence) fall back to a batch-1 decode-loop prefill.
+
+``LockstepEngine`` — the original batch demo (kept as the benchmark baseline
+and for SSM/audio archs): lockstep decoding with one shared position scalar,
+prefill replayed token-by-token for the whole batch, admission only between
+``generate()`` calls.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import math
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +30,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import serve_int as S
+from repro.models.transformer import slot_kinds
+from repro.serve.scheduler import Scheduler, SlotState
 
 
 @dataclasses.dataclass
@@ -24,10 +39,219 @@ class Request:
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    eos_token: Optional[int] = None
     out: Optional[np.ndarray] = None
 
 
+def supports_continuous(cfg: ModelConfig) -> bool:
+    """Continuous batching serves single-head token-LM archs; codebook/audio
+    and multi-head archs go through LockstepEngine (see make_engine)."""
+    return cfg.frontend == "none" and cfg.n_lm_heads == 1
+
+
+def make_engine(cfg: ModelConfig, folded, **kw):
+    """The continuous engine when the arch supports it, else the lockstep
+    baseline (same generate() surface)."""
+    cls = Engine if supports_continuous(cfg) else LockstepEngine
+    if cls is LockstepEngine:
+        kw.pop("prefill_bucket", None)
+    return cls(cfg, folded, **kw)
+
+
 class Engine:
+    """Continuous-batching integer serving engine."""
+
+    def __init__(self, cfg: ModelConfig, folded, *, batch_slots: int = 8,
+                 max_len: int = 512, seed: int = 0, prefill_bucket: int = 16):
+        assert supports_continuous(cfg), \
+            "continuous engine serves token-LM archs; use LockstepEngine"
+        self.cfg = cfg
+        self.folded = folded
+        self.batch = batch_slots
+        self.max_len = max_len
+        self.smax = S.cache_rows(cfg, max_len)
+        self.prefill_bucket = prefill_bucket
+        self.rng = np.random.default_rng(seed)
+        # one-shot prefill needs every mixer to be cache-writing attention
+        self._attn_only = cfg.causal and \
+            all(m == "attn" for m, _ in slot_kinds(cfg))
+        self.sched = Scheduler(batch_slots)
+        self.requests: Dict[int, Request] = {}
+        self.cache = S.init_cache(cfg, batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.stats = self._zero_stats()
+
+        def decode_step(folded_, cache, tok, pos):
+            return S.serve_forward(cfg, folded_, tok, cache=cache,
+                                   pos_offset=pos, mode="decode")
+
+        # one graph for the slot table AND (by retrace) the batch-1 prefill loop
+        self._decode = jax.jit(decode_step, donate_argnums=(1,))
+
+        def prefill(folded_, toks):
+            cache1 = S.init_cache(cfg, 1, max_len)
+            return S.serve_forward(cfg, folded_, toks, cache=cache1,
+                                   mode="prefill")
+
+        self._prefill = jax.jit(prefill)    # retraces per bucketed length
+
+        def write_slot(cache, cache1, b):
+            def put(c, c1):
+                starts = (0, b) + (0,) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(c, c1, starts)
+            return jax.tree.map(put, cache, cache1)
+
+        self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
+
+    @staticmethod
+    def _zero_stats() -> Dict[str, int]:
+        return dict(prefill_tokens=0, oneshot_prefills=0,
+                    loop_prefill_steps=0, decode_steps=0, decode_tokens=0,
+                    completed=0)
+
+    def reset(self, seed: int = 0):
+        """Clear all serving state; keeps the compiled graphs."""
+        self.sched = Scheduler(self.batch)
+        self.requests = {}
+        self.cache = S.init_cache(self.cfg, self.batch, self.max_len)
+        self.pos = np.zeros(self.batch, np.int32)
+        self.rng = np.random.default_rng(seed)
+        self.stats = self._zero_stats()
+
+    # --- request lifecycle ----------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        ln = len(request.prompt)
+        assert ln >= 1 and request.max_new_tokens >= 1
+        if not self.cfg.sliding_window:
+            if ln + request.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request needs {ln + request.max_new_tokens} cache rows, "
+                    f"engine max_len={self.max_len}")
+        rid = self.sched.submit(request)
+        self.requests[rid] = request
+        return rid
+
+    def _pick_token(self, logits_row: np.ndarray, req: Request) -> int:
+        if req.temperature > 0:
+            z = logits_row / max(req.temperature, 1e-4)
+            z = z + self.rng.gumbel(size=z.shape)
+            return int(np.argmax(z))
+        return int(np.argmax(logits_row))
+
+    def _prefill_request(self, req: Request) -> Tuple[np.ndarray, object, int]:
+        """Build the batch-1 cache for a prompt; returns (last-position
+        logits (V,), cache1, prompt_len)."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        ln = len(prompt)
+        if self._attn_only and ln <= self.smax:
+            # one-shot: pad to a bucket so compiled prefill shapes are reused;
+            # a pad row at cache index r is overwritten by the decode step at
+            # pos == r — the same step whose mask first admits index r — so
+            # pad garbage is never attended
+            bl = min(max(self.prefill_bucket,
+                         math.ceil(ln / self.prefill_bucket)
+                         * self.prefill_bucket), self.smax)
+            toks = np.zeros((1, bl), np.int32)
+            toks[0, :ln] = prompt
+            logits, cache1 = self._prefill(self.folded, jnp.asarray(toks))
+            self.stats["oneshot_prefills"] += 1
+            self.stats["prefill_tokens"] += ln
+            return np.asarray(logits[0, ln - 1]), cache1, ln
+        # recurrence (SSM/hybrid) or over-long SWA prompt: batch-1 decode loop
+        cache1 = S.init_cache(self.cfg, 1, self.max_len)
+        logits = None
+        for t in range(ln):
+            logits, cache1 = self._decode(
+                self.folded, cache1, jnp.asarray(prompt[t].reshape(1, 1)),
+                jnp.asarray(np.asarray([t], np.int32)))
+            self.stats["loop_prefill_steps"] += 1
+        self.stats["prefill_tokens"] += ln
+        return np.asarray(logits[0, -1]), cache1, ln
+
+    def _finish(self, b: int):
+        st = self.sched.evict(b)
+        req = self.requests.pop(st.rid)
+        req.out = np.asarray(st.emitted, np.int32)
+        self.pos[b] = 0
+        self.stats["completed"] += 1
+
+    def _done(self, st: SlotState) -> bool:
+        req = st.request
+        if len(st.emitted) >= req.max_new_tokens:
+            return True
+        return req.eos_token is not None and st.emitted and \
+            st.emitted[-1] == req.eos_token
+
+    def _admit(self) -> List[Tuple[int, int]]:
+        emitted = []
+        for b, st in self.sched.admit():
+            last_logits, cache1, ln = self._prefill_request(st.request)
+            self.cache = self._write_slot(self.cache, cache1,
+                                          jnp.int32(b))
+            self.pos[b] = ln
+            st.pos = ln
+            tok = self._pick_token(last_logits, st.request)
+            st.last_token = tok
+            st.emitted.append(tok)
+            emitted.append((st.rid, tok))
+            if self._done(st):
+                self._finish(b)
+        return emitted
+
+    # --- the engine loop ------------------------------------------------
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One scheduler tick: admit waiting requests into free slots, then
+        decode one token for every active slot.  Returns (rid, token) pairs
+        emitted this tick."""
+        emitted = self._admit()
+        active = self.sched.active
+        if not active:
+            return emitted
+        toks = np.zeros((self.batch, 1), np.int32)
+        for b in active:
+            toks[b, 0] = self.sched.slots[b].last_token
+        logits, self.cache = self._decode(self.folded, self.cache,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(self.pos))
+        rows = np.asarray(logits[:, -1])          # (B, V)
+        for b in active:
+            st = self.sched.slots[b]
+            self.pos[b] += 1
+            st.pos += 1
+            tok = self._pick_token(rows[b], st.request)
+            st.last_token = tok
+            st.emitted.append(tok)
+            emitted.append((st.rid, tok))
+            if self._done(st):
+                self._finish(b)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(active)
+        return emitted
+
+    def run(self) -> List[Tuple[int, int]]:
+        """Drain the queue; returns every (rid, token) emitted."""
+        out = []
+        while self.sched.has_work:
+            out.extend(self.step())
+        return out
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Batch convenience API: submit everything, drain, return the same
+        requests with ``.out`` filled (continuous batching inside)."""
+        for r in requests:
+            self.submit(r)
+        self.run()
+        return requests
+
+
+class LockstepEngine:
+    """The original lockstep engine: one shared position scalar, prefill
+    replayed through the decode graph for the whole (same-length) batch.
+    Kept as the serve_bench baseline and for archs the continuous engine
+    doesn't take (audio codebooks)."""
+
     def __init__(self, cfg: ModelConfig, folded, *, batch_slots: int = 8,
                  max_len: int = 512, seed: int = 0):
         self.cfg = cfg
@@ -38,11 +262,16 @@ class Engine:
         self.pos = np.zeros(batch_slots, np.int32)
         self.key = jax.random.PRNGKey(seed)
 
-        def decode_step(folded, cache, tok, pos):
-            return S.serve_forward(cfg, folded, tok, cache=cache,
+        def decode_step(folded_, cache, tok, pos):
+            return S.serve_forward(cfg, folded_, tok, cache=cache,
                                    pos_offset=pos, mode="decode")
 
         self._decode = jax.jit(decode_step, donate_argnums=(1,))
+
+    def reset(self, seed: int = 0):
+        self.cache = S.init_cache(self.cfg, self.batch, self.max_len)
+        self.pos = np.zeros(self.batch, np.int32)
+        self.key = jax.random.PRNGKey(seed)
 
     def _step(self, tokens_col: np.ndarray, pos_scalar: int):
         tok = jnp.asarray(tokens_col).reshape(self.batch, 1)

@@ -1,0 +1,76 @@
+"""Slot-table scheduler for the continuous-batching engine.
+
+The decode graph is compiled once for a fixed number of slots; this module
+owns the bookkeeping that lets requests stream through that fixed shape:
+a FIFO waiting queue, a slot table, admission of waiting requests into free
+slots, and eviction on completion.  It is deliberately model-agnostic — the
+engine owns prefill/decode; the scheduler only decides *who sits where*.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class SlotState:
+    """One occupied slot of the decode batch."""
+    rid: int
+    request: object                 # the engine's Request
+    pos: int = 0                    # next cache write position for this slot
+    last_token: int = 0             # token to feed at the next decode step
+    emitted: List[int] = dataclasses.field(default_factory=list)
+
+
+class Scheduler:
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self.slots: List[Optional[SlotState]] = [None] * n_slots
+        self.waiting: Deque[Tuple[int, object]] = collections.deque()
+        self._next_rid = 0
+
+    # --- queue side -----------------------------------------------------
+
+    def submit(self, request) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append((rid, request))
+        return rid
+
+    # --- slot side ------------------------------------------------------
+
+    def admit(self) -> List[Tuple[int, SlotState]]:
+        """Seat waiting requests in free slots (FIFO).  Returns the new
+        (slot index, state) pairs; the engine prefills them and fills in
+        ``pos`` / ``last_token``."""
+        placed = []
+        for b in range(self.n_slots):
+            if self.slots[b] is not None or not self.waiting:
+                continue
+            rid, request = self.waiting.popleft()
+            st = SlotState(rid=rid, request=request)
+            self.slots[b] = st
+            placed.append((b, st))
+        return placed
+
+    def evict(self, b: int) -> SlotState:
+        st = self.slots[b]
+        assert st is not None, f"evicting empty slot {b}"
+        self.slots[b] = None
+        return st
+
+    # --- queries --------------------------------------------------------
+
+    @property
+    def active(self) -> List[int]:
+        return [b for b, st in enumerate(self.slots) if st is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(st is not None for st in self.slots)
+
+    @property
+    def n_free(self) -> int:
+        return sum(st is None for st in self.slots)

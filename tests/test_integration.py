@@ -81,6 +81,7 @@ def test_engine_generates_and_is_deterministic():
     assert all(len(o) == 5 for o in a)
 
 
+@pytest.mark.slow
 def test_swa_ring_buffer_decode_matches_prefill_tail():
     """Mixtral-style SWA: decode past the window via the ring buffer must
     agree with a windowed prefill on the same tokens."""

@@ -167,6 +167,58 @@ def test_ops_dispatch_ref_vs_interpret():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("bkv", [128, 32, 64, 48])  # 48: falls back to a
+def test_decode_attention_batched_per_slot_lengths(bkv):  # divisor of smax
+    """Continuous-batching decode kernel: every slot masked to its own cache
+    prefix, bit-exact vs. the row oracle (single block) and within 1 LSB
+    when the fp32 carry spans blocks."""
+    from repro.kernels.decode_attention import decode_qattention
+
+    b, hkv, g, smax, d = 4, 2, 4, 128, 64
+    rng = np.random.default_rng(19)
+    q = rng.integers(-64, 65, (b, hkv, g, d)).astype(np.int8)
+    # kernel takes the cache-NATIVE layout (B, Smax, Hkv, D)
+    k = rng.integers(-64, 65, (b, smax, hkv, d)).astype(np.int8)
+    v = rng.integers(-64, 65, (b, smax, hkv, d)).astype(np.int8)
+    lengths = np.asarray([1, 37, 64, 128], np.int32)   # mixed-depth slots
+    s_logit = 1.0 / (0.05 * np.sqrt(d))
+    M, sh = fxp.quantize_multiplier(1.0 / (s_logit * qs.LUT_DELTA))
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    got = np.asarray(decode_qattention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lengths),
+        jnp.int32(M), jnp.int32(sh), lut7, jnp.float32(1.0 / s_logit),
+        jnp.float32(1.0), bkv=bkv, interpret=True), np.int32)
+    want = np.asarray(R.decode_qattention_ref(
+        jnp.asarray(q), jnp.asarray(k.transpose(0, 2, 1, 3)),
+        jnp.asarray(v.transpose(0, 2, 1, 3)), jnp.asarray(lengths),
+        jnp.int32(M), jnp.int32(sh), lut7, jnp.float32(1.0)), np.int32)
+    if bkv >= smax:
+        np.testing.assert_array_equal(got, want)
+    else:
+        assert np.max(np.abs(got - want)) <= 1
+
+
+def test_decode_attention_ops_dispatch():
+    """ops.decode_attention_q: ref and interpret backends agree (single
+    block -> bit-exact)."""
+    b, hkv, g, smax, d = 2, 1, 2, 64, 32
+    rng = np.random.default_rng(23)
+    q = jnp.asarray(rng.integers(-64, 65, (b, hkv, g, d)).astype(np.int8))
+    k = jnp.asarray(rng.integers(-64, 65, (b, smax, hkv, d)).astype(np.int8))
+    v = jnp.asarray(rng.integers(-64, 65, (b, smax, hkv, d)).astype(np.int8))
+    lengths = jnp.asarray([5, 64], jnp.int32)
+    s_logit = 1.0 / (0.05 * np.sqrt(d))
+    M, sh = fxp.quantize_multiplier(1.0 / (s_logit * qs.LUT_DELTA))
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    a = ops.decode_attention_q(q, k, v, lengths, jnp.int32(M), jnp.int32(sh),
+                               lut7, jnp.float32(1.0 / s_logit),
+                               jnp.float32(1.0), impl="ref")
+    c = ops.decode_attention_q(q, k, v, lengths, jnp.int32(M), jnp.int32(sh),
+                               lut7, jnp.float32(1.0 / s_logit),
+                               jnp.float32(1.0), impl="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
 @pytest.mark.parametrize("bkv,cache_len", [(128, 128), (32, 100), (64, 37)])
 def test_flash_qdecode_matches_row_oracle(bkv, cache_len):
     """GQA decode kernel (KV streamed once per block for the whole q group)

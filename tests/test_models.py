@@ -99,6 +99,7 @@ def test_grad_accum_matches_single_batch_direction():
     assert max(jax.tree.leaves(d)) < 5e-3
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["yi-6b", "jamba-1.5-large-398b",
                                   "xlstm-1.3b", "mixtral-8x22b"])
 def test_integer_serving_decode_matches_prefill(arch):

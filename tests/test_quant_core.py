@@ -3,7 +3,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # hypothesis is a dev-only dependency (requirements-dev.txt).  Without it
+    # the property tests are skipped but every deterministic test still runs,
+    # so the tier-1 suite collects cleanly in minimal environments.
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r "
+                   "requirements-dev.txt)")(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies`` at decoration time only."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
 
 from repro.core import fixedpoint as fxp
 from repro.core import packing as pk
