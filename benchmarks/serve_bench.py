@@ -1,28 +1,33 @@
-"""Serving throughput: continuous batching vs. the lockstep baseline on a
-mixed-length Poisson-arrival workload.
+"""Serving throughput: cache layouts (paged vs contiguous) and engines
+(continuous vs lockstep) over the same folded integer model.
 
-A workload of N requests is drawn from a Poisson arrival process with prompt
-lengths mixed over a palette (16-256 tokens by default) and per-request decode
-budgets.  Both engines process the SAME request set over the same folded
-integer model:
+Workloads (``--workload``):
 
-  * ``LockstepEngine`` — static batching: requests are grouped by prompt
-    length (so left-padding never contaminates positions and its outputs are
-    per-request correct), each group decoded in lockstep to the group's
-    longest budget.
-  * ``Engine`` — continuous batching: requests arrive over virtual time
-    (one tick per decode step, idle gaps fast-forwarded) and stream through
-    the slot table; admissions prefill in one shot; slots are evicted and
-    refilled mid-flight.  The lockstep baseline ignores arrival times
-    entirely (sees the whole workload upfront), which favors the baseline.
+  * ``poisson`` — N requests from a Poisson arrival process, prompt lengths
+    mixed over a palette (16-256 tokens by default), per-request decode
+    budgets.
+  * ``prefix`` — the millions-of-users shape: every request shares one long
+    system prompt (``--prefix-len``) followed by a short unique suffix drawn
+    from the length palette.  The paged engine's block-table allocator maps
+    the shared prefix pages copy-on-write, so repeated prompts skip both the
+    prefill compute and the pages.
 
-Greedy outputs must be identical per request — continuous batching changes
-throughput, not tokens.  (The throughput win applies to attention archs,
-where admission prefills in one shot; SSM/hybrid archs prefill via a
-batch-1 recurrence loop and generally still favor the lockstep baseline.)  Prints ``name,value,derived`` CSV; ``--json`` also
-writes a BENCH_PR.json artifact for the CI perf trajectory.
+Engines/layouts (``--layout``):
+
+  * ``contiguous`` — lockstep baseline vs the continuous engine on the dense
+    per-slot cache (the pre-paging A/B).
+  * ``paged``      — continuous engine, contiguous vs PAGED cache layout:
+    same requests, same greedy tokens, different cache addressing.
+  * ``both``       — all three (default).
+
+Greedy outputs must be identical per request across every engine/layout off
+the compiled pallas backend — layouts change throughput and memory, not
+tokens; the bench exits non-zero on a mismatch.  Prints ``name,value,
+derived`` CSV; ``--json`` also writes a BENCH_PR.json artifact (tokens/s per
+engine, peak cache pages, prefix-reuse stats) for the CI perf trajectory.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json BENCH_PR.json
+    PYTHONPATH=src python benchmarks/serve_bench.py --workload prefix --layout paged
     PYTHONPATH=src python benchmarks/serve_bench.py --arch yi-6b --requests 24
 """
 from __future__ import annotations
@@ -39,26 +44,33 @@ import jax
 import numpy as np
 
 
-def make_workload(rng, n_requests, lengths, rate, max_new_range):
+def make_workload(rng, n_requests, lengths, rate, max_new_range,
+                  prefix_len=0):
     """Poisson arrivals: exponential interarrival gaps (unit = decode steps),
-    uniform prompt-length palette, uniform decode budgets."""
+    uniform prompt-length palette, uniform decode budgets.  With
+    ``prefix_len`` the palette lengths become suffixes after one shared
+    system prompt."""
     t = 0.0
     work = []
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
         work.append(dict(
             arrival=t,
-            prompt_len=int(rng.choice(lengths)),
+            prompt_len=prefix_len + int(rng.choice(lengths)),
             max_new=int(rng.integers(*max_new_range)),
         ))
     return work
 
 
-def build_requests(Request, rng, work, vocab):
-    return [Request(prompt=rng.integers(0, vocab, (w["prompt_len"],)
-                                        ).astype(np.int32),
-                    max_new_tokens=w["max_new"])
-            for w in work]
+def build_requests(Request, rng, work, vocab, prefix=None):
+    reqs = []
+    for w in work:
+        suffix_len = w["prompt_len"] - (len(prefix) if prefix is not None
+                                        else 0)
+        suffix = rng.integers(0, vocab, (suffix_len,)).astype(np.int32)
+        prompt = suffix if prefix is None else np.concatenate([prefix, suffix])
+        reqs.append(Request(prompt=prompt, max_new_tokens=w["max_new"]))
+    return reqs
 
 
 def run_lockstep(eng, requests):
@@ -97,6 +109,15 @@ def run_continuous(eng, requests, work):
     return requests
 
 
+def _timed(runner, eng, fresh, *extra):
+    """Warmup pass (compilation) then a timed pass on fresh state."""
+    runner(eng, fresh(), *extra)
+    eng.reset()
+    t0 = time.perf_counter()
+    out = runner(eng, fresh(), *extra)
+    return out, time.perf_counter() - t0
+
+
 def bench(args):
     from repro.configs import smoke_config
     from repro.launch.serve import calibrated_folded
@@ -108,70 +129,99 @@ def bench(args):
     folded = calibrated_folded(cfg, key, calib)
 
     lengths = [int(x) for x in args.lengths.split(",")]
-    max_len = max(lengths) + args.max_new_hi + 1
+    prefix_len = args.prefix_len if args.workload == "prefix" else 0
+    max_len = prefix_len + max(lengths) + args.max_new_hi + 1
     rng = np.random.default_rng(args.seed)
     work = make_workload(rng, args.requests, lengths, args.rate,
-                         (args.max_new_lo, args.max_new_hi))
-
-    cont = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len)
-    lock = LockstepEngine(cfg, folded, batch_slots=args.slots,
-                          max_len=max_len)
+                         (args.max_new_lo, args.max_new_hi),
+                         prefix_len=prefix_len)
+    prefix = (np.random.default_rng(args.seed + 7)
+              .integers(0, cfg.vocab_size, (prefix_len,)).astype(np.int32)
+              if prefix_len else None)
 
     def fresh():
         r = np.random.default_rng(args.seed + 1)
-        return build_requests(Request, r, work, cfg.vocab_size)
+        return build_requests(Request, r, work, cfg.vocab_size, prefix=prefix)
 
-    # warmup pass (compilation), then the timed pass on fresh state
-    run_lockstep(lock, fresh())
-    lock.reset()
-    t0 = time.perf_counter()
-    lock_out = run_lockstep(lock, fresh())
-    lock_s = time.perf_counter() - t0
+    run_lock = args.layout in ("contiguous", "both")
+    run_paged = args.layout in ("paged", "both")
 
-    run_continuous(cont, fresh(), work)
-    cont.reset()
-    t0 = time.perf_counter()
-    cont_out = run_continuous(cont, fresh(), work)
-    cont_s = time.perf_counter() - t0
+    rows, artifact = [], dict(
+        bench="serve_layouts", workload=args.workload, arch=cfg.name,
+        slots=args.slots, requests=args.requests, lengths=lengths,
+        prefix_len=prefix_len, page_size=args.page_size)
+    n_tok = n_prompt = None
+    outs = {}
 
-    from repro.kernels import ops
-    match = all(a.out.tolist() == b.out.tolist()
-                for a, b in zip(lock_out, cont_out))
-    # bit-identity between the engines is only guaranteed off the compiled
-    # pallas backend (engine.py docstring): there prefill (q7 flash) and
-    # decode kernel may differ in the last LSB, flipping rare argmax ties
-    match_enforced = ops.backend() != "pallas"
+    cont = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
+                  cache_layout="contiguous")
+    cont_out, cont_s = _timed(run_continuous, cont, fresh, work)
     n_tok = sum(len(r.out) for r in cont_out)
     n_prompt = sum(len(r.prompt) for r in cont_out)
-    lock_tps = n_tok / lock_s
     cont_tps = n_tok / cont_s
+    outs["contiguous"] = [r.out.tolist() for r in cont_out]
+    # the dense layout reserves its whole footprint up front: page-equivalent
+    # is slots x blocks-per-stripe, the number the paged pool competes with
+    cont_pages = args.slots * -(-cont.smax // args.page_size)
+    rows.append(("serve/continuous_tok_per_s", cont_tps,
+                 f"wall={cont_s:.2f}s_gen={n_tok}_prompt={n_prompt}"))
+    artifact.update(generated_tokens=n_tok, prompt_tokens=n_prompt,
+                    continuous_tok_per_s=round(cont_tps, 2),
+                    contiguous_page_equiv=cont_pages,
+                    engine_stats=cont.stats)
 
-    rows = [
-        ("serve/lockstep_tok_per_s", lock_tps,
-         f"wall={lock_s:.2f}s_gen={n_tok}_prompt={n_prompt}"),
-        ("serve/continuous_tok_per_s", cont_tps,
-         f"wall={cont_s:.2f}s_oneshot_prefills="
-         f"{cont.stats['oneshot_prefills']}"),
-        ("serve/continuous_speedup", cont_tps / lock_tps,
-         f"outputs_match={match}"),
-    ]
+    if run_lock:
+        lock = LockstepEngine(cfg, folded, batch_slots=args.slots,
+                              max_len=max_len)
+        lock_out, lock_s = _timed(run_lockstep, lock, fresh)
+        lock_tps = n_tok / lock_s
+        outs["lockstep"] = [r.out.tolist() for r in lock_out]
+        rows.insert(0, ("serve/lockstep_tok_per_s", lock_tps,
+                        f"wall={lock_s:.2f}s"))
+        rows.append(("serve/continuous_speedup", cont_tps / lock_tps, ""))
+        artifact.update(lockstep_tok_per_s=round(lock_tps, 2),
+                        speedup=round(cont_tps / lock_tps, 3))
+
+    if run_paged:
+        paged = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
+                       cache_layout="paged", page_size=args.page_size)
+        paged_out, paged_s = _timed(run_continuous, paged, fresh, work)
+        paged_tps = n_tok / paged_s
+        outs["paged"] = [r.out.tolist() for r in paged_out]
+        peak = paged.stats["cache_pages_peak"]
+        rows.append(("serve/paged_tok_per_s", paged_tps,
+                     f"wall={paged_s:.2f}s_prefix_hits="
+                     f"{paged.stats['prefix_hits']}"))
+        rows.append(("serve/paged_vs_contiguous_speedup",
+                     paged_tps / cont_tps, ""))
+        rows.append(("serve/paged_peak_pages", peak,
+                     f"contiguous_equiv={cont_pages}"))
+        artifact.update(paged_tok_per_s=round(paged_tps, 2),
+                        paged_vs_contiguous_speedup=round(paged_tps / cont_tps,
+                                                          3),
+                        paged_peak_pages=peak,
+                        paged_engine_stats=paged.stats)
+
+    from repro.kernels import ops
+    ref_outputs = outs["contiguous"]
+    match = all(o == ref_outputs for o in outs.values())
+    # bit-identity between engines/layouts is only guaranteed off the
+    # compiled pallas backend (engine.py docstring): there prefill (q7
+    # flash) and decode kernels may differ in the last LSB, flipping rare
+    # argmax ties
+    match_enforced = ops.backend() != "pallas"
+    rows.append(("serve/outputs_match", float(match),
+                 "+".join(sorted(outs))))
+    artifact.update(outputs_match=bool(match))
+
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.2f},{derived}")
 
     if args.json:
-        Path(args.json).write_text(json.dumps(dict(
-            bench="serve_continuous_vs_lockstep",
-            arch=cfg.name, slots=args.slots, requests=args.requests,
-            lengths=lengths, generated_tokens=n_tok, prompt_tokens=n_prompt,
-            lockstep_tok_per_s=round(lock_tps, 2),
-            continuous_tok_per_s=round(cont_tps, 2),
-            speedup=round(cont_tps / lock_tps, 3),
-            outputs_match=bool(match),
-            engine_stats=cont.stats,
-        ), indent=2) + "\n")
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
     if not match and match_enforced:
-        print("ERROR: greedy outputs diverged between engines",
+        print("ERROR: greedy outputs diverged between engines/layouts",
               file=sys.stderr)
         return 1
     if not match:
@@ -186,7 +236,16 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--lengths", default="16,32,64,128,256",
-                    help="comma-separated prompt-length palette")
+                    help="comma-separated prompt (or suffix) length palette")
+    ap.add_argument("--layout", default="both",
+                    choices=["contiguous", "paged", "both"],
+                    help="contiguous: lockstep-vs-continuous baseline; "
+                         "paged: contiguous-vs-paged cache A/B; both: all")
+    ap.add_argument("--workload", default="poisson",
+                    choices=["poisson", "prefix"])
+    ap.add_argument("--prefix-len", type=int, default=96,
+                    help="shared system-prompt length (prefix workload)")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--rate", type=float, default=0.25,
                     help="Poisson arrival rate (requests per decode step)")
     ap.add_argument("--max-new-lo", type=int, default=8)
@@ -199,7 +258,8 @@ def main():
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 8)
-        args.lengths = "8,16,32"
+        args.lengths = "8,16,32" if args.workload == "poisson" else "4,8"
+        args.prefix_len = min(args.prefix_len, 48)
         args.max_new_lo, args.max_new_hi = 4, 8
     raise SystemExit(bench(args))
 

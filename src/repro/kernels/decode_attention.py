@@ -160,3 +160,80 @@ def decode_qattention(
       jnp.asarray(shift_idx, jnp.int32).reshape(1),
       jnp.asarray(inv_s_logit, jnp.float32).reshape(1),
       jnp.asarray(out_scale, jnp.float32).reshape(1))
+
+
+def _paged_decode_kernel(g, psize, len_ref, btab_ref, *rest):
+    # the block table feeds only the BlockSpec index maps (which pool page
+    # backs this slot's k-th logical KV block); the body is exactly the
+    # contiguous kernel with block size = page size
+    _decode_kernel(g, psize, len_ref, *rest)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_qattention(
+    q_i8: jax.Array,          # int8 (B, Hkv, G, D) — one token/slot, grouped q
+    k_pool: jax.Array,        # int8 (n_pages, P, Hkv, D) — global page pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # int32 (B, max_blocks): slot -> pool pages
+    lengths: jax.Array,       # int32 (B,): valid rows per slot
+    M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+    *, interpret: bool = False,
+) -> jax.Array:
+    """Paged continuous-batching decode attention: the KV BlockSpec index
+    map follows the slot's scalar-prefetched block-table entry instead of a
+    linear offset, so one grid step streams one *pool page* per kv head.
+
+    Same clamping machinery as the contiguous kernel: grid steps past a
+    slot's length re-address the slot's last live page — already resident
+    in VMEM, so the pipeliner issues no DMA and short slots pay no HBM
+    traffic for table entries beyond their chain.  One logical KV block ==
+    one page, so the grid tiles exactly (no divisor fallback needed)."""
+    b, hkv, g, d = q_i8.shape
+    psize = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    grid = (b, hkv, nb)
+    kernel = functools.partial(_paged_decode_kernel, g, psize)
+
+    def kv_map(bb, h, k, lens, btab):
+        # clamp dead logical blocks to the last live one, THEN translate
+        # through the block table: dead steps re-address a resident page
+        last_live = jnp.maximum((lens[bb] - 1) // psize, 0)
+        return (btab[bb, jnp.minimum(k, last_live)], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # lengths, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bb, h, k, lens, btab: (bb, h, 0, 0)),
+            pl.BlockSpec((1, psize, 1, d), kv_map),
+            pl.BlockSpec((1, psize, 1, d), kv_map),
+            pl.BlockSpec((LUT_SIZE,), lambda bb, h, k, lens, btab: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, h, k, lens, btab: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.int32),     # running max (col-broadcast)
+            pltpu.VMEM((g, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((g, d), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.int8),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32).reshape(-1),
+      jnp.asarray(block_tables, jnp.int32),
+      q_i8, k_pool, v_pool, lut_q7,
+      jnp.asarray(M_idx, jnp.int32).reshape(1),
+      jnp.asarray(shift_idx, jnp.int32).reshape(1),
+      jnp.asarray(inv_s_logit, jnp.float32).reshape(1),
+      jnp.asarray(out_scale, jnp.float32).reshape(1))

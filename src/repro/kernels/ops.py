@@ -129,6 +129,29 @@ def decode_attention_q(
                              interpret=(b == "interpret"))
 
 
+def paged_decode_attention_q(
+    q_i8, k_pool, v_pool, block_tables, lengths, M_idx, shift_idx, lut_q7,
+    inv_s_logit, out_scale, *, impl=None,
+):
+    """Paged continuous-batching decode attention.
+
+    (B, Hkv, G, D) grouped queries x (n_pages, P, Hkv, D) global int8 page
+    pool, addressed per slot through a (B, max_blocks) block table ->
+    (B, Hkv, G, D) int8 context.  ref backend = the block-online oracle
+    (kernel-exact accumulation order); pallas = the scalar-prefetch paged
+    kernel, bit-exact vs. the oracle for any page count.
+    """
+    b = backend(impl)
+    if b == "ref":
+        return _ref.paged_decode_qattention_ref(
+            q_i8, k_pool, v_pool, block_tables, lengths, M_idx, shift_idx,
+            lut_q7, inv_s_logit, out_scale)
+    from repro.kernels.decode_attention import paged_decode_qattention
+    return paged_decode_qattention(
+        q_i8, k_pool, v_pool, block_tables, lengths, M_idx, shift_idx,
+        lut_q7, inv_s_logit, out_scale, interpret=(b == "interpret"))
+
+
 def attention_q(
     q_i8, k_i8, v_i8, M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
     *, causal: bool = True, q_offset: int = 0, impl=None,

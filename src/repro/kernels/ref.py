@@ -138,6 +138,67 @@ def decode_qattention_ref(
     return jax.vmap(one)(q_i8, k_i8, v_i8, lengths)
 
 
+def paged_decode_qattention_ref(
+    q_i8: jax.Array,          # int8 (B, Hkv, G, D) — one query token per slot
+    k_pool: jax.Array,        # int8 (n_pages, P, Hkv, D) — global page pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # int32 (B, max_blocks): slot -> pool pages
+    lengths: jax.Array,       # int32 (B,): valid rows per slot
+    M_idx: jax.Array,
+    shift_idx: jax.Array,
+    lut: jax.Array,           # (256,) int32 Q0.7 codes
+    inv_s_logit: jax.Array,
+    out_scale: jax.Array,
+) -> jax.Array:
+    """Block-online oracle for the PAGED decode kernel: per slot, one page
+    per step gathered through the block table, with the kernel's exact
+    accumulation order (int32 scores, Q0.7 LUT numerators, fp32 running
+    max-rescale / denominator / output carry).  Because every operation and
+    its order match ``_decode_kernel``, the Pallas kernel is BIT-EXACT
+    against this oracle for any page count — unlike the contiguous kernel,
+    whose oracle is the row-wise ``decode_qattention_ref`` (exact only when
+    one block covers the row)."""
+    from repro.core.qsoftmax import LUT_SIZE
+
+    b, hkv, g, d = q_i8.shape
+    psize = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    neg_init = -(1 << 30)
+    m = jnp.full((b, hkv, g, 1), neg_init, jnp.int32)
+    den = jnp.zeros((b, hkv, g, 1), jnp.float32)
+    acc = jnp.zeros((b, hkv, g, d), jnp.float32)
+    lut32 = lut.astype(jnp.int32)
+    inv = jnp.asarray(inv_s_logit, jnp.float32)
+    for k_i in range(nb):
+        pg = block_tables[:, k_i]                          # (B,)
+        kb = jnp.take(k_pool, pg, axis=0).transpose(0, 2, 1, 3)  # (B,Hkv,P,D)
+        vb = jnp.take(v_pool, pg, axis=0).transpose(0, 2, 1, 3)
+        s = jax.lax.dot_general(
+            q_i8, kb, (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)              # (B,Hkv,G,P)
+        kpos = k_i * psize + jnp.arange(psize, dtype=jnp.int32)
+        s = jnp.where(kpos[None, None, None, :] < lengths[:, None, None, None],
+                      s, s - qs.MASK_OFFSET)
+        lm = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, lm)
+        idx = jnp.clip(fxp.rescale(m_new - s, M_idx, shift_idx, out_bits=9),
+                       0, LUT_SIZE - 1)
+        num = jnp.take(lut32, idx)                         # Q0.7 numerators
+        den_b = jnp.sum(num, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            num.astype(jnp.int8), vb, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)              # (B,Hkv,G,D)
+        f = jnp.exp((m - m_new).astype(jnp.float32) * inv)
+        f = jnp.where(m == neg_init, 0.0, f)
+        live = ((k_i * psize) < lengths)[:, None, None, None]
+        den = jnp.where(live, den * f + den_b.astype(jnp.float32), den)
+        acc = jnp.where(live, acc * f + pv.astype(jnp.float32), acc)
+        m = jnp.where(live, m_new, m)
+    den = jnp.maximum(den, 1.0)
+    o = acc / den * out_scale
+    return jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
+
+
 def make_exp_lut_q7():
     """Q0.7 exp table for the attention kernels (max code 127, fits int8)."""
     import numpy as np

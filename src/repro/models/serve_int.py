@@ -39,13 +39,12 @@ def _ln(x_i8, f, cfg):
     return ops.layernorm_q(x_i8, p)
 
 
-_W_BITS = 4  # set per-forward from cfg.quant.w_bits (module-static is safe:
-             # serve_forward is re-traced per config)
-
-
-def _lin(x_i8, f, w_bits=None):
+def _lin(x_i8, f, w_bits):
+    # w_bits is plumbed explicitly from cfg.quant at every call site — a
+    # module global would leak one config's width into another's trace when
+    # two configs are traced in the same process
     fl = FoldedLinear(w_packed=f["w"], bias_i=f["b"], M=f["M"], shift=f["sh"],
-                      w_bits=w_bits if w_bits is not None else _W_BITS)
+                      w_bits=w_bits)
     return ops.linear_w4a8(x_i8, fl)
 
 
@@ -133,16 +132,38 @@ def _attn_rows_q8(qc, kc, vc, aq, cfg, mask):
                     -127, 127).astype(jnp.int8)
 
 
-def _attn_prefill(x_i8, f, cfg, pos, row_exact: bool = False):
-    b, s, d = x_i8.shape
+def _qkv_rope(x_i8, f, cfg, pos):
+    """Shared attention front half: LN -> q/k/v projections -> RoPE at
+    ``pos`` ((B,S) absolute positions, or (B,S,3) for mrope).  Returns
+    (qc (B,S,H,hd), kc/vc (B,S,Hkv,hd)) int8."""
+    b, s, _ = x_i8.shape
+    wb = cfg.quant.w_bits
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     h = _ln(x_i8, f["ln1"], cfg)
-    qc = _lin(h, f["wq"]).reshape(b, s, nh, hd)
-    kc = _lin(h, f["wk"]).reshape(b, s, nkv, hd)
-    vc = _lin(h, f["wv"]).reshape(b, s, nkv, hd)
+    qc = _lin(h, f["wq"], wb).reshape(b, s, nh, hd)
+    kc = _lin(h, f["wk"], wb).reshape(b, s, nkv, hd)
+    vc = _lin(h, f["wv"], wb).reshape(b, s, nkv, hd)
     aq = f["attn_q"]
-    qc = _rope_island(qc, aq["inv_s_qp"], aq["s_q"], pos, cfg, f["attn_q"].get("qn"))
-    kc = _rope_island(kc, aq["inv_s_kp"], aq["s_k"], pos, cfg, f["attn_q"].get("kn"))
+    qc = _rope_island(qc, aq["inv_s_qp"], aq["s_q"], pos, cfg, aq.get("qn"))
+    kc = _rope_island(kc, aq["inv_s_kp"], aq["s_k"], pos, cfg, aq.get("kn"))
+    return qc, kc, vc
+
+
+def _flash_bkv(rows: int) -> int:
+    """Largest KV block <= 512 that divides ``rows`` (flash_qattention_jax
+    tiles the KV axis exactly)."""
+    bkv = min(512, rows)
+    while rows % bkv:
+        bkv -= 1
+    return bkv
+
+
+def _attn_prefill(x_i8, f, cfg, pos, row_exact: bool = False):
+    b, s, d = x_i8.shape
+    wb = cfg.quant.w_bits
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    qc, kc, vc = _qkv_rope(x_i8, f, cfg, pos)
+    aq = f["attn_q"]
     if cfg.causal and row_exact:
         # decode-identical rows (see _attn_rows_q8) with a causal/SWA mask
         qpos = jnp.arange(s, dtype=jnp.int32)[:, None]
@@ -156,15 +177,52 @@ def _attn_prefill(x_i8, f, cfg, pos, row_exact: bool = False):
         fn = lambda qq, kk, vv: flash_qattention_jax(
             qq, kk, vv, aq["M_idx"], aq["sh_idx"], _lut_q7(),
             aq["inv_s_logit"], aq["out_scale"], window=cfg.sliding_window,
-            bkv=min(512, s))
+            bkv=_flash_bkv(s))
         ctx = jax.vmap(fn)(qc.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
                            vc.transpose(0, 2, 1, 3))      # (B,H,S,D) int8
     else:
         # bidirectional (BERT): paper-style row LUT softmax, materialized
         ctx = _attn_rows_q8(qc, kc, vc, aq, cfg, None)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
-    out = _lin(ctx, f["wo"])
+    out = _lin(ctx, f["wo"], wb)
     return out, kc, vc
+
+
+def _decode_qkv(x_i8, f, cfg, pos_vec):
+    """Decode-step front half: per-slot (B,) positions broadcast to the
+    single query row, then the shared LN/qkv/RoPE path."""
+    b, s, _ = x_i8.shape
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos_vec[:, None, None], (b, s, 3))
+    else:
+        pos = jnp.broadcast_to(pos_vec[:, None], (b, s))
+    return _qkv_rope(x_i8, f, cfg, pos)
+
+
+def _gqa_decode_jnp(qg, k_cache, v_cache, lengths, aq):
+    """Masked single-query GQA over a (B, S*, Hkv, hd) int8 KV view WITHOUT
+    materializing repeated KV: q heads grouped per kv head and batched into
+    the dot.  (The jnp.repeat formulation multiplies KV-cache HBM traffic
+    by `group` — 16x on llama3-405b; EXPERIMENTS.md §Perf it.3.)  Rows at
+    ``>= lengths[b]`` are masked to LUT-zero, so the result is independent
+    of the view's padding — the contiguous (Smax) and paged (gathered
+    block-table) layouts produce bit-identical context."""
+    srows = k_cache.shape[1]
+    kt = k_cache.transpose(0, 2, 3, 1)                # (B,kv,hd,S*) int8
+    scores = jax.lax.dot_general(
+        qg, kt, (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.int32)             # (B,kv,g,S*)
+    slot = jnp.arange(srows)
+    valid = slot[None, :] < lengths[:, None]          # (B,S*)
+    scores = jnp.where(valid[:, None, None, :], scores,
+                       scores - MASK_OFFSET)
+    probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
+    vt = v_cache.transpose(0, 2, 1, 3)                # (B,kv,S*,hd)
+    pv = jax.lax.dot_general(
+        probs.astype(jnp.int8), vt, (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.int32)             # (B,kv,g,hd)
+    return jnp.clip(fxp.rescale(pv, aq["M_pv"], aq["sh_pv"]),
+                    -127, 127).astype(jnp.int8)
 
 
 def _attn_decode(x_i8, f, cfg, cache, pos_offset):
@@ -178,17 +236,8 @@ def _attn_decode(x_i8, f, cfg, cache, pos_offset):
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     smax = cache["k"].shape[1]
     pos_vec = _pos_vector(pos_offset, b)                  # (B,) int32
-    h = _ln(x_i8, f["ln1"], cfg)
-    qc = _lin(h, f["wq"]).reshape(b, s, nh, hd)
-    kc = _lin(h, f["wk"]).reshape(b, s, nkv, hd)
-    vc = _lin(h, f["wv"]).reshape(b, s, nkv, hd)
+    qc, kc, vc = _decode_qkv(x_i8, f, cfg, pos_vec)
     aq = f["attn_q"]
-    if cfg.mrope_sections is not None:
-        pos = jnp.broadcast_to(pos_vec[:, None, None], (b, s, 3))
-    else:
-        pos = jnp.broadcast_to(pos_vec[:, None], (b, s))
-    qc = _rope_island(qc, aq["inv_s_qp"], aq["s_q"], pos, cfg, aq.get("qn"))
-    kc = _rope_island(kc, aq["inv_s_kp"], aq["s_k"], pos, cfg, aq.get("kn"))
     # match the cache layout before the in-place update (avoids the SPMD
     # "involuntary full rematerialization" reshard of the whole cache)
     from repro.sharding import partition as Pt
@@ -218,47 +267,142 @@ def _attn_decode(x_i8, f, cfg, cache, pos_offset):
             aq["M_idx"], aq["sh_idx"], _lut_q7(),
             aq["inv_s_logit"], aq["out_scale"])           # (B,kv,g,hd) int8
     else:
-        # GQA WITHOUT materializing repeated KV: q heads grouped per kv head
-        # and batched into the dot.  The jnp.repeat formulation multiplies
-        # KV-cache HBM traffic by `group` (16x on llama3-405b) —
-        # EXPERIMENTS.md §Perf it.3.
-        kt = k_cache.transpose(0, 2, 3, 1)                # (B,kv,hd,Smax) int8
-        scores = jax.lax.dot_general(
-            qg, kt, (((3,), (2,)), ((0, 1), (0, 1))),
-            preferred_element_type=jnp.int32)             # (B,kv,g,Smax)
-        slot = jnp.arange(smax)
-        valid = slot[None, :] < lengths[:, None]          # (B,Smax)
-        scores = jnp.where(valid[:, None, None, :], scores,
-                           scores - MASK_OFFSET)
-        probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
-        vt = v_cache.transpose(0, 2, 1, 3)                # (B,kv,Smax,hd)
-        pv = jax.lax.dot_general(
-            probs.astype(jnp.int8), vt, (((3,), (2,)), ((0, 1), (0, 1))),
-            preferred_element_type=jnp.int32)             # (B,kv,g,hd)
-        ctx = jnp.clip(fxp.rescale(pv, aq["M_pv"], aq["sh_pv"]),
-                       -127, 127).astype(jnp.int8)
+        ctx = _gqa_decode_jnp(qg, k_cache, v_cache, lengths, aq)
     ctx = ctx.reshape(b, nh, s, hd)                       # == (B,H,1,hd)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
-    out = _lin(ctx, f["wo"])
+    out = _lin(ctx, f["wo"], cfg.quant.w_bits)
     return out, {"k": k_cache, "v": v_cache}
+
+
+def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables):
+    """Paged decode step: x (B,1,d); cache {'k','v'}: (n_pages, P, Hkv, hd)
+    int8 global page pool; ``block_tables`` (B, max_blocks) int32 maps each
+    slot's logical KV blocks onto pool pages.
+
+    The K/V row for this token is scattered through the slot's block table
+    (page = table[b, pos // P], row = pos % P); attention then reads the
+    pool indirectly — block-table gather on the jnp path, scalar-prefetch
+    page lookup inside the Pallas kernel.  Writes only ever land in pages
+    the slot owns exclusively (refcount 1): shared prefix pages end strictly
+    before the first written position (scheduler COW discipline).  Inactive
+    slots (zeroed table rows) scatter into the reserved trash page 0.
+    """
+    b, s, d = x_i8.shape
+    assert not cfg.sliding_window, \
+        "paged cache serves full-attention archs; SWA keeps the ring buffer"
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    psize = cache["k"].shape[1]
+    pos_vec = _pos_vector(pos_offset, b)                  # (B,) int32
+    qc, kc, vc = _decode_qkv(x_i8, f, cfg, pos_vec)
+    aq = f["attn_q"]
+    assert s == 1
+    # write-through-table: one (Hkv, hd) row per slot into its own page
+    pg = jnp.take_along_axis(block_tables, (pos_vec // psize)[:, None],
+                             axis=1)[:, 0]                # (B,) page ids
+    row = pos_vec % psize
+    k_pool = cache["k"].at[pg, row].set(kc[:, 0])
+    v_pool = cache["v"].at[pg, row].set(vc[:, 0])
+    lengths = pos_vec + 1
+    group = nh // nkv
+    qg = qc.reshape(b, nkv, group, hd)                    # (B,kv,g,hd) int8
+    if ops.backend() == "pallas":
+        from repro.kernels.decode_attention import paged_decode_qattention
+        ctx = paged_decode_qattention(
+            qg, k_pool, v_pool, block_tables, lengths,
+            aq["M_idx"], aq["sh_idx"], _lut_q7(),
+            aq["inv_s_logit"], aq["out_scale"])           # (B,kv,g,hd) int8
+    else:
+        # gathered per-slot view (B, max_blocks*P, Hkv, hd); masking makes
+        # the result bit-identical to the contiguous layout
+        kv_shape = (b, -1, nkv, hd)
+        k_view = jnp.take(k_pool, block_tables, axis=0).reshape(kv_shape)
+        v_view = jnp.take(v_pool, block_tables, axis=0).reshape(kv_shape)
+        ctx = _gqa_decode_jnp(qg, k_view, v_view, lengths, aq)
+    ctx = ctx.reshape(b, nh, s, hd)                       # == (B,H,1,hd)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    out = _lin(ctx, f["wo"], cfg.quant.w_bits)
+    return out, {"k": k_pool, "v": v_pool}
+
+
+def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
+                        row_exact):
+    """One-shot (suffix-aware) prefill through the block table: queries at
+    absolute positions [pos0, pos0+S) write their K/V rows into the slot's
+    pages and attend over the slot's WHOLE mapped chain — shared prefix
+    pages (already holding an earlier request's identical rows) plus the
+    rows written here.  ``pos0`` is a page-aligned traced scalar; with
+    pos0 == 0 this is the plain one-shot admission prefill.  Row-exact
+    (q8) rows are bit-identical to decode steps at the same positions, so
+    a prefix-sharing request reproduces the no-sharing engine token for
+    token on the ref/interpret backends; the pallas backend uses the q7
+    flash family with ``q_offset`` (self-consistent, like _attn_prefill).
+    Pad rows and trash-page rows sit at kpos > every real query and are
+    causally masked."""
+    b, s, d = x_i8.shape
+    wb = cfg.quant.w_bits
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    psize = cache["k"].shape[1]
+    qc, kc, vc = _qkv_rope(x_i8, f, cfg, pos)
+    aq = f["attn_q"]
+    nb_s = s // psize
+    btab_slice = jax.lax.dynamic_slice_in_dim(block_tables, pos0 // psize,
+                                              nb_s, axis=1)
+    ncache = _paged_prefill_write(cache, kc, vc, btab_slice)
+    kv_shape = (b, -1, nkv, hd)
+    k_view = jnp.take(ncache["k"], block_tables, axis=0).reshape(kv_shape)
+    v_view = jnp.take(ncache["v"], block_tables, axis=0).reshape(kv_shape)
+    rows = k_view.shape[1]
+    qpos = pos0 + jnp.arange(s, dtype=jnp.int32)[:, None]
+    if row_exact:
+        kpos = jnp.arange(rows, dtype=jnp.int32)[None, :]
+        ctx = _attn_rows_q8(qc, k_view, v_view, aq, cfg, kpos <= qpos)
+    else:
+        fn = lambda qq, kk, vv: flash_qattention_jax(
+            qq, kk, vv, aq["M_idx"], aq["sh_idx"], _lut_q7(),
+            aq["inv_s_logit"], aq["out_scale"], q_offset=pos0,
+            bkv=_flash_bkv(rows))
+        ctx = jax.vmap(fn)(qc.transpose(0, 2, 1, 3),
+                           k_view.transpose(0, 2, 1, 3),
+                           v_view.transpose(0, 2, 1, 3))  # (B,H,S,hd) int8
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    out = _lin(ctx, f["wo"], wb)
+    return out, ncache
+
+
+def _paged_prefill_write(cache, kc, vc, block_tables):
+    """Scatter one-shot prefill K/V rows (B, S, Hkv, hd) into the page pool
+    through the block table.  S must be a whole number of pages and every
+    table entry a page the request owns — pad rows land inside owned pages
+    (masked or overwritten by decode, same argument as the contiguous
+    bucketed prefill)."""
+    psize = cache["k"].shape[1]
+    b, s = kc.shape[0], kc.shape[1]
+    nb = s // psize
+    assert nb * psize == s and block_tables.shape[1] == nb, \
+        (s, psize, block_tables.shape)
+    kr = kc.reshape(b, nb, psize, *kc.shape[2:])
+    vr = vc.reshape(b, nb, psize, *vc.shape[2:])
+    return {"k": cache["k"].at[block_tables].set(kr),
+            "v": cache["v"].at[block_tables].set(vr)}
 
 
 # --- ffn slots ----------------------------------------------------------------
 
 def _mlp_int(x_i8, f, cfg):
+    wb = cfg.quant.w_bits
     h = _ln(x_i8, f["ln2"], cfg)
     if cfg.act == "swiglu":
-        g = _lin(h, f["wg"])
-        u = _lin(h, f["wu"])
+        g = _lin(h, f["wg"], wb)
+        u = _lin(h, f["wu"], wb)
         g = _lut8(g, f["silu_lut"])
         prod = g.astype(jnp.int32) * u.astype(jnp.int32)       # int16-range
         hh = jnp.clip(fxp.rescale(prod, f["prod"]["M"], f["prod"]["sh"]),
                       -127, 127).astype(jnp.int8)
-        return _lin(hh, f["wd"])
-    g = _lin(h, f["w1"])
+        return _lin(hh, f["wd"], wb)
+    g = _lin(h, f["w1"], wb)
     g = _lut8(g, f["gelu_lut"])
     g = _rescale_i8(g, f["gelu_rescale"])
-    return _lin(g, f["w2"])
+    return _lin(g, f["w2"], wb)
 
 
 def _moe_int(x_i8, f, cfg):
@@ -277,15 +421,17 @@ def _moe_int(x_i8, f, cfg):
     xe = xe.reshape(cfg.n_experts, cap, d)
     fe = f["experts"]
 
+    wb = cfg.quant.w_bits
+
     def expert_ffn(xe_i8, grp):
         def one(x1, wg, wu, wd):
-            g = _lin(x1, wg)
-            u = _lin(x1, wu)
+            g = _lin(x1, wg, wb)
+            u = _lin(x1, wu, wb)
             g = _lut8(g, grp["silu_lut"])
             prod = g.astype(jnp.int32) * u.astype(jnp.int32)
             hh = jnp.clip(fxp.rescale(prod, grp["prod"]["M"], grp["prod"]["sh"]),
                           -127, 127).astype(jnp.int8)
-            return _lin(hh, wd)
+            return _lin(hh, wd, wb)
         return jax.vmap(one)(xe_i8, grp["wg"], grp["wu"], grp["wd"])
 
     ye = expert_ffn(xe, fe)                                     # (E,C,d) int8
@@ -428,6 +574,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int) -> Dict:
+    """Global paged KV pool, stacked (n_reps, n_pages, P, Hkv, hd) per attn
+    slot.  Pages are position-agnostic: a slot's (max_blocks,) block-table
+    row, not the pool layout, decides which rows belong to which request.
+    Only all-attention archs page (SSM/xLSTM state is O(1) per slot and
+    SWA already ring-buffers to the window)."""
+    kinds = slot_kinds(cfg)
+    assert all(m == "attn" for m, _ in kinds) and not cfg.sliding_window, \
+        "paged cache requires an all-attention, non-SWA arch"
+    shape = (cfg.n_reps, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {f"slot{i}": {"k": jnp.zeros(shape, jnp.int8),
+                         "v": jnp.zeros(shape, jnp.int8)}
+            for i in range(len(kinds))}
+
+
 def _embed_int(cfg, folded, tokens):
     if cfg.frontend == "audio_codebooks":
         acc = sum(jnp.take(folded["embed"]["codebooks_i8"][ci], tokens[:, ci], 0
@@ -444,6 +605,7 @@ def serve_forward(
     cache: Optional[Dict] = None,
     pos_offset: jax.Array | int = 0,
     mode: str = "prefill",            # prefill | decode
+    block_tables: Optional[jax.Array] = None,
     extra_embeds_i8: Optional[jax.Array] = None,
     pos3: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
@@ -456,26 +618,33 @@ def serve_forward(
     through the decode-identical row datapath so a later decode continues
     bit-exactly.  decode: tokens (B,1) + cache -> (logits, new_cache);
     ``pos_offset`` is a scalar or a per-slot (B,) vector.
+
+    ``block_tables`` (B, max_blocks) int32 switches the cache layout to the
+    paged pool (``init_paged_cache``): both the prefill scatter and the
+    decode read/write then indirect through each slot's block-table row
+    inside the depth scan instead of addressing a contiguous Smax stripe.
     """
-    global _W_BITS
-    _W_BITS = cfg.quant.w_bits
     kinds = slot_kinds(cfg)
     x = _embed_int(cfg, folded, tokens)
     if extra_embeds_i8 is not None:
         x = jnp.concatenate([extra_embeds_i8, x], axis=1)
     b, s = x.shape[0], x.shape[1]
+    # prefill at a nonzero pos_offset continues an existing chain (the paged
+    # suffix prefill after a prefix-cache hit); pos0 stays a traced scalar
+    pos0 = jnp.asarray(pos_offset, jnp.int32).reshape(-1)[0]
     if cfg.learned_pos:
         if mode == "decode":
             posrow = jnp.take(folded["embed"]["pos_i8"],
                               _pos_vector(pos_offset, b), axis=0)[:, None]
         else:
-            posrow = folded["embed"]["pos_i8"][:s][None]
+            posrow = jax.lax.dynamic_slice_in_dim(
+                folded["embed"]["pos_i8"], pos0, s, axis=0)[None]
         x = jnp.clip(x.astype(jnp.int32) + posrow.astype(jnp.int32),
                      -127, 127).astype(jnp.int8)
     if mode == "decode":
         pos = None
     else:
-        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        pos = jnp.broadcast_to(pos0 + jnp.arange(s, dtype=jnp.int32), (b, s))
         if cfg.mrope_sections is not None:
             pos = pos3 if pos3 is not None else jnp.broadcast_to(
                 pos[..., None], (*pos.shape, 3))
@@ -487,22 +656,34 @@ def serve_forward(
             cslot = None if cache_rep is None else cache_rep[f"slot{i}"]
             if mixer == "attn":
                 if mode == "decode":
-                    out, nc = _attn_decode(x_i8, f, cfg, cslot, pos_offset)
+                    if block_tables is not None:
+                        out, nc = _attn_decode_paged(x_i8, f, cfg, cslot,
+                                                     pos_offset, block_tables)
+                    else:
+                        out, nc = _attn_decode(x_i8, f, cfg, cslot, pos_offset)
                 else:
                     # cached prefill matches the decode datapath per backend:
                     # row-exact q8 softmax mirrors the jnp decode (bit-exact
                     # continuation); on pallas both sides use the q7 flash
                     # family instead (self-consistent, not bit-identical)
                     row_exact = cslot is not None and ops.backend() != "pallas"
-                    out, kc, vc = _attn_prefill(x_i8, f, cfg, pos,
-                                                row_exact=row_exact)
-                    if cslot is not None:   # one-shot prefill into the cache
-                        nc = {"k": jax.lax.dynamic_update_slice(
-                                  cslot["k"], kc, (0, 0, 0, 0)),
-                              "v": jax.lax.dynamic_update_slice(
-                                  cslot["v"], vc, (0, 0, 0, 0))}
+                    if cslot is not None and block_tables is not None:
+                        # one-shot (possibly suffix-only) prefill written
+                        # and read through the block table
+                        out, nc = _attn_prefill_paged(
+                            x_i8, f, cfg, cslot, pos, block_tables, pos0,
+                            row_exact)
                     else:
-                        nc = cslot
+                        out, kc, vc = _attn_prefill(x_i8, f, cfg, pos,
+                                                    row_exact=row_exact)
+                        if cslot is not None:
+                            # one-shot prefill into the contiguous stripe
+                            nc = {"k": jax.lax.dynamic_update_slice(
+                                      cslot["k"], kc, (0, 0, 0, 0)),
+                                  "v": jax.lax.dynamic_update_slice(
+                                      cslot["v"], vc, (0, 0, 0, 0))}
+                        else:
+                            nc = cslot
             elif mixer == "mamba":
                 out, nc = _mamba_int(x_i8, f, cfg,
                                      cslot if mode == "decode" else None)

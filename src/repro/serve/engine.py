@@ -13,6 +13,23 @@ decode dispatch to the q7 flash kernels instead (self-consistent integer
 datapath, but not bit-identical to the jnp path).  SSM/hybrid architectures
 (whose prefill is a recurrence) fall back to a batch-1 decode-loop prefill.
 
+Cache layouts (``cache_layout=``):
+
+* ``"paged"`` — the int8 KV cache is a global pool of fixed-size pages; each
+  slot carries a block-table row instead of an exclusive ``Smax`` stripe.
+  Admission reserves exactly the pages a request can touch (prompt + decode
+  budget) — a 16-token request no longer pays for ``Smax`` rows — and a
+  head-of-line request that doesn't fit WAITS for pages instead of OOMing.
+  Prompt prefixes are shared at page granularity through the allocator's
+  refcounted registry: a repeated system prompt maps cached pages and only
+  the unseen suffix runs through the model.  Greedy outputs stay
+  token-identical to the contiguous layout on the ref/interpret backends.
+* ``"contiguous"`` — the original dense ``(B, Smax, Hkv, hd)`` stripe per
+  slot (kept for one release as the A/B baseline; SWA ring buffers and
+  SSM/hybrid archs always use it).
+* ``"auto"`` (default) — paged when the arch supports it (all-attention,
+  no sliding window), else contiguous.
+
 ``LockstepEngine`` — the original batch demo (kept as the benchmark baseline
 and for SSM/audio archs): lockstep decoding with one shared position scalar,
 prefill replayed token-by-token for the whole batch, admission only between
@@ -22,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -31,7 +49,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import serve_int as S
 from repro.models.transformer import slot_kinds
-from repro.serve.scheduler import Scheduler, SlotState
+from repro.serve.scheduler import (BlockAllocator, Scheduler, SlotState,
+                                   pages_needed)
 
 
 @dataclasses.dataclass
@@ -49,12 +68,23 @@ def supports_continuous(cfg: ModelConfig) -> bool:
     return cfg.frontend == "none" and cfg.n_lm_heads == 1
 
 
+_CONTINUOUS_ONLY_KW = ("prefill_bucket", "cache_layout", "page_size",
+                       "n_pages")
+
+
 def make_engine(cfg: ModelConfig, folded, **kw):
     """The continuous engine when the arch supports it, else the lockstep
-    baseline (same generate() surface)."""
+    baseline (same generate() surface).  Continuous-only kwargs passed for a
+    lockstep arch are dropped with a warning — not silently."""
     cls = Engine if supports_continuous(cfg) else LockstepEngine
     if cls is LockstepEngine:
-        kw.pop("prefill_bucket", None)
+        dropped = sorted(k for k in _CONTINUOUS_ONLY_KW if k in kw)
+        if dropped:
+            warnings.warn(
+                f"make_engine: arch {cfg.name!r} takes the LockstepEngine, "
+                f"which ignores {', '.join(dropped)}", stacklevel=2)
+            for k in dropped:
+                kw.pop(k)
     return cls(cfg, folded, **kw)
 
 
@@ -62,7 +92,9 @@ class Engine:
     """Continuous-batching integer serving engine."""
 
     def __init__(self, cfg: ModelConfig, folded, *, batch_slots: int = 8,
-                 max_len: int = 512, seed: int = 0, prefill_bucket: int = 16):
+                 max_len: int = 512, seed: int = 0, prefill_bucket: int = 16,
+                 cache_layout: str = "auto", page_size: int = 16,
+                 n_pages: Optional[int] = None):
         assert supports_continuous(cfg), \
             "continuous engine serves token-LM archs; use LockstepEngine"
         self.cfg = cfg
@@ -71,52 +103,134 @@ class Engine:
         self.max_len = max_len
         self.smax = S.cache_rows(cfg, max_len)
         self.prefill_bucket = prefill_bucket
-        self.rng = np.random.default_rng(seed)
         # one-shot prefill needs every mixer to be cache-writing attention
         self._attn_only = cfg.causal and \
             all(m == "attn" for m, _ in slot_kinds(cfg))
-        self.sched = Scheduler(batch_slots)
-        self.requests: Dict[int, Request] = {}
-        self.cache = S.init_cache(cfg, batch_slots, max_len)
-        self.pos = np.zeros(batch_slots, np.int32)
-        self.stats = self._zero_stats()
+        # the page pool has no batch axis and no sharding annotations yet
+        # (TP-sharded pool is a ROADMAP follow-on): under an active mesh the
+        # contiguous layout keeps its SPMD constrain guards, so auto falls
+        # back and an explicit "paged" is refused rather than silently slow
+        from repro.sharding import partition as Pt
+        pageable = self._attn_only and not cfg.sliding_window \
+            and Pt.get_mesh_ctx() is None
+        if cache_layout == "auto":
+            cache_layout = "paged" if pageable else "contiguous"
+        assert cache_layout in ("paged", "contiguous"), cache_layout
+        assert cache_layout != "paged" or pageable, \
+            "paged layout requires an all-attention, non-SWA arch and no " \
+            "active device mesh"
+        self.layout = cache_layout
+        self.page_size = page_size
+        if self.layout == "paged":
+            self.max_blocks = pages_needed(self.smax, page_size)
+            # +1: page 0 is the reserved trash page (inactive-slot writes)
+            self.n_pages = n_pages if n_pages is not None else \
+                batch_slots * self.max_blocks + 1
+            assert self.n_pages >= 2
+        self._init_state(seed)
 
-        def decode_step(folded_, cache, tok, pos):
-            return S.serve_forward(cfg, folded_, tok, cache=cache,
-                                   pos_offset=pos, mode="decode")
+        if self.layout == "paged":
+            def decode_step(folded_, cache, tok, pos, btab):
+                return S.serve_forward(cfg, folded_, tok, cache=cache,
+                                       pos_offset=pos, mode="decode",
+                                       block_tables=btab)
 
-        # one graph for the slot table AND (by retrace) the batch-1 prefill loop
-        self._decode = jax.jit(decode_step, donate_argnums=(1,))
+            self._decode = jax.jit(decode_step, donate_argnums=(1,))
 
-        def prefill(folded_, toks):
-            cache1 = S.init_cache(cfg, 1, max_len)
-            return S.serve_forward(cfg, folded_, toks, cache=cache1,
-                                   mode="prefill")
+            def prefill(folded_, cache, toks, btab, pos0):
+                return S.serve_forward(cfg, folded_, toks, cache=cache,
+                                       pos_offset=pos0, mode="prefill",
+                                       block_tables=btab)
 
-        self._prefill = jax.jit(prefill)    # retraces per bucketed length
+            # writes straight through the block table into the (donated)
+            # pool; ``pos0 > 0`` continues a shared prompt prefix (suffix
+            # rows only); retraces per bucketed length
+            self._prefill = jax.jit(prefill, donate_argnums=(1,))
+        else:
+            def decode_step(folded_, cache, tok, pos):
+                return S.serve_forward(cfg, folded_, tok, cache=cache,
+                                       pos_offset=pos, mode="decode")
 
-        def write_slot(cache, cache1, b):
-            def put(c, c1):
-                starts = (0, b) + (0,) * (c.ndim - 2)
-                return jax.lax.dynamic_update_slice(c, c1, starts)
-            return jax.tree.map(put, cache, cache1)
+            # one graph for the slot table AND (by retrace) the batch-1
+            # prefill loop
+            self._decode = jax.jit(decode_step, donate_argnums=(1,))
 
-        self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
+            def prefill(folded_, toks):
+                cache1 = S.init_cache(cfg, 1, max_len)
+                return S.serve_forward(cfg, folded_, toks, cache=cache1,
+                                       mode="prefill")
+
+            self._prefill = jax.jit(prefill)  # retraces per bucketed length
+
+            def write_slot(cache, cache1, b):
+                def put(c, c1):
+                    starts = (0, b) + (0,) * (c.ndim - 2)
+                    return jax.lax.dynamic_update_slice(c, c1, starts)
+                return jax.tree.map(put, cache, cache1)
+
+            self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
 
     @staticmethod
     def _zero_stats() -> Dict[str, int]:
         return dict(prefill_tokens=0, oneshot_prefills=0,
                     loop_prefill_steps=0, decode_steps=0, decode_tokens=0,
-                    completed=0)
+                    completed=0, prefix_hits=0, shared_rows=0,
+                    suffix_prefills=0, cache_pages_peak=0)
 
-    def reset(self, seed: int = 0):
-        """Clear all serving state; keeps the compiled graphs."""
-        self.sched = Scheduler(self.batch)
-        self.requests = {}
-        self.cache = S.init_cache(self.cfg, self.batch, self.max_len)
+    def _init_state(self, seed: int):
+        self.requests: Dict[int, Request] = {}
         self.pos = np.zeros(self.batch, np.int32)
         self.rng = np.random.default_rng(seed)
         self.stats = self._zero_stats()
+        if self.layout == "paged":
+            self.alloc = BlockAllocator(self.n_pages, self.page_size)
+            self.sched = Scheduler(self.batch, allocator=self.alloc,
+                                   rows_fn=self._rows_needed)
+            self.cache = S.init_paged_cache(self.cfg, self.n_pages,
+                                            self.page_size)
+            self.block_tables = np.zeros((self.batch, self.max_blocks),
+                                         np.int32)
+        else:
+            self.alloc = None
+            self.sched = Scheduler(self.batch)
+            self.cache = S.init_cache(self.cfg, self.batch, self.max_len)
+
+    def reset(self, seed: int = 0):
+        """Clear all serving state; keeps the compiled graphs."""
+        self._init_state(seed)
+
+    # --- paged-layout helpers -------------------------------------------
+
+    def _bucket_len(self, ln: int, base: int = 0) -> int:
+        """Padded one-shot prefill length for an ``ln``-token segment
+        starting at (page-aligned) row ``base``: a multiple of
+        prefill_bucket so compiled shapes are reused; in the paged layout
+        additionally a whole number of pages (the prefill scatter writes
+        whole pages)."""
+        cap = (self.max_blocks * self.page_size if self.layout == "paged"
+               else self.smax) - base
+        bl = min(max(self.prefill_bucket,
+                     math.ceil(ln / self.prefill_bucket)
+                     * self.prefill_bucket), cap)
+        if self.layout == "paged":
+            bl = pages_needed(max(bl, ln), self.page_size) * self.page_size
+        return bl
+
+    def _rows_needed(self, request, shared_rows: int) -> int:
+        """Cache rows to reserve at admission (Scheduler rows_fn): every row
+        the request can touch — prompt + decode budget, or the padded
+        one-shot prefill scatter when that is wider.  Reserving up front is
+        what lets out-of-pages requests wait instead of OOMing mid-decode."""
+        ln = len(request.prompt)
+        rows = ln + request.max_new_tokens - 1
+        if self._attn_only and ln <= self.smax:
+            rows = max(rows, shared_rows
+                       + self._bucket_len(ln - shared_rows, base=shared_rows))
+        return rows
+
+    def _set_table_row(self, b: int, pages: List[int]):
+        self.block_tables[b, :] = 0
+        self.block_tables[b, :len(pages)] = pages
 
     # --- request lifecycle ----------------------------------------------
 
@@ -128,6 +242,13 @@ class Engine:
                 raise ValueError(
                     f"request needs {ln + request.max_new_tokens} cache rows, "
                     f"engine max_len={self.max_len}")
+        if self.layout == "paged":
+            worst = pages_needed(self._rows_needed(request, 0),
+                                 self.page_size)
+            if worst > self.alloc.capacity:
+                raise ValueError(
+                    f"request needs up to {worst} cache pages, pool has "
+                    f"{self.alloc.capacity} (n_pages={self.n_pages})")
         rid = self.sched.submit(request)
         self.requests[rid] = request
         return rid
@@ -140,8 +261,8 @@ class Engine:
         return int(np.argmax(logits_row))
 
     def _prefill_request(self, req: Request) -> Tuple[np.ndarray, object, int]:
-        """Build the batch-1 cache for a prompt; returns (last-position
-        logits (V,), cache1, prompt_len)."""
+        """Contiguous layout: build the batch-1 cache for a prompt; returns
+        (last-position logits (V,), cache1, prompt_len)."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         ln = len(prompt)
         if self._attn_only and ln <= self.smax:
@@ -149,9 +270,7 @@ class Engine:
             # a pad row at cache index r is overwritten by the decode step at
             # pos == r — the same step whose mask first admits index r — so
             # pad garbage is never attended
-            bl = min(max(self.prefill_bucket,
-                         math.ceil(ln / self.prefill_bucket)
-                         * self.prefill_bucket), self.smax)
+            bl = self._bucket_len(ln)
             toks = np.zeros((1, bl), np.int32)
             toks[0, :ln] = prompt
             logits, cache1 = self._prefill(self.folded, jnp.asarray(toks))
@@ -169,11 +288,52 @@ class Engine:
         self.stats["prefill_tokens"] += ln
         return np.asarray(logits[0, -1]), cache1, ln
 
+    def _prefill_paged_slot(self, b: int, st: SlotState) -> Tuple[np.ndarray,
+                                                                  int]:
+        """Paged layout: fill slot ``b``'s reserved pages with the prompt's
+        K/V and return (last-position logits (V,), prompt_len).
+
+        One forward either way: on a prefix hit the matched pages already
+        hold K/V for the first ``st.shared_rows`` positions, so only the
+        unseen suffix runs (queries at offset positions attending over the
+        shared pages through the block table); on a miss the whole prompt
+        prefills from position 0.  Suffix rows are bit-identical to
+        full-prefill rows on the ref/interpret backends, so sharing changes
+        prefill compute, not tokens."""
+        req = st.request
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        ln = len(prompt)
+        base = st.shared_rows                  # page-aligned by construction
+        bl = self._bucket_len(ln - base, base=base)
+        toks = np.zeros((1, bl), np.int32)
+        toks[0, :ln - base] = prompt[base:]
+        self._set_table_row(b, st.pages)
+        logits, self.cache = self._prefill(
+            self.folded, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.block_tables[b:b + 1]), jnp.int32(base))
+        if base:
+            self.stats["prefix_hits"] += 1
+            self.stats["shared_rows"] += base
+            self.stats["suffix_prefills"] += 1
+        else:
+            self.stats["oneshot_prefills"] += 1
+        self.stats["prefill_tokens"] += ln
+        self.alloc.register_prefix([int(t) for t in prompt], st.pages)
+        # pages reserved only for prefill-bucket padding go straight back
+        keep = pages_needed(ln + req.max_new_tokens - 1, self.page_size)
+        if keep < len(st.pages):
+            self.alloc.free_pages(st.pages[keep:])
+            del st.pages[keep:]
+            self._set_table_row(b, st.pages)
+        return np.asarray(logits[0, ln - base - 1]), ln
+
     def _finish(self, b: int):
-        st = self.sched.evict(b)
+        st = self.sched.evict(b)        # paged: returns the page chain
         req = self.requests.pop(st.rid)
         req.out = np.asarray(st.emitted, np.int32)
         self.pos[b] = 0
+        if self.layout == "paged":
+            self.block_tables[b, :] = 0
         self.stats["completed"] += 1
 
     def _done(self, st: SlotState) -> bool:
@@ -185,10 +345,20 @@ class Engine:
 
     def _admit(self) -> List[Tuple[int, int]]:
         emitted = []
-        for b, st in self.sched.admit():
-            last_logits, cache1, ln = self._prefill_request(st.request)
-            self.cache = self._write_slot(self.cache, cache1,
-                                          jnp.int32(b))
+        # seat one request at a time: each admission registers its prompt
+        # pages before the next is matched, so even same-tick arrivals of a
+        # repeated prompt share pages
+        while True:
+            placed = self.sched.admit(limit=1)
+            if not placed:
+                break
+            b, st = placed[0]
+            if self.layout == "paged":
+                last_logits, ln = self._prefill_paged_slot(b, st)
+            else:
+                last_logits, cache1, ln = self._prefill_request(st.request)
+                self.cache = self._write_slot(self.cache, cache1,
+                                              jnp.int32(b))
             self.pos[b] = ln
             st.pos = ln
             tok = self._pick_token(last_logits, st.request)
@@ -197,6 +367,8 @@ class Engine:
             emitted.append((st.rid, tok))
             if self._done(st):
                 self._finish(b)
+        if self.layout == "paged":
+            self.stats["cache_pages_peak"] = self.alloc.peak_live
         return emitted
 
     # --- the engine loop ------------------------------------------------
@@ -212,9 +384,14 @@ class Engine:
         toks = np.zeros((self.batch, 1), np.int32)
         for b in active:
             toks[b, 0] = self.sched.slots[b].last_token
-        logits, self.cache = self._decode(self.folded, self.cache,
-                                          jnp.asarray(toks),
-                                          jnp.asarray(self.pos))
+        if self.layout == "paged":
+            logits, self.cache = self._decode(
+                self.folded, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.pos), jnp.asarray(self.block_tables))
+        else:
+            logits, self.cache = self._decode(self.folded, self.cache,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(self.pos))
         rows = np.asarray(logits[:, -1])          # (B, V)
         for b in active:
             st = self.sched.slots[b]

@@ -1,16 +1,180 @@
-"""Slot-table scheduler for the continuous-batching engine.
+"""Slot-table scheduler + paged KV-cache block allocator.
 
 The decode graph is compiled once for a fixed number of slots; this module
 owns the bookkeeping that lets requests stream through that fixed shape:
 a FIFO waiting queue, a slot table, admission of waiting requests into free
 slots, and eviction on completion.  It is deliberately model-agnostic — the
 engine owns prefill/decode; the scheduler only decides *who sits where*.
+
+``BlockAllocator`` extends "where" from slots to cache memory: instead of an
+exclusive ``Smax`` stripe per slot, the paged engine draws fixed-size KV
+pages from one global pool.  The allocator keeps a free list, per-page
+refcounts, and a prefix registry keyed by the page's *cumulative* token
+prefix (K/V rows depend on every earlier token, so content identity is the
+whole prefix, not the page's own tokens).  Pages whose refcount drops to
+zero but that are still registered stay cached (their pool content is
+intact) on an LRU list and are reclaimed only under allocation pressure —
+so a repeated system prompt keeps hitting even after its first request
+finished.  Shared pages are mapped copy-on-write: sharers only ever read
+them; a writer must own the page exclusively (``ensure_exclusive``), which
+the engine guarantees structurally by sharing only whole pages strictly
+before the first position it will write.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+TRASH_PAGE = 0   # inactive slots' block tables point here; never allocated
+
+
+def pages_needed(rows: int, page_size: int) -> int:
+    return -(-rows // page_size)
+
+
+class BlockAllocator:
+    """Fixed-size KV page pool: free list, refcounts, prefix reuse.
+
+    Page 0 is reserved as the trash page — zeroed block-table entries of
+    inactive slots alias it, so a full-table decode step can harmlessly
+    scatter its garbage rows somewhere that no live request reads.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages >= 2 and page_size >= 1
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free: Deque[int] = collections.deque(range(1, n_pages))
+        self.ref: List[int] = [0] * n_pages
+        # chained-prefix registry: key -> (page, that page's own tokens)
+        self._cached: Dict[int, Tuple[int, tuple]] = {}
+        self._key_of: Dict[int, int] = {}     # page -> its registry key
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()         # refcount-0 cached pages
+        self.live = 0                         # pages with refcount > 0
+        self.peak_live = 0
+
+    # --- capacity -------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the trash page)."""
+        return self.n_pages - 1
+
+    def available(self) -> int:
+        return len(self.free) + len(self._lru)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.available()
+
+    # --- allocation -----------------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` exclusive pages (refcount 1), reclaiming LRU cached
+        pages if the free list runs short.  None if the pool can't cover
+        the request — the caller waits, it never partially allocates."""
+        if not self.can_alloc(n):
+            return None
+        pages = []
+        for _ in range(n):
+            if self.free:
+                p = self.free.popleft()
+            else:
+                p, _ = self._lru.popitem(last=False)     # oldest cached page
+                del self._cached[self._key_of.pop(p)]
+            self.ref[p] = 1
+            pages.append(p)
+        self._bump_live(n)
+        return pages
+
+    def free_pages(self, pages: Sequence[int]):
+        """Drop one reference per page; refcount-0 pages return to the free
+        list, unless registered — those stay cached for prefix reuse."""
+        for p in pages:
+            assert self.ref[p] > 0, f"double free of page {p}"
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self.live -= 1
+                if p in self._key_of:
+                    self._lru[p] = None
+                else:
+                    self.free.append(p)
+
+    def _bump_live(self, n: int):
+        self.live += n
+        self.peak_live = max(self.peak_live, self.live)
+
+    # --- prefix sharing -------------------------------------------------
+
+    def _walk_keys(self, tokens: Sequence[int], n: int):
+        """Chained per-page registry keys: ``key_i = hash((key_{i-1},
+        page_i tokens))``.  K/V rows depend on every earlier token, so a
+        page's identity is its *cumulative* prefix — the chained hash gives
+        that in O(page_size) per page instead of re-hashing the whole
+        prefix (O(L^2) over a prompt).  Lookups verify the page's own
+        tokens against the stored segment, and the parent key is verified
+        inductively by the walk, so a false hit needs a 64-bit hash
+        collision AND an identical current segment."""
+        ps = self.page_size
+        key = 0
+        for i in range(n):
+            seg = tuple(tokens[i * ps:(i + 1) * ps])
+            key = hash((key, seg))
+            yield key, seg
+
+    def match_prefix(self, tokens: Sequence[int], max_pages: int) -> List[int]:
+        """Longest chain of registered pages covering full-page prefixes of
+        ``tokens`` (at most ``max_pages``).  Matched pages get a reference;
+        release with ``free_pages`` if the reservation is abandoned."""
+        pages = []
+        for key, seg in self._walk_keys(tokens, max_pages):
+            hit = self._cached.get(key)
+            if hit is None or hit[1] != seg:
+                break
+            pages.append(hit[0])
+        for p in pages:
+            if self.ref[p] == 0:           # revive a cached (LRU) page
+                self._lru.pop(p, None)
+                self._bump_live(1)
+            self.ref[p] += 1
+        return pages
+
+    def register_prefix(self, tokens: Sequence[int], pages: Sequence[int]):
+        """Publish a prompt's full pages for reuse.  Only pages strictly
+        before the last prompt token are registered — at least one token
+        must run through the model so admission has next-token logits, and
+        the page the first write lands in must stay exclusive (COW
+        discipline without ever copying)."""
+        n = min((len(tokens) - 1) // self.page_size, len(pages))
+        for (key, seg), p in zip(self._walk_keys(tokens, n), pages):
+            if key in self._cached or p in self._key_of:
+                continue       # identical content already published
+            self._cached[key] = (p, seg)
+            self._key_of[p] = key
+
+    def ensure_exclusive(self, pages: List[int], idx: int
+                         ) -> Tuple[int, Optional[int]]:
+        """Copy-on-write: make ``pages[idx]`` safe to overwrite.  Returns
+        ``(page, copy_src)`` — ``copy_src`` is the old page whose rows must
+        be copied into the fresh page when the original was shared (or
+        registered, i.e. passively shareable), else None.  The paged engine
+        only ever writes pages it allocated exclusively, so in practice
+        this is a no-op assert; the hook exists so future preemption/swap
+        code inherits correct semantics."""
+        p = pages[idx]
+        if self.ref[p] == 1 and p not in self._key_of:
+            return p, None
+        fresh = self.alloc(1)
+        if fresh is None:
+            raise RuntimeError("pool exhausted during copy-on-write")
+        self.free_pages([p])
+        pages[idx] = fresh[0]
+        return fresh[0], p
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self._cached)
 
 
 @dataclasses.dataclass
@@ -21,12 +185,21 @@ class SlotState:
     pos: int = 0                    # next cache write position for this slot
     last_token: int = 0             # token to feed at the next decode step
     emitted: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    shared_rows: int = 0            # prompt rows mapped from cached pages
 
 
 class Scheduler:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int,
+                 allocator: Optional[BlockAllocator] = None,
+                 rows_fn: Optional[Callable[[object, int], int]] = None):
         assert n_slots >= 1
         self.n_slots = n_slots
+        self.allocator = allocator
+        # rows_fn(request, shared_rows) -> cache rows to reserve (the engine
+        # knows about prefill bucketing; the scheduler stays model-agnostic)
+        self.rows_fn = rows_fn or (
+            lambda req, shared: len(req.prompt) + req.max_new_tokens - 1)
         self.slots: List[Optional[SlotState]] = [None] * n_slots
         self.waiting: Deque[Tuple[int, object]] = collections.deque()
         self._next_rid = 0
@@ -41,16 +214,44 @@ class Scheduler:
 
     # --- slot side ------------------------------------------------------
 
-    def admit(self) -> List[Tuple[int, SlotState]]:
+    def _reserve(self, st: SlotState, request) -> bool:
+        """Map shared prefix pages and allocate the exclusive tail.  False
+        when the pool can't cover the request — admission stalls (FIFO is
+        preserved: later, smaller requests do NOT jump the queue)."""
+        al = self.allocator
+        ps = al.page_size
+        prompt = [int(t) for t in request.prompt]
+        shared = al.match_prefix(prompt, (len(prompt) - 1) // ps)
+        shared_rows = len(shared) * ps
+        rows = self.rows_fn(request, shared_rows)
+        need = max(0, pages_needed(rows, ps) - len(shared))
+        excl = al.alloc(need)
+        if excl is None:
+            al.free_pages(shared)          # abandon the speculative mapping
+            return False
+        st.pages = shared + excl
+        st.shared_rows = shared_rows
+        return True
+
+    def admit(self, limit: Optional[int] = None
+              ) -> List[Tuple[int, SlotState]]:
         """Seat waiting requests in free slots (FIFO).  Returns the new
         (slot index, state) pairs; the engine prefills them and fills in
-        ``pos`` / ``last_token``."""
+        ``pos`` / ``last_token``.  With a BlockAllocator, admission also
+        reserves the request's KV pages (shared prefix + exclusive tail)
+        up front — a head-of-line request that doesn't fit stalls the queue
+        instead of OOMing mid-decode."""
         placed = []
         for b in range(self.n_slots):
+            if limit is not None and len(placed) >= limit:
+                break
             if self.slots[b] is not None or not self.waiting:
                 continue
-            rid, request = self.waiting.popleft()
+            rid, request = self.waiting[0]
             st = SlotState(rid=rid, request=request)
+            if self.allocator is not None and not self._reserve(st, request):
+                break                       # out of pages: wait, keep FIFO
+            self.waiting.popleft()
             self.slots[b] = st
             placed.append((b, st))
         return placed
@@ -59,6 +260,8 @@ class Scheduler:
         st = self.slots[b]
         assert st is not None, f"evicting empty slot {b}"
         self.slots[b] = None
+        if self.allocator is not None and st.pages:
+            self.allocator.free_pages(st.pages)
         return st
 
     # --- queries --------------------------------------------------------

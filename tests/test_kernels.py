@@ -219,6 +219,110 @@ def test_decode_attention_ops_dispatch():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
 
+def _paged_inputs(b, hkv, g, d, psize, n_pages, nb, lengths, seed=31):
+    """Random pool + per-slot block tables (distinct pages per slot; unused
+    table entries alias the trash page 0, like the serving engine's)."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-64, 65, (b, hkv, g, d)).astype(np.int8)
+    kp = rng.integers(-64, 65, (n_pages, psize, hkv, d)).astype(np.int8)
+    vp = rng.integers(-64, 65, (n_pages, psize, hkv, d)).astype(np.int8)
+    perm = iter(rng.permutation(np.arange(1, n_pages)))
+    btab = np.zeros((b, nb), np.int32)
+    for bb, ln in enumerate(lengths):
+        for i in range(-(-int(ln) // psize)):
+            btab[bb, i] = next(perm)
+    s_logit = 1.0 / (0.05 * np.sqrt(d))
+    M, sh = fxp.quantize_multiplier(1.0 / (s_logit * qs.LUT_DELTA))
+    return q, kp, vp, btab, M, sh, s_logit
+
+
+@pytest.mark.parametrize("psize,lengths", [
+    (64, [1, 37, 64]),          # one page covers every slot
+    (16, [1, 23, 48]),          # cross-page fp32 carry
+    (8, [5, 17, 40]),
+])
+def test_paged_decode_attention_bit_exact_vs_oracle(psize, lengths):
+    """The paged decode kernel follows per-slot block tables through the
+    scalar-prefetch index map and must be BIT-EXACT against the
+    block-online oracle (same accumulation order) for any page count."""
+    from repro.kernels.decode_attention import paged_decode_qattention
+
+    b, hkv, g, d = 3, 2, 4, 64
+    nb = 64 // psize
+    n_pages = b * nb + 1
+    q, kp, vp, btab, M, sh, s_logit = _paged_inputs(
+        b, hkv, g, d, psize, n_pages, nb, lengths)
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    args = (jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(btab), jnp.asarray(lengths, jnp.int32),
+            jnp.int32(M), jnp.int32(sh), lut7,
+            jnp.float32(1.0 / s_logit), jnp.float32(1.0))
+    got = np.asarray(paged_decode_qattention(*args, interpret=True), np.int32)
+    want = np.asarray(R.paged_decode_qattention_ref(*args), np.int32)
+    np.testing.assert_array_equal(got, want)
+    # the gathered contiguous view through the row oracle stays within the
+    # documented 1-LSB flash tolerance (exact when one page covers a slot)
+    kv = np.asarray(jnp.take(jnp.asarray(kp), jnp.asarray(btab), axis=0)
+                    ).reshape(b, nb * psize, hkv, d)
+    vv = np.asarray(jnp.take(jnp.asarray(vp), jnp.asarray(btab), axis=0)
+                    ).reshape(b, nb * psize, hkv, d)
+    row = np.asarray(R.decode_qattention_ref(
+        jnp.asarray(q), jnp.asarray(kv.transpose(0, 2, 1, 3)),
+        jnp.asarray(vv.transpose(0, 2, 1, 3)),
+        jnp.asarray(lengths, jnp.int32), jnp.int32(M), jnp.int32(sh), lut7,
+        jnp.float32(1.0)), np.int32)
+    assert np.max(np.abs(got - row)) <= (0 if psize >= 64 else 1)
+
+
+def test_paged_decode_attention_ops_dispatch():
+    """ops.paged_decode_attention_q: ref (block-online oracle) and
+    interpret (Pallas kernel) backends agree bit-for-bit."""
+    b, hkv, g, d, psize, nb = 2, 1, 2, 32, 8, 4
+    q, kp, vp, btab, M, sh, s_logit = _paged_inputs(
+        b, hkv, g, d, psize, b * nb + 1, nb, [9, 32], seed=5)
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    args = (jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(btab), jnp.asarray([9, 32], jnp.int32),
+            jnp.int32(M), jnp.int32(sh), lut7,
+            jnp.float32(1.0 / s_logit), jnp.float32(1.0))
+    a = ops.paged_decode_attention_q(*args, impl="ref")
+    c = ops.paged_decode_attention_q(*args, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_paged_matches_contiguous_decode_kernel():
+    """With an identity block table (page i == rows [i*P, (i+1)*P)), the
+    paged kernel must reproduce the contiguous decode kernel bit-for-bit
+    when block size == page size (identical DMA schedule)."""
+    from repro.kernels.decode_attention import (decode_qattention,
+                                                paged_decode_qattention)
+
+    b, hkv, g, d, smax, psize = 2, 2, 4, 64, 64, 16
+    rng = np.random.default_rng(13)
+    q = rng.integers(-64, 65, (b, hkv, g, d)).astype(np.int8)
+    k = rng.integers(-64, 65, (b, smax, hkv, d)).astype(np.int8)
+    v = rng.integers(-64, 65, (b, smax, hkv, d)).astype(np.int8)
+    lengths = np.asarray([29, 64], np.int32)
+    nb = smax // psize
+    # pool = per-slot stripes split into pages; table = identity chains
+    kp = k.reshape(b * nb, psize, hkv, d)
+    vp = v.reshape(b * nb, psize, hkv, d)
+    btab = np.arange(b * nb, dtype=np.int32).reshape(b, nb)
+    s_logit = 1.0 / (0.05 * np.sqrt(d))
+    M, sh = fxp.quantize_multiplier(1.0 / (s_logit * qs.LUT_DELTA))
+    lut7 = jnp.asarray(R.make_exp_lut_q7())
+    cont = np.asarray(decode_qattention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        jnp.asarray(lengths), jnp.int32(M), jnp.int32(sh), lut7,
+        jnp.float32(1.0 / s_logit), jnp.float32(1.0), bkv=psize,
+        interpret=True))
+    paged = np.asarray(paged_decode_qattention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(btab),
+        jnp.asarray(lengths), jnp.int32(M), jnp.int32(sh), lut7,
+        jnp.float32(1.0 / s_logit), jnp.float32(1.0), interpret=True))
+    np.testing.assert_array_equal(paged, cont)
+
+
 @pytest.mark.parametrize("bkv,cache_len", [(128, 128), (32, 100), (64, 37)])
 def test_flash_qdecode_matches_row_oracle(bkv, cache_len):
     """GQA decode kernel (KV streamed once per block for the whole q group)

@@ -1,0 +1,184 @@
+"""BlockAllocator + paged Scheduler unit and property tests.
+
+Pure-python bookkeeping: page refcounts, prefix registry, LRU reclaim,
+FIFO-preserving admission stalls.  No model or jax required.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # hypothesis is a dev-only dependency (requirements-dev.txt).  Without it
+    # the property tests are skipped but every deterministic test still runs,
+    # so the tier-1 suite collects cleanly in minimal environments.
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r "
+                   "requirements-dev.txt)")(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies`` at decoration time only."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+from repro.serve.scheduler import BlockAllocator, Scheduler
+
+
+@dataclasses.dataclass
+class Req:
+    prompt: np.ndarray
+    max_new_tokens: int = 4
+
+
+def _req(tokens, max_new=4):
+    return Req(prompt=np.asarray(tokens, np.int32), max_new_tokens=max_new)
+
+
+# --- allocator unit tests -----------------------------------------------------
+
+def test_alloc_exhaustion_and_free_returns_pages():
+    al = BlockAllocator(n_pages=5, page_size=4)   # 4 allocatable (page 0 trash)
+    assert al.capacity == 4
+    a = al.alloc(3)
+    assert a is not None and len(a) == 3 and 0 not in a
+    assert al.alloc(2) is None                    # over capacity: no partial
+    assert al.available() == 1 and al.live == 3
+    al.free_pages(a[:2])
+    assert al.available() == 3
+    b = al.alloc(2)
+    assert b is not None and set(b) <= set(a[:2]) | {4}
+    assert al.peak_live == 3
+
+
+def test_refcounted_shared_pages_stay_while_sharer_live():
+    al = BlockAllocator(n_pages=6, page_size=2)
+    prompt = [1, 2, 3, 4, 5]                      # 2 full pages + 1 tail row
+    owner = al.alloc(3)
+    al.register_prefix(prompt, owner)             # registers pages 0..1 only
+    shared = al.match_prefix(prompt, (len(prompt) - 1) // 2)
+    assert shared == owner[:2]
+    assert al.ref[shared[0]] == 2
+    al.free_pages(owner)                          # owner evicted first
+    # sharer still holds the prefix pages: they must NOT be reallocatable
+    assert al.ref[shared[0]] == 1 and al.ref[shared[1]] == 1
+    grabbed = al.alloc(al.available())
+    assert grabbed is not None and not (set(grabbed) & set(shared))
+    al.free_pages(grabbed)
+    al.free_pages(shared)                         # last sharer gone
+    # registered pages become LRU-cached (still matchable), not free-listed
+    again = al.match_prefix(prompt, 2)
+    assert again == shared
+
+
+def test_lru_reclaim_under_pressure_invalidates_registry():
+    al = BlockAllocator(n_pages=4, page_size=2)
+    prompt = [7, 8, 9]
+    pages = al.alloc(2)
+    al.register_prefix(prompt, pages)
+    al.free_pages(pages)                          # rc 0, cached on the LRU
+    assert al.match_prefix(prompt, 1) == pages[:1]
+    al.free_pages(pages[:1])
+    got = al.alloc(3)                             # needs every pool page
+    assert got is not None and len(got) == 3
+    assert al.match_prefix(prompt, 1) == []       # registry entry reclaimed
+
+
+def test_ensure_exclusive_cow():
+    al = BlockAllocator(n_pages=5, page_size=2)
+    prompt = [1, 2, 3]
+    chain = al.alloc(1)
+    al.register_prefix(prompt, chain)
+    shared = al.match_prefix(prompt, 1)           # rc -> 2
+    pages = list(shared)
+    page, copy_src = al.ensure_exclusive(pages, 0)
+    assert copy_src == shared[0] and page != shared[0]   # fresh copy target
+    assert al.ref[page] == 1 and al.ref[shared[0]] == 1
+    # exclusive unregistered page: no copy needed
+    mine = al.alloc(1)
+    page2, src2 = al.ensure_exclusive(mine, 0)
+    assert page2 == mine[0] and src2 is None
+
+
+# --- scheduler + allocator ----------------------------------------------------
+
+def _paged_sched(n_slots, n_pages, page_size):
+    al = BlockAllocator(n_pages, page_size)
+    return Scheduler(n_slots, allocator=al), al
+
+
+def test_admission_waits_when_pool_exhausted_fifo_preserved():
+    sched, al = _paged_sched(n_slots=3, n_pages=5, page_size=4)
+    # head request needs 3 pages ((8 + 4 - 1)/4), the pool has 4
+    sched.submit(_req(range(100, 108), max_new=4))    # rid 0: 3 pages
+    sched.submit(_req(range(200, 208), max_new=4))    # rid 1: 3 pages
+    sched.submit(_req([1], max_new=2))                # rid 2: 1 page
+    placed = sched.admit()
+    # rid 0 seats; rid 1 stalls on pages; rid 2 must NOT jump the queue
+    assert [st.rid for _, st in placed] == [0]
+    assert [rid for rid, _ in sched.waiting] == [1, 2]
+    assert sched.admit() == []                        # still stalled
+    st0 = sched.evict(0)                              # completion frees pages
+    assert all(al.ref[p] == 0 for p in st0.pages)
+    placed = sched.admit()
+    assert [st.rid for _, st in placed] == [1, 2]     # FIFO across the stall
+
+
+def test_eviction_returns_pages_to_free_list():
+    sched, al = _paged_sched(n_slots=1, n_pages=5, page_size=4)
+    sched.submit(_req(range(10), max_new=3))
+    (b, st), = sched.admit()
+    assert al.live == len(st.pages) == 3
+    sched.evict(b)
+    assert al.live == 0 and al.available() == 4
+
+
+def test_admission_maps_shared_prefix_pages():
+    sched, al = _paged_sched(n_slots=2, n_pages=9, page_size=2)
+    prompt = list(range(50, 57))                      # 7 tokens, 3 full pages
+    sched.submit(_req(prompt, max_new=2))
+    (b0, st0), = sched.admit()
+    al.register_prefix([int(t) for t in st0.request.prompt], st0.pages)
+    sched.submit(_req(prompt, max_new=2))
+    (b1, st1), = sched.admit()
+    assert st1.shared_rows == 6                       # (7-1)//2 pages shared
+    assert st1.pages[:3] == st0.pages[:3]
+    assert all(al.ref[p] == 2 for p in st1.pages[:3])
+    sched.evict(b0)
+    assert all(al.ref[p] == 1 for p in st1.pages[:3])  # sharer keeps them
+
+
+# --- allocator invariants (property test) -------------------------------------
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 4)), min_size=1,
+                max_size=60), st.integers(4, 9))
+@settings(max_examples=50, deadline=None)
+def test_allocator_invariants_random_traffic(ops, n_pages):
+    """Random alloc/free traffic: no page is ever handed out twice, the
+    trash page is never allocated, and free+cached+live always partitions
+    the pool."""
+    al = BlockAllocator(n_pages=n_pages, page_size=4)
+    chains = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            got = al.alloc(n)
+            if got is None:
+                assert al.available() < n         # refusal only when short
+            else:
+                assert 0 not in got
+                chains.append(got)
+        elif chains:
+            al.free_pages(chains.pop())
+        held = [p for c in chains for p in c]
+        assert len(held) == len(set(held))        # exclusive ownership
+        assert al.live == len(held)
+        assert len(al.free) + len(al._lru) + al.live == al.capacity
+        assert al.peak_live >= al.live

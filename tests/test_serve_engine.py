@@ -7,7 +7,7 @@ import pytest
 from repro.configs import smoke_config
 from repro.models import fold as F
 from repro.models import transformer as T
-from repro.serve.engine import Engine, LockstepEngine, Request
+from repro.serve.engine import Engine, LockstepEngine, Request, make_engine
 from repro.serve.scheduler import Scheduler
 
 KEY = jax.random.PRNGKey(0)
@@ -59,10 +59,17 @@ def _mixed_requests(cfg, lens, max_news, seed=0):
             for ln, mn in zip(lens, max_news)]
 
 
-def test_continuous_matches_lockstep_token_for_token():
+@pytest.mark.parametrize("layout,kw", [
+    ("contiguous", {}),
+    ("paged", dict(page_size=8)),
+    ("paged", dict(page_size=4, n_pages=9)),   # tight pool: admission stalls
+])
+def test_continuous_matches_lockstep_token_for_token(layout, kw):
     """Greedy continuous batching (one-shot prefill, per-slot positions,
     mid-flight admission) must reproduce, per request, exactly what the
-    lockstep engine produces for that request alone."""
+    lockstep engine produces for that request alone — in BOTH cache
+    layouts: the contiguous slot stripes and the paged block-table pool
+    (including with a pool small enough to force out-of-pages waits)."""
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
     lens = [3, 11, 6, 17, 5]
@@ -74,7 +81,9 @@ def test_continuous_matches_lockstep_token_for_token():
         lock.reset()
         truth.append(lock.generate([r])[0].out.tolist())
 
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64, prefill_bucket=4)
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64, prefill_bucket=4,
+                 cache_layout=layout, **kw)
+    assert eng.layout == layout
     out = eng.generate(_mixed_requests(cfg, lens, max_news))
     got = [r.out.tolist() for r in out]
     assert got == truth
@@ -82,6 +91,11 @@ def test_continuous_matches_lockstep_token_for_token():
     assert eng.stats["completed"] == len(lens)
     assert eng.stats["oneshot_prefills"] == len(lens)
     assert eng.stats["loop_prefill_steps"] == 0
+    if layout == "paged":
+        # reservation-based pool: peak pages reflect actual, not worst-case,
+        # sequence memory — strictly under the contiguous footprint
+        assert 0 < eng.stats["cache_pages_peak"] <= eng.alloc.capacity
+        assert eng.alloc.live == 0                # all pages came back
 
 
 def test_engine_streaming_admission_and_determinism():
@@ -122,6 +136,96 @@ def test_engine_rejects_overlong_request():
     eng = Engine(cfg, folded, batch_slots=1, max_len=16)
     with pytest.raises(ValueError):
         eng.submit(Request(prompt=np.zeros(12, np.int32), max_new_tokens=8))
+
+
+def test_paged_rejects_request_larger_than_pool():
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
+                 page_size=4, n_pages=3)         # 2 allocatable pages
+    with pytest.raises(ValueError):
+        eng.submit(Request(prompt=np.zeros(10, np.int32), max_new_tokens=4))
+
+
+def test_paged_prefix_reuse_skips_prefill_and_pages():
+    """Requests repeating one system prompt must map its cached pages
+    (refcounted sharing), run only the unseen suffix, produce tokens
+    identical to the contiguous engine, and use fewer peak pages than
+    exclusive stripes would."""
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(0, cfg.vocab_size, (24,)).astype(np.int32)
+
+    def requests(seed):
+        r = np.random.default_rng(seed)
+        return [Request(prompt=np.concatenate(
+                    [sys_prompt,
+                     r.integers(0, cfg.vocab_size, (3 + i,)).astype(np.int32)]),
+                    max_new_tokens=4)
+                for i in range(5)]
+
+    cont = Engine(cfg, folded, batch_slots=2, max_len=64,
+                  cache_layout="contiguous")
+    truth = [r.out.tolist() for r in cont.generate(requests(7))]
+
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
+                 page_size=8)
+    out = eng.generate(requests(7))
+    assert [r.out.tolist() for r in out] == truth
+    # first request prefills one-shot; the other four share its prefix pages
+    assert eng.stats["oneshot_prefills"] == 1
+    assert eng.stats["prefix_hits"] == 4
+    assert eng.stats["shared_rows"] == 4 * 24     # 3 pages x 8 rows each
+    # paged peak well under the contiguous footprint (2 slots x smax rows)
+    assert eng.stats["cache_pages_peak"] < eng.batch * eng.max_blocks
+    # prefix pages stay cached (LRU) after every sharer finished
+    assert eng.alloc.live == 0 and eng.alloc.cached_pages > 0
+
+
+def test_paged_prefix_cache_survives_eviction():
+    """The prefix registry keeps refcount-0 pages cached: a request arriving
+    AFTER every earlier sharer completed still hits."""
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (17,)).astype(np.int32)
+    eng = Engine(cfg, folded, batch_slots=1, max_len=64, cache_layout="paged",
+                 page_size=8)
+    first = eng.generate([Request(prompt=prompt.copy(), max_new_tokens=4)])
+    assert eng.stats["prefix_hits"] == 0
+    second = eng.generate([Request(prompt=prompt.copy(), max_new_tokens=4)])
+    assert eng.stats["prefix_hits"] == 1
+    assert second[0].out.tolist() == first[0].out.tolist()
+
+
+def test_make_engine_warns_on_dropped_kwargs():
+    """make_engine must not silently pop continuous-only kwargs for
+    lockstep archs (musicgen: audio codebooks)."""
+    cfg = smoke_config("musicgen-medium", n_layers=1)
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    calib = jax.random.randint(KEY, (2, cfg.n_codebooks, 8), 0,
+                               cfg.vocab_size)
+    _, obs, _ = T.forward(cfg, params, amax, calib)
+    folded = F.fold_params(cfg, params, obs)
+    with pytest.warns(UserWarning, match="prefill_bucket"):
+        eng = make_engine(cfg, folded, batch_slots=2, max_len=32,
+                          prefill_bucket=8)
+    assert isinstance(eng, LockstepEngine)
+    with pytest.warns(UserWarning, match="cache_layout"):
+        make_engine(cfg, folded, batch_slots=2, max_len=32,
+                    cache_layout="paged", page_size=8)
+
+
+def test_make_engine_passes_kwargs_to_continuous():
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    eng = make_engine(cfg, folded, batch_slots=2, max_len=64,
+                      prefill_bucket=4, cache_layout="paged", page_size=8)
+    assert isinstance(eng, Engine)
+    assert eng.layout == "paged" and eng.page_size == 8
+    assert eng.prefill_bucket == 4
 
 
 @pytest.mark.slow
