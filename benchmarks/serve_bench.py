@@ -1,5 +1,6 @@
-"""Serving throughput: cache layouts (paged vs contiguous) and engines
-(continuous vs lockstep) over the same folded integer model.
+"""Serving throughput AND latency: cache layouts (paged vs contiguous),
+engines (continuous vs lockstep), and prefill scheduling (chunked vs
+one-shot) over the same folded integer model.
 
 Workloads (``--workload``):
 
@@ -11,8 +12,15 @@ Workloads (``--workload``):
     from the length palette.  The paged engine's block-table allocator maps
     the shared prefix pages copy-on-write, so repeated prompts skip both the
     prefill compute and the pages.
+  * ``longprompt`` — the tail-latency shape: a few very long prompts
+    (``--n-long`` x ``--long-len``) dropped into steady short-request
+    traffic.  Runs the paged engine twice — one-shot admission prefill vs
+    the chunked token-budget loop (``--max-batched-tokens`` /
+    ``--max-prefill-chunk``) — and reports per-class TTFT: chunking bounds
+    the short requests' TTFT because a long prompt no longer monopolizes
+    the step loop for its whole prefill.
 
-Engines/layouts (``--layout``):
+Engines/layouts (``--layout``, poisson/prefix workloads):
 
   * ``contiguous`` — lockstep baseline vs the continuous engine on the dense
     per-slot cache (the pre-paging A/B).
@@ -20,15 +28,24 @@ Engines/layouts (``--layout``):
     same requests, same greedy tokens, different cache addressing.
   * ``both``       — all three (default).
 
-Greedy outputs must be identical per request across every engine/layout off
-the compiled pallas backend — layouts change throughput and memory, not
-tokens; the bench exits non-zero on a mismatch.  Prints ``name,value,
-derived`` CSV; ``--json`` also writes a BENCH_PR.json artifact (tokens/s per
-engine, peak cache pages, prefix-reuse stats) for the CI perf trajectory.
+Every run reports aggregate tokens/s plus per-request TTFT and inter-token
+latency p50/p95 (wall clock, measured on the timed pass).  All randomness —
+the Poisson arrival trace, prompt sampling, and the shared prefix — derives
+from ONE ``--seed`` through independent SeedSequence streams, so A/B runs
+replay the identical workload.
+
+Greedy outputs must be identical per request across every engine / layout /
+chunking policy off the compiled pallas backend — scheduling changes
+throughput and latency, not tokens; the bench exits non-zero on a mismatch.
+Prints ``name,value,derived`` CSV; ``--json`` also writes an artifact
+(BENCH_PR.json / BENCH_PREFIX.json / BENCH_CHUNKED.json in CI) for the perf
+trajectory; the longprompt artifact includes a per-tick Engine.stats()
+trace of the chunked run.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json BENCH_PR.json
     PYTHONPATH=src python benchmarks/serve_bench.py --workload prefix --layout paged
-    PYTHONPATH=src python benchmarks/serve_bench.py --arch yi-6b --requests 24
+    PYTHONPATH=src python benchmarks/serve_bench.py --workload longprompt \
+        --json BENCH_CHUNKED.json
 """
 from __future__ import annotations
 
@@ -46,8 +63,8 @@ import numpy as np
 
 def make_workload(rng, n_requests, lengths, rate, max_new_range,
                   prefix_len=0):
-    """Poisson arrivals: exponential interarrival gaps (unit = decode steps),
-    uniform prompt-length palette, uniform decode budgets.  With
+    """Poisson arrivals: exponential interarrival gaps (unit = engine
+    ticks), uniform prompt-length palette, uniform decode budgets.  With
     ``prefix_len`` the palette lengths become suffixes after one shared
     system prompt."""
     t = 0.0
@@ -58,8 +75,37 @@ def make_workload(rng, n_requests, lengths, rate, max_new_range,
             arrival=t,
             prompt_len=prefix_len + int(rng.choice(lengths)),
             max_new=int(rng.integers(*max_new_range)),
+            cls="all",
         ))
     return work
+
+
+def make_longprompt_workload(rng, n_long, long_len, n_short, lengths, rate,
+                             max_new_range):
+    """A few very long prompts spread over a steady stream of short
+    requests — the workload whose TTFT tail one-shot admission prefill
+    ruins and chunked prefill bounds.  Each long prompt lands on a short
+    request's arrival tick, AHEAD of it in FIFO order — the collision where
+    one-shot admission makes the short wait out the entire long prefill
+    (in continuous traffic these collisions are the norm; the virtual-time
+    clock would otherwise hide them between ticks)."""
+    t = 0.0
+    shorts = []
+    for _ in range(n_short):
+        t += rng.exponential(1.0 / rate)
+        shorts.append(dict(
+            arrival=t,
+            prompt_len=int(rng.choice(lengths)),
+            max_new=int(rng.integers(*max_new_range)),
+            cls="short",
+        ))
+    longs = [dict(arrival=shorts[(j * n_short) // n_long]["arrival"],
+                  prompt_len=long_len,
+                  max_new=int(rng.integers(*max_new_range)),
+                  cls="long")
+             for j in range(max(n_long, 0))] if shorts else []
+    # stable sort: a long precedes its equal-arrival short (FIFO collision)
+    return sorted(longs + shorts, key=lambda w: w["arrival"])
 
 
 def build_requests(Request, rng, work, vocab, prefix=None):
@@ -89,33 +135,166 @@ def run_lockstep(eng, requests):
     return requests
 
 
-def run_continuous(eng, requests, work):
-    """Requests arrive over virtual time (1 tick = one decode step of the
-    engine) following the workload's Poisson process and are submitted when
-    due; the clock fast-forwards over idle gaps so lulls cost no wall time.
-    Same completion set as the lockstep baseline, different admission
-    dynamics."""
+def run_continuous(eng, requests, work, lat=None, trace=None):
+    """Requests arrive over virtual time (1 tick = one engine step)
+    following the workload's arrival process and are submitted when due;
+    the clock fast-forwards over idle gaps so lulls cost no wall time.
+    ``lat`` (dict) collects per-request submit/token timestamps; ``trace``
+    (list) collects Engine.stats() gauges per tick."""
+    rid2idx = {}
     i = 0
     n = len(requests)
+
+    def submit(idx, tick):
+        rid2idx[eng.submit(requests[idx])] = idx
+        if lat is not None:
+            lat[idx] = dict(submit_tick=tick,
+                            submit_wall=time.perf_counter(), tokens=[])
+
     while i < n or eng.sched.has_work:
-        t = eng.stats["decode_steps"]
+        t = eng.counters["ticks"]
         while i < n and work[i]["arrival"] <= t:
-            eng.submit(requests[i])
+            submit(i, t)
             i += 1
         if not eng.sched.has_work and i < n:
-            eng.submit(requests[i])     # idle: jump to the next arrival
-            i += 1
-        eng.step()
+            # idle: jump the clock to the next arrival — and submit EVERY
+            # request due at that instant, so same-arrival collisions (the
+            # longprompt workload's point) survive the fast-forward
+            t_next = work[i]["arrival"]
+            while i < n and work[i]["arrival"] <= t_next:
+                submit(i, t_next)
+                i += 1
+        emitted = eng.step()
+        now = time.perf_counter()
+        tick = eng.counters["ticks"]
+        if lat is not None:
+            for rid, _tok in emitted:
+                lat[rid2idx[rid]]["tokens"].append((tick, now))
+        if trace is not None:
+            if len(trace) < 5000:
+                g = eng.stats()
+                g.pop("counters")
+                g["tick"] = tick
+                trace.append(g)
+            elif trace[-1] != "TRUNCATED":
+                trace.append("TRUNCATED")   # explicit, not a silent cutoff
     return requests
 
 
-def _timed(runner, eng, fresh, *extra):
+def latency_summary(work, lat):
+    """Per-request TTFT (submit -> first token) p50/p95 per request class,
+    and inter-token latency p50/p95 pooled over all gaps.  Milliseconds."""
+    def pct(xs, q):
+        return round(float(np.percentile(xs, q)) * 1e3, 3) if xs else 0.0
+
+    ttft_by_cls = {}
+    itl = []
+    for i, w in enumerate(work):
+        rec = lat.get(i)
+        if not rec or not rec["tokens"]:
+            continue
+        ttft_by_cls.setdefault(w["cls"], []).append(
+            rec["tokens"][0][1] - rec["submit_wall"])
+        walls = [wall for _, wall in rec["tokens"]]
+        itl.extend(float(d) for d in np.diff(walls))
+    out = dict(itl_p50_ms=pct(itl, 50), itl_p95_ms=pct(itl, 95))
+    for cls, tt in sorted(ttft_by_cls.items()):
+        out[f"ttft_{cls}_p50_ms"] = pct(tt, 50)
+        out[f"ttft_{cls}_p95_ms"] = pct(tt, 95)
+    return out
+
+
+def _timed(runner, eng, fresh, *extra, **kw):
     """Warmup pass (compilation) then a timed pass on fresh state."""
     runner(eng, fresh(), *extra)
     eng.reset()
     t0 = time.perf_counter()
-    out = runner(eng, fresh(), *extra)
+    out = runner(eng, fresh(), *extra, **kw)
     return out, time.perf_counter() - t0
+
+
+def _rng_streams(seed):
+    """Independent deterministic streams off ONE seed: arrival process,
+    prompt tokens, shared prefix tokens.  A/B runs (and the warmup vs
+    timed pass) therefore replay byte-identical workloads."""
+    ss = np.random.SeedSequence(seed)
+    return [np.random.default_rng(c) for c in ss.spawn(3)]
+
+
+def bench_chunked(args, cfg, folded, Request):
+    """longprompt workload: paged one-shot admission vs the chunked
+    token-budget loop, same requests, same tokens — different TTFT tail."""
+    from repro.serve.engine import Engine
+
+    r_arrival, _, _ = _rng_streams(args.seed)
+    lengths = [int(x) for x in args.lengths.split(",")]
+    work = make_longprompt_workload(
+        r_arrival, args.n_long, args.long_len, args.requests, lengths,
+        args.rate, (args.max_new_lo, args.max_new_hi))
+    max_len = max(args.long_len, max(lengths)) + args.max_new_hi + 1
+
+    def fresh():
+        _, r_prompt, _ = _rng_streams(args.seed)
+        return build_requests(Request, r_prompt, work, cfg.vocab_size)
+
+    n_tok = sum(w["max_new"] for w in work)
+    rows, outs, summaries = [], {}, {}
+    artifact = dict(
+        bench="serve_chunked", workload="longprompt", arch=cfg.name,
+        slots=args.slots, n_long=args.n_long, long_len=args.long_len,
+        n_short=args.requests, lengths=lengths, page_size=args.page_size,
+        max_batched_tokens=args.max_batched_tokens,
+        max_prefill_chunk=args.max_prefill_chunk, seed=args.seed)
+
+    trace = []
+    for name, kw, tr in [
+        ("oneshot", {}, None),
+        ("chunked", dict(max_batched_tokens=args.max_batched_tokens,
+                         max_prefill_chunk=args.max_prefill_chunk), trace),
+    ]:
+        eng = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
+                     cache_layout="paged", page_size=args.page_size, **kw)
+        lat = {}
+        out, secs = _timed(run_continuous, eng, fresh, work,
+                           lat=lat, trace=tr)
+        outs[name] = [r.out.tolist() for r in out]
+        summaries[name] = latency_summary(work, lat)
+        tps = n_tok / secs
+        rows.append((f"serve/{name}_tok_per_s", tps, f"wall={secs:.2f}s"))
+        rows.append((f"serve/{name}_ttft_short_p95_ms",
+                     summaries[name].get("ttft_short_p95_ms", 0.0),
+                     f"p50={summaries[name].get('ttft_short_p50_ms', 0.0)}"))
+        rows.append((f"serve/{name}_itl_p95_ms",
+                     summaries[name]["itl_p95_ms"], ""))
+        artifact[name] = dict(tok_per_s=round(tps, 2), **summaries[name],
+                              engine_counters=eng.counters)
+
+    os_p95 = summaries["oneshot"].get("ttft_short_p95_ms", 0.0)
+    ch_p95 = summaries["chunked"].get("ttft_short_p95_ms", 0.0)
+    if ch_p95 > 0:
+        rows.append(("serve/chunked_ttft_short_p95_speedup",
+                     os_p95 / ch_p95, "oneshot_p95/chunked_p95"))
+        artifact["ttft_short_p95_speedup"] = round(os_p95 / ch_p95, 3)
+    match = outs["chunked"] == outs["oneshot"]
+    rows.append(("serve/outputs_match", float(match), "chunked+oneshot"))
+    artifact.update(outputs_match=bool(match), stats_trace=trace)
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
+
+    from repro.kernels import ops
+    if not match and ops.backend() != "pallas":
+        print("ERROR: greedy outputs diverged between chunked and one-shot "
+              "prefill", file=sys.stderr)
+        return 1
+    if not match:
+        print("note: output mismatch tolerated on the pallas backend "
+              "(prefill kernels are not bit-identical there)",
+              file=sys.stderr)
+    return 0
 
 
 def bench(args):
@@ -128,20 +307,23 @@ def bench(args):
     calib = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
     folded = calibrated_folded(cfg, key, calib)
 
+    if args.workload == "longprompt":
+        return bench_chunked(args, cfg, folded, Request)
+
     lengths = [int(x) for x in args.lengths.split(",")]
     prefix_len = args.prefix_len if args.workload == "prefix" else 0
     max_len = prefix_len + max(lengths) + args.max_new_hi + 1
-    rng = np.random.default_rng(args.seed)
-    work = make_workload(rng, args.requests, lengths, args.rate,
+    r_arrival, _, r_prefix = _rng_streams(args.seed)
+    work = make_workload(r_arrival, args.requests, lengths, args.rate,
                          (args.max_new_lo, args.max_new_hi),
                          prefix_len=prefix_len)
-    prefix = (np.random.default_rng(args.seed + 7)
-              .integers(0, cfg.vocab_size, (prefix_len,)).astype(np.int32)
-              if prefix_len else None)
+    prefix = (r_prefix.integers(0, cfg.vocab_size, (prefix_len,))
+              .astype(np.int32) if prefix_len else None)
 
     def fresh():
-        r = np.random.default_rng(args.seed + 1)
-        return build_requests(Request, r, work, cfg.vocab_size, prefix=prefix)
+        _, r_prompt, _ = _rng_streams(args.seed)
+        return build_requests(Request, r_prompt, work, cfg.vocab_size,
+                              prefix=prefix)
 
     run_lock = args.layout in ("contiguous", "both")
     run_paged = args.layout in ("paged", "both")
@@ -149,13 +331,14 @@ def bench(args):
     rows, artifact = [], dict(
         bench="serve_layouts", workload=args.workload, arch=cfg.name,
         slots=args.slots, requests=args.requests, lengths=lengths,
-        prefix_len=prefix_len, page_size=args.page_size)
+        prefix_len=prefix_len, page_size=args.page_size, seed=args.seed)
     n_tok = n_prompt = None
     outs = {}
 
     cont = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
                   cache_layout="contiguous")
-    cont_out, cont_s = _timed(run_continuous, cont, fresh, work)
+    cont_lat = {}
+    cont_out, cont_s = _timed(run_continuous, cont, fresh, work, lat=cont_lat)
     n_tok = sum(len(r.out) for r in cont_out)
     n_prompt = sum(len(r.prompt) for r in cont_out)
     cont_tps = n_tok / cont_s
@@ -163,12 +346,17 @@ def bench(args):
     # the dense layout reserves its whole footprint up front: page-equivalent
     # is slots x blocks-per-stripe, the number the paged pool competes with
     cont_pages = args.slots * -(-cont.smax // args.page_size)
+    cont_sum = latency_summary(work, cont_lat)
     rows.append(("serve/continuous_tok_per_s", cont_tps,
                  f"wall={cont_s:.2f}s_gen={n_tok}_prompt={n_prompt}"))
+    rows.append(("serve/continuous_ttft_p95_ms",
+                 cont_sum.get("ttft_all_p95_ms", 0.0),
+                 f"itl_p95={cont_sum['itl_p95_ms']}"))
     artifact.update(generated_tokens=n_tok, prompt_tokens=n_prompt,
                     continuous_tok_per_s=round(cont_tps, 2),
+                    continuous_latency=cont_sum,
                     contiguous_page_equiv=cont_pages,
-                    engine_stats=cont.stats)
+                    engine_counters=cont.counters)
 
     if run_lock:
         lock = LockstepEngine(cfg, folded, batch_slots=args.slots,
@@ -185,22 +373,29 @@ def bench(args):
     if run_paged:
         paged = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
                        cache_layout="paged", page_size=args.page_size)
-        paged_out, paged_s = _timed(run_continuous, paged, fresh, work)
+        paged_lat = {}
+        paged_out, paged_s = _timed(run_continuous, paged, fresh, work,
+                                    lat=paged_lat)
         paged_tps = n_tok / paged_s
         outs["paged"] = [r.out.tolist() for r in paged_out]
-        peak = paged.stats["cache_pages_peak"]
+        peak = paged.counters["cache_pages_peak"]
+        paged_sum = latency_summary(work, paged_lat)
         rows.append(("serve/paged_tok_per_s", paged_tps,
                      f"wall={paged_s:.2f}s_prefix_hits="
-                     f"{paged.stats['prefix_hits']}"))
+                     f"{paged.counters['prefix_hits']}"))
         rows.append(("serve/paged_vs_contiguous_speedup",
                      paged_tps / cont_tps, ""))
         rows.append(("serve/paged_peak_pages", peak,
                      f"contiguous_equiv={cont_pages}"))
+        rows.append(("serve/paged_ttft_p95_ms",
+                     paged_sum.get("ttft_all_p95_ms", 0.0),
+                     f"itl_p95={paged_sum['itl_p95_ms']}"))
         artifact.update(paged_tok_per_s=round(paged_tps, 2),
                         paged_vs_contiguous_speedup=round(paged_tps / cont_tps,
                                                           3),
                         paged_peak_pages=peak,
-                        paged_engine_stats=paged.stats)
+                        paged_latency=paged_sum,
+                        paged_engine_counters=paged.counters)
 
     from repro.kernels import ops
     ref_outputs = outs["contiguous"]
@@ -234,7 +429,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="request count (longprompt: SHORT request count)")
     ap.add_argument("--lengths", default="16,32,64,128,256",
                     help="comma-separated prompt (or suffix) length palette")
     ap.add_argument("--layout", default="both",
@@ -242,25 +438,41 @@ def main():
                     help="contiguous: lockstep-vs-continuous baseline; "
                          "paged: contiguous-vs-paged cache A/B; both: all")
     ap.add_argument("--workload", default="poisson",
-                    choices=["poisson", "prefix"])
+                    choices=["poisson", "prefix", "longprompt"])
     ap.add_argument("--prefix-len", type=int, default=96,
                     help="shared system-prompt length (prefix workload)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--rate", type=float, default=0.25,
-                    help="Poisson arrival rate (requests per decode step)")
+                    help="Poisson arrival rate (requests per engine tick)")
     ap.add_argument("--max-new-lo", type=int, default=8)
     ap.add_argument("--max-new-hi", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-long", type=int, default=2,
+                    help="long prompts in the longprompt workload")
+    ap.add_argument("--long-len", type=int, default=384,
+                    help="long-prompt length (longprompt workload)")
+    ap.add_argument("--max-batched-tokens", type=int, default=64,
+                    help="per-tick token budget of the chunked run")
+    ap.add_argument("--max-prefill-chunk", type=int, default=32,
+                    help="per-slot prefill chunk cap of the chunked run")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="single seed for arrivals, prompts, and prefix")
     ap.add_argument("--json", default=None,
-                    help="also write a BENCH_PR.json artifact here")
+                    help="also write a BENCH_*.json artifact here")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI configuration (fast on 2 CPU cores)")
     args = ap.parse_args()
     if args.smoke:
-        args.requests = min(args.requests, 8)
-        args.lengths = "8,16,32" if args.workload == "poisson" else "4,8"
+        args.requests = min(args.requests, 6)
+        args.lengths = "8,16" if args.workload != "prefix" else "4,8"
         args.prefix_len = min(args.prefix_len, 48)
         args.max_new_lo, args.max_new_hi = 4, 8
+        args.n_long = min(args.n_long, 2)
+        args.long_len = min(args.long_len, 192)
+        args.page_size = min(args.page_size, 8)
+        # budget fits the largest short prompt + decode slots + the
+        # head-of-line page reservation in one tick
+        args.max_batched_tokens = min(args.max_batched_tokens, 32)
+        args.max_prefill_chunk = min(args.max_prefill_chunk, 16)
     raise SystemExit(bench(args))
 
 

@@ -38,4 +38,4 @@ for i, r in enumerate(eng.generate(reqs)):
     print(f"req{i}: prompt[{len(r.prompt)}]={r.prompt[:6].tolist()}.. "
           f"-> {r.out.tolist()}")
 if hasattr(eng, "stats"):
-    print(f"engine stats: {eng.stats}")
+    print(f"engine stats: {eng.stats()}")

@@ -34,7 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import fixedpoint as fxp
 from repro.core.qsoftmax import LUT_SIZE, MASK_OFFSET
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, divisor_tile
 from repro.kernels.quant_softmax import lut_lookup
 
 NEG_INIT = -(1 << 30)
@@ -90,14 +90,6 @@ def _decode_kernel(g, bkv, len_ref, q_ref, k_ref, v_ref, lut_ref, mi_ref,
         o_ref[0, 0] = jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
 
 
-def _block_divisor(bkv: int, smax: int) -> int:
-    """Largest block size <= bkv that divides smax (grid must tile exactly)."""
-    bkv = min(bkv, smax)
-    while smax % bkv:
-        bkv -= 1
-    return bkv
-
-
 @functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
 def decode_qattention(
     q_i8: jax.Array,       # int8 (B, Hkv, G, D) — one token/slot, grouped q
@@ -115,7 +107,7 @@ def decode_qattention(
     transpose of the whole cache ever materializes in HBM."""
     b, hkv, g, d = q_i8.shape
     smax = k_i8.shape[1]
-    bkv = _block_divisor(bkv, smax)
+    bkv = divisor_tile(bkv, smax)
     grid = (b, hkv, smax // bkv)
     kernel = functools.partial(_decode_kernel, g, bkv)
 

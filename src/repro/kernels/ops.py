@@ -152,6 +152,31 @@ def paged_decode_attention_q(
         lut_q7, inv_s_logit, out_scale, interpret=(b == "interpret"))
 
 
+def paged_prefill_attention_q(
+    q_i8, k_pool, v_pool, block_tables, pos0, M_idx, shift_idx, lut_q7,
+    inv_s_logit, out_scale, *, bq: int = 128, impl=None,
+):
+    """Paged chunked-prefill attention.
+
+    (B, H, S, D) chunk queries at positions [pos0, pos0+S) x (n_pages, P,
+    Hkv, D) global int8 page pool, addressed per slot through a
+    (B, max_blocks) block table -> (B, H, S, D) int8 context over each
+    slot's whole mapped chain.  ref backend = the block-online oracle
+    (kernel-exact accumulation order); pallas = the block-table-walking
+    flash kernel, bit-exact vs. the oracle for any page count and q-block
+    size.  The chunk's own K/V rows must already be scattered into the
+    pool."""
+    b = backend(impl)
+    if b == "ref":
+        return _ref.paged_prefill_qattention_ref(
+            q_i8, k_pool, v_pool, block_tables, pos0, M_idx, shift_idx,
+            lut_q7, inv_s_logit, out_scale)
+    from repro.kernels.prefill_attention import paged_prefill_qattention
+    return paged_prefill_qattention(
+        q_i8, k_pool, v_pool, block_tables, pos0, M_idx, shift_idx, lut_q7,
+        inv_s_logit, out_scale, bq=bq, interpret=(b == "interpret"))
+
+
 def attention_q(
     q_i8, k_i8, v_i8, M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
     *, causal: bool = True, q_offset: int = 0, impl=None,

@@ -199,6 +199,78 @@ def paged_decode_qattention_ref(
     return jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
 
 
+def paged_prefill_qattention_ref(
+    q_i8: jax.Array,          # int8 (B, H, Sq, D) — chunk queries, ungrouped
+    k_pool: jax.Array,        # int8 (n_pages, P, Hkv, D) — global page pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # int32 (B, max_blocks): slot -> pool pages
+    pos0: jax.Array,          # int32 (B,): chunk start position per slot
+    M_idx: jax.Array,
+    shift_idx: jax.Array,
+    lut: jax.Array,           # (256,) int32 Q0.7 codes
+    inv_s_logit: jax.Array,
+    out_scale: jax.Array,
+) -> jax.Array:
+    """Block-online oracle for the paged chunked-PREFILL kernel: queries at
+    absolute positions [pos0[b], pos0[b]+Sq) attend causally over the
+    slot's whole block-table chain, one pool page per step, with the
+    kernel's exact accumulation order (int32 scores, Q0.7 LUT numerators,
+    fp32 running max-rescale / denominator / output carry).
+
+    The kernel additionally SKIPS blocks wholly past a q block's causal
+    frontier; the oracle processes every block unconditionally.  These are
+    bit-identical: a fully-masked block's scores sit MASK_OFFSET below any
+    live score, so its row max never wins (``m_new == m_old`` exactly, and
+    block 0 is live for every query, so ``m_old`` is never NEG_INIT after
+    it), the rescale factor is ``exp(0) == 1.0`` (fp32-exact multiply), and
+    its LUT indices clip to the table's terminal zero code — the update
+    adds exact zeros.  That also makes the kernel's result independent of
+    its q-block size, so the oracle needs no ``bq`` parameter."""
+    from repro.core.qsoftmax import LUT_SIZE
+
+    b, h, sq, d = q_i8.shape
+    psize = k_pool.shape[1]
+    hkv = k_pool.shape[2]
+    group = h // hkv
+    nb = block_tables.shape[1]
+    neg_init = -(1 << 30)
+    m = jnp.full((b, h, sq, 1), neg_init, jnp.int32)
+    den = jnp.zeros((b, h, sq, 1), jnp.float32)
+    acc = jnp.zeros((b, h, sq, d), jnp.float32)
+    lut32 = lut.astype(jnp.int32)
+    inv = jnp.asarray(inv_s_logit, jnp.float32)
+    qpos = pos0[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]  # (B,Sq)
+    for k_i in range(nb):
+        pg = block_tables[:, k_i]                          # (B,)
+        kb = jnp.take(k_pool, pg, axis=0).transpose(0, 2, 1, 3)  # (B,Hkv,P,D)
+        vb = jnp.take(v_pool, pg, axis=0).transpose(0, 2, 1, 3)
+        kb = jnp.repeat(kb, group, axis=1)                 # (B,H,P,D)
+        vb = jnp.repeat(vb, group, axis=1)
+        s = jax.lax.dot_general(
+            q_i8, kb, (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)              # (B,H,Sq,P)
+        kpos = k_i * psize + jnp.arange(psize, dtype=jnp.int32)
+        live = kpos[None, None, None, :] <= qpos[:, None, :, None]
+        s = jnp.where(live, s, s - qs.MASK_OFFSET)
+        lm = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, lm)
+        idx = jnp.clip(fxp.rescale(m_new - s, M_idx, shift_idx, out_bits=9),
+                       0, LUT_SIZE - 1)
+        num = jnp.take(lut32, idx)                         # Q0.7 numerators
+        den_b = jnp.sum(num, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            num.astype(jnp.int8), vb, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.int32)              # (B,H,Sq,D)
+        f = jnp.exp((m - m_new).astype(jnp.float32) * inv)
+        f = jnp.where(m == neg_init, 0.0, f)
+        den = den * f + den_b.astype(jnp.float32)
+        acc = acc * f + pv.astype(jnp.float32)
+        m = m_new
+    den = jnp.maximum(den, 1.0)
+    o = acc / den * out_scale
+    return jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
+
+
 def make_exp_lut_q7():
     """Q0.7 exp table for the attention kernels (max code 127, fits int8)."""
     import numpy as np

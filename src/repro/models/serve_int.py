@@ -152,10 +152,8 @@ def _qkv_rope(x_i8, f, cfg, pos):
 def _flash_bkv(rows: int) -> int:
     """Largest KV block <= 512 that divides ``rows`` (flash_qattention_jax
     tiles the KV axis exactly)."""
-    bkv = min(512, rows)
-    while rows % bkv:
-        bkv -= 1
-    return bkv
+    from repro.kernels.pallas_compat import divisor_tile
+    return divisor_tile(512, rows)
 
 
 def _attn_prefill(x_i8, f, cfg, pos, row_exact: bool = False):
@@ -326,18 +324,22 @@ def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables):
 
 def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
                         row_exact):
-    """One-shot (suffix-aware) prefill through the block table: queries at
-    absolute positions [pos0, pos0+S) write their K/V rows into the slot's
-    pages and attend over the slot's WHOLE mapped chain — shared prefix
-    pages (already holding an earlier request's identical rows) plus the
-    rows written here.  ``pos0`` is a page-aligned traced scalar; with
-    pos0 == 0 this is the plain one-shot admission prefill.  Row-exact
-    (q8) rows are bit-identical to decode steps at the same positions, so
-    a prefix-sharing request reproduces the no-sharing engine token for
-    token on the ref/interpret backends; the pallas backend uses the q7
-    flash family with ``q_offset`` (self-consistent, like _attn_prefill).
-    Pad rows and trash-page rows sit at kpos > every real query and are
-    causally masked."""
+    """Chunk prefill through the block table: queries at absolute positions
+    [pos0, pos0+S) write their K/V rows into the slot's pages and attend
+    over the slot's WHOLE mapped chain — shared prefix pages and earlier
+    chunks (already resident in the pool) plus the rows written here.
+    ``pos0`` is a page-aligned traced scalar, so one compiled shape per
+    chunk size serves every chunk position: pos0 == 0 starts a prompt, a
+    nonzero pos0 continues one (prefix-cache suffix or the next
+    token-budget chunk).  Row-exact (q8) rows are bit-identical to decode
+    steps at the same positions, so chunked prefill reproduces the one-shot
+    and lockstep engines token for token on the ref/interpret backends; the
+    pallas backend dispatches to the block-table-walking
+    ``paged_prefill_qattention`` kernel, which streams prior-chunk KV
+    straight from the page pool instead of gathering a contiguous view
+    (self-consistent q7 family, like _attn_prefill).  Pad rows and
+    trash-page rows sit at kpos > every real query and are causally
+    masked."""
     b, s, d = x_i8.shape
     wb = cfg.quant.w_bits
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -348,29 +350,28 @@ def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
     btab_slice = jax.lax.dynamic_slice_in_dim(block_tables, pos0 // psize,
                                               nb_s, axis=1)
     ncache = _paged_prefill_write(cache, kc, vc, btab_slice)
-    kv_shape = (b, -1, nkv, hd)
-    k_view = jnp.take(ncache["k"], block_tables, axis=0).reshape(kv_shape)
-    v_view = jnp.take(ncache["v"], block_tables, axis=0).reshape(kv_shape)
-    rows = k_view.shape[1]
-    qpos = pos0 + jnp.arange(s, dtype=jnp.int32)[:, None]
     if row_exact:
+        kv_shape = (b, -1, nkv, hd)
+        k_view = jnp.take(ncache["k"], block_tables, axis=0).reshape(kv_shape)
+        v_view = jnp.take(ncache["v"], block_tables, axis=0).reshape(kv_shape)
+        rows = k_view.shape[1]
+        qpos = pos0 + jnp.arange(s, dtype=jnp.int32)[:, None]
         kpos = jnp.arange(rows, dtype=jnp.int32)[None, :]
         ctx = _attn_rows_q8(qc, k_view, v_view, aq, cfg, kpos <= qpos)
     else:
-        fn = lambda qq, kk, vv: flash_qattention_jax(
-            qq, kk, vv, aq["M_idx"], aq["sh_idx"], _lut_q7(),
-            aq["inv_s_logit"], aq["out_scale"], q_offset=pos0,
-            bkv=_flash_bkv(rows))
-        ctx = jax.vmap(fn)(qc.transpose(0, 2, 1, 3),
-                           k_view.transpose(0, 2, 1, 3),
-                           v_view.transpose(0, 2, 1, 3))  # (B,H,S,hd) int8
+        pos0_vec = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32).reshape(-1),
+                                    (b,))
+        ctx = ops.paged_prefill_attention_q(
+            qc.transpose(0, 2, 1, 3), ncache["k"], ncache["v"],
+            block_tables, pos0_vec, aq["M_idx"], aq["sh_idx"], _lut_q7(),
+            aq["inv_s_logit"], aq["out_scale"])           # (B,H,S,hd) int8
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
     out = _lin(ctx, f["wo"], wb)
     return out, ncache
 
 
 def _paged_prefill_write(cache, kc, vc, block_tables):
-    """Scatter one-shot prefill K/V rows (B, S, Hkv, hd) into the page pool
+    """Scatter a prefill chunk's K/V rows (B, S, Hkv, hd) into the page pool
     through the block table.  S must be a whole number of pages and every
     table entry a page the request owns — pad rows land inside owned pages
     (masked or overwritten by decode, same argument as the contiguous
@@ -613,11 +614,13 @@ def serve_forward(
 
     prefill without cache: tokens (B,S) -> logits (evaluation path, no cache
     update).  prefill WITH cache (attention archs only): additionally writes
-    the per-layer K/V rows for positions [0, S) into the cache and returns it
-    — the one-shot admission path of the continuous-batching engine, computed
-    through the decode-identical row datapath so a later decode continues
-    bit-exactly.  decode: tokens (B,1) + cache -> (logits, new_cache);
-    ``pos_offset`` is a scalar or a per-slot (B,) vector.
+    the per-layer K/V rows for positions [pos_offset, pos_offset+S) into the
+    cache and returns it — the chunk-forward path of the continuous-batching
+    engine (pos_offset == 0 and S == prompt length is the one-shot special
+    case), computed through the decode-identical row datapath so a later
+    chunk or decode continues bit-exactly.  decode: tokens (B,1) + cache ->
+    (logits, new_cache); ``pos_offset`` is a scalar or a per-slot (B,)
+    vector.
 
     ``block_tables`` (B, max_blocks) int32 switches the cache layout to the
     paged pool (``init_paged_cache``): both the prefill scatter and the
@@ -668,7 +671,7 @@ def serve_forward(
                     # family instead (self-consistent, not bit-identical)
                     row_exact = cslot is not None and ops.backend() != "pallas"
                     if cslot is not None and block_tables is not None:
-                        # one-shot (possibly suffix-only) prefill written
+                        # chunk (or one-shot / suffix-only) prefill written
                         # and read through the block table
                         out, nc = _attn_prefill_paged(
                             x_i8, f, cfg, cslot, pos, block_tables, pos0,

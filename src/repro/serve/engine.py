@@ -1,17 +1,30 @@
 """Serving engines over the folded integer model.
 
-``Engine`` — true continuous batching: a fixed slot table shares one compiled
-decode graph; every slot carries its own position (per-slot ``pos`` vector
-into ``serve_forward``), requests are admitted mid-flight into free slots and
-evicted on EOS/max-tokens by the ``Scheduler``.  Attention architectures
-prefill in ONE forward (``serve_forward(mode="prefill")`` with a cache)
-through the decode-identical row datapath, so on the ref/interpret kernel
-backends (CPU serving and CI) a request's greedy tokens are bit-for-bit what
-the lockstep engine produces for it alone — continuous batching changes
-throughput, not outputs.  On the compiled pallas backend both prefill and
-decode dispatch to the q7 flash kernels instead (self-consistent integer
-datapath, but not bit-identical to the jnp path).  SSM/hybrid architectures
-(whose prefill is a recurrence) fall back to a batch-1 decode-loop prefill.
+``Engine`` — true continuous batching around a single token-budget step
+loop: a fixed slot table shares one compiled decode graph; every slot
+carries its own position (per-slot ``pos`` vector into ``serve_forward``),
+requests are admitted mid-flight into free slots and evicted on
+EOS/max-tokens by the ``Scheduler``.  Prefill is no longer a monolithic
+one-shot forward at admission: each tick the scheduler carves waiting and
+partially-prefilled prompts into page-aligned chunks under a shared token
+budget (``max_batched_tokens`` per tick, ``max_prefill_chunk`` per slot)
+and interleaves them with the decode batch, so a very long prompt can no
+longer stall every decoding slot for the duration of its prefill.  A slot
+keeps a ``prefill_pos`` cursor; its final chunk's last-row logits hand the
+request into decode without an extra forward.  With both knobs unset a
+prompt still prefills in one chunk — the pre-chunking behavior, now just a
+degenerate schedule of the same loop.
+
+Chunk forwards run through the decode-identical row datapath on the
+ref/interpret kernel backends (CPU serving and CI), so a request's greedy
+tokens are bit-for-bit what the lockstep engine produces for it alone —
+and bit-for-bit identical across chunk sizes: chunking changes latency,
+not outputs.  On the compiled pallas backend both prefill chunks and
+decode dispatch to the q7 flash family instead (chunks go through the
+block-table-walking ``paged_prefill_qattention`` kernel; self-consistent
+integer datapath, but not bit-identical to the jnp path).  SSM/hybrid
+architectures (whose prefill is a recurrence) fall back to a batch-1
+decode-loop prefill, run as a single chunk of the same loop.
 
 Cache layouts (``cache_layout=``):
 
@@ -22,11 +35,12 @@ Cache layouts (``cache_layout=``):
   head-of-line request that doesn't fit WAITS for pages instead of OOMing.
   Prompt prefixes are shared at page granularity through the allocator's
   refcounted registry: a repeated system prompt maps cached pages and only
-  the unseen suffix runs through the model.  Greedy outputs stay
-  token-identical to the contiguous layout on the ref/interpret backends.
+  the unseen suffix runs through the model.  Chunked prefill requires this
+  layout (chunks are pages).
 * ``"contiguous"`` — the original dense ``(B, Smax, Hkv, hd)`` stripe per
   slot (kept for one release as the A/B baseline; SWA ring buffers and
-  SSM/hybrid archs always use it).
+  SSM/hybrid archs always use it).  Prefill is always one whole-prompt
+  chunk.
 * ``"auto"`` (default) — paged when the arch supports it (all-attention,
   no sliding window), else contiguous.
 
@@ -69,7 +83,7 @@ def supports_continuous(cfg: ModelConfig) -> bool:
 
 
 _CONTINUOUS_ONLY_KW = ("prefill_bucket", "cache_layout", "page_size",
-                       "n_pages")
+                       "n_pages", "max_batched_tokens", "max_prefill_chunk")
 
 
 def make_engine(cfg: ModelConfig, folded, **kw):
@@ -89,12 +103,14 @@ def make_engine(cfg: ModelConfig, folded, **kw):
 
 
 class Engine:
-    """Continuous-batching integer serving engine."""
+    """Continuous-batching integer serving engine (token-budget step loop)."""
 
     def __init__(self, cfg: ModelConfig, folded, *, batch_slots: int = 8,
                  max_len: int = 512, seed: int = 0, prefill_bucket: int = 16,
                  cache_layout: str = "auto", page_size: int = 16,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 max_batched_tokens: Optional[int] = None,
+                 max_prefill_chunk: Optional[int] = None):
         assert supports_continuous(cfg), \
             "continuous engine serves token-LM archs; use LockstepEngine"
         self.cfg = cfg
@@ -121,6 +137,12 @@ class Engine:
             "active device mesh"
         self.layout = cache_layout
         self.page_size = page_size
+        if cache_layout != "paged":
+            assert max_batched_tokens is None and max_prefill_chunk is None, \
+                "chunked prefill (max_batched_tokens / max_prefill_chunk) " \
+                "requires the paged cache layout"
+        self.max_batched_tokens = max_batched_tokens
+        self.max_prefill_chunk = max_prefill_chunk
         if self.layout == "paged":
             self.max_blocks = pages_needed(self.smax, page_size)
             # +1: page 0 is the reserved trash page (inactive-slot writes)
@@ -142,9 +164,10 @@ class Engine:
                                        pos_offset=pos0, mode="prefill",
                                        block_tables=btab)
 
-            # writes straight through the block table into the (donated)
-            # pool; ``pos0 > 0`` continues a shared prompt prefix (suffix
-            # rows only); retraces per bucketed length
+            # the chunk forward: writes straight through the block table
+            # into the (donated) pool at page-aligned ``pos0`` and attends
+            # over the slot's whole mapped chain; one compiled shape per
+            # chunk size (retraces per distinct padded length)
             self._prefill = jax.jit(prefill, donate_argnums=(1,))
         else:
             def decode_step(folded_, cache, tok, pos):
@@ -171,8 +194,9 @@ class Engine:
             self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
 
     @staticmethod
-    def _zero_stats() -> Dict[str, int]:
-        return dict(prefill_tokens=0, oneshot_prefills=0,
+    def _zero_counters() -> Dict[str, int]:
+        return dict(ticks=0, prefill_tokens=0, prefill_chunks=0,
+                    oneshot_prefills=0, chunked_prefills=0,
                     loop_prefill_steps=0, decode_steps=0, decode_tokens=0,
                     completed=0, prefix_hits=0, shared_rows=0,
                     suffix_prefills=0, cache_pages_peak=0)
@@ -181,11 +205,12 @@ class Engine:
         self.requests: Dict[int, Request] = {}
         self.pos = np.zeros(self.batch, np.int32)
         self.rng = np.random.default_rng(seed)
-        self.stats = self._zero_stats()
+        self.counters = self._zero_counters()
         if self.layout == "paged":
             self.alloc = BlockAllocator(self.n_pages, self.page_size)
             self.sched = Scheduler(self.batch, allocator=self.alloc,
-                                   rows_fn=self._rows_needed)
+                                   max_batched_tokens=self.max_batched_tokens,
+                                   max_prefill_chunk=self.max_prefill_chunk)
             self.cache = S.init_paged_cache(self.cfg, self.n_pages,
                                             self.page_size)
             self.block_tables = np.zeros((self.batch, self.max_blocks),
@@ -199,34 +224,46 @@ class Engine:
         """Clear all serving state; keeps the compiled graphs."""
         self._init_state(seed)
 
-    # --- paged-layout helpers -------------------------------------------
+    # --- observability ---------------------------------------------------
 
-    def _bucket_len(self, ln: int, base: int = 0) -> int:
-        """Padded one-shot prefill length for an ``ln``-token segment
-        starting at (page-aligned) row ``base``: a multiple of
-        prefill_bucket so compiled shapes are reused; in the paged layout
-        additionally a whole number of pages (the prefill scatter writes
-        whole pages)."""
-        cap = (self.max_blocks * self.page_size if self.layout == "paged"
-               else self.smax) - base
-        bl = min(max(self.prefill_bucket,
-                     math.ceil(ln / self.prefill_bucket)
-                     * self.prefill_bucket), cap)
+    def stats(self) -> Dict:
+        """Instantaneous serving gauges + the cumulative ``counters``.
+
+        Invariants the engine maintains (asserted in the tests, logged per
+        tick by serve_bench): occupied slots partition into decode-active +
+        prefilling; in the paged layout ``pages_in_use + pages_free +
+        pages_cached_lru == pages_capacity`` and every prefilling slot's
+        pending rows fit the pages it reserved."""
+        pre = [self.sched.slots[b] for b in self.sched.prefilling]
+        chunk = self.max_prefill_chunk
+        pending = [st.prompt_len - st.prefill_pos for st in pre]
+        g = dict(
+            waiting=len(self.sched.waiting),
+            decode_slots_active=len(self.sched.decoding),
+            prefill_slots=len(pre),
+            free_slots=self.sched.n_free,
+            prefill_tokens_pending=sum(pending),
+            prefill_chunks_pending=sum(
+                -(-p // chunk) if chunk else 1 for p in pending),
+        )
         if self.layout == "paged":
-            bl = pages_needed(max(bl, ln), self.page_size) * self.page_size
-        return bl
+            al = self.alloc
+            g.update(pages_in_use=al.live,
+                     pages_free=al.free_list_pages,
+                     pages_cached_lru=al.lru_pages,
+                     pages_capacity=al.capacity)
+        g["counters"] = dict(self.counters)
+        return g
 
-    def _rows_needed(self, request, shared_rows: int) -> int:
-        """Cache rows to reserve at admission (Scheduler rows_fn): every row
-        the request can touch — prompt + decode budget, or the padded
-        one-shot prefill scatter when that is wider.  Reserving up front is
-        what lets out-of-pages requests wait instead of OOMing mid-decode."""
-        ln = len(request.prompt)
-        rows = ln + request.max_new_tokens - 1
-        if self._attn_only and ln <= self.smax:
-            rows = max(rows, shared_rows
-                       + self._bucket_len(ln - shared_rows, base=shared_rows))
-        return rows
+    # --- contiguous-layout helpers ---------------------------------------
+
+    def _bucket_len(self, ln: int) -> int:
+        """Padded one-shot prefill length for the contiguous layout: a
+        multiple of prefill_bucket so compiled shapes are reused.  (Paged
+        chunks pad to whole pages instead — see _run_chunk.)"""
+        return min(max(self.prefill_bucket,
+                       math.ceil(ln / self.prefill_bucket)
+                       * self.prefill_bucket), self.smax)
 
     def _set_table_row(self, b: int, pages: List[int]):
         self.block_tables[b, :] = 0
@@ -236,14 +273,21 @@ class Engine:
 
     def submit(self, request: Request) -> int:
         ln = len(request.prompt)
-        assert ln >= 1 and request.max_new_tokens >= 1
+        # hard validation, not an assert: max_new_tokens >= 1 is what makes
+        # the ln + max_new - 1 page reservation always cover the prefill
+        # scatter's whole-page padding (pages_needed(ln) rows)
+        if ln < 1 or request.max_new_tokens < 1:
+            raise ValueError(
+                f"request needs a non-empty prompt and max_new_tokens >= 1 "
+                f"(got prompt len {ln}, max_new_tokens "
+                f"{request.max_new_tokens})")
         if not self.cfg.sliding_window:
             if ln + request.max_new_tokens > self.max_len:
                 raise ValueError(
                     f"request needs {ln + request.max_new_tokens} cache rows, "
                     f"engine max_len={self.max_len}")
         if self.layout == "paged":
-            worst = pages_needed(self._rows_needed(request, 0),
+            worst = pages_needed(ln + request.max_new_tokens - 1,
                                  self.page_size)
             if worst > self.alloc.capacity:
                 raise ValueError(
@@ -274,8 +318,6 @@ class Engine:
             toks = np.zeros((1, bl), np.int32)
             toks[0, :ln] = prompt
             logits, cache1 = self._prefill(self.folded, jnp.asarray(toks))
-            self.stats["oneshot_prefills"] += 1
-            self.stats["prefill_tokens"] += ln
             return np.asarray(logits[0, ln - 1]), cache1, ln
         # recurrence (SSM/hybrid) or over-long SWA prompt: batch-1 decode loop
         cache1 = S.init_cache(self.cfg, 1, self.max_len)
@@ -284,48 +326,74 @@ class Engine:
             logits, cache1 = self._decode(
                 self.folded, cache1, jnp.asarray(prompt[t].reshape(1, 1)),
                 jnp.asarray(np.asarray([t], np.int32)))
-            self.stats["loop_prefill_steps"] += 1
-        self.stats["prefill_tokens"] += ln
+            self.counters["loop_prefill_steps"] += 1
         return np.asarray(logits[0, -1]), cache1, ln
 
-    def _prefill_paged_slot(self, b: int, st: SlotState) -> Tuple[np.ndarray,
-                                                                  int]:
-        """Paged layout: fill slot ``b``'s reserved pages with the prompt's
-        K/V and return (last-position logits (V,), prompt_len).
+    def _run_chunk(self, b: int, st: SlotState, pos0: int, ntok: int
+                   ) -> List[Tuple[int, int]]:
+        """One prefill chunk for slot ``b``: rows [pos0, pos0+ntok) of the
+        prompt through the chunk forward.  On the FINAL chunk the last real
+        row's logits hand the request straight into decode (first token
+        sampled, no extra forward); mid-prompt chunks emit nothing.
 
-        One forward either way: on a prefix hit the matched pages already
-        hold K/V for the first ``st.shared_rows`` positions, so only the
-        unseen suffix runs (queries at offset positions attending over the
-        shared pages through the block table); on a miss the whole prompt
-        prefills from position 0.  Suffix rows are bit-identical to
-        full-prefill rows on the ref/interpret backends, so sharing changes
-        prefill compute, not tokens."""
+        Paged: the chunk scatters its K/V through a local block-table row
+        and attends over the slot's whole mapped chain (prior chunks +
+        shared prefix pages read directly from the page pool).  The engine's
+        shared ``block_tables`` row stays zeroed (trash page) until handoff,
+        so decode ticks running while this slot is mid-prefill cannot
+        scribble on its pages.  Contiguous: a single whole-prompt chunk via
+        the batch-1 prefill + slot write (chunking needs pages)."""
         req = st.request
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         ln = len(prompt)
-        base = st.shared_rows                  # page-aligned by construction
-        bl = self._bucket_len(ln - base, base=base)
-        toks = np.zeros((1, bl), np.int32)
-        toks[0, :ln - base] = prompt[base:]
-        self._set_table_row(b, st.pages)
-        logits, self.cache = self._prefill(
-            self.folded, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.block_tables[b:b + 1]), jnp.int32(base))
-        if base:
-            self.stats["prefix_hits"] += 1
-            self.stats["shared_rows"] += base
-            self.stats["suffix_prefills"] += 1
+        final = pos0 + ntok >= ln
+        loop_prefill = False
+        if self.layout == "paged":
+            # ragged last chunk pads to whole pages (the scatter writes
+            # whole pages); pad rows sit causally after every real query
+            # and are overwritten by the decode step at their position
+            pad = pages_needed(ntok, self.page_size) * self.page_size
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :ntok] = prompt[pos0:pos0 + ntok]
+            btab = np.zeros((1, self.max_blocks), np.int32)
+            btab[0, :len(st.pages)] = st.pages
+            logits, self.cache = self._prefill(
+                self.folded, self.cache, jnp.asarray(toks),
+                jnp.asarray(btab), jnp.int32(pos0))
+            last = np.asarray(logits[0, ntok - 1]) if final else None
         else:
-            self.stats["oneshot_prefills"] += 1
-        self.stats["prefill_tokens"] += ln
-        self.alloc.register_prefix([int(t) for t in prompt], st.pages)
-        # pages reserved only for prefill-bucket padding go straight back
-        keep = pages_needed(ln + req.max_new_tokens - 1, self.page_size)
-        if keep < len(st.pages):
-            self.alloc.free_pages(st.pages[keep:])
-            del st.pages[keep:]
+            assert pos0 == 0 and final, \
+                "contiguous layout prefills in one whole-prompt chunk"
+            loop_prefill = not (self._attn_only and ln <= self.smax)
+            last, cache1, _ = self._prefill_request(req)
+            self.cache = self._write_slot(self.cache, cache1, jnp.int32(b))
+        st.prefill_pos = pos0 + ntok
+        st.chunks_done += 1
+        self.counters["prefill_tokens"] += ntok
+        self.counters["prefill_chunks"] += 1
+        if not final:
+            return []
+        # --- handoff into decode (no extra forward) ---
+        if self.layout == "paged":
+            self.alloc.register_prefix([int(t) for t in prompt], st.pages)
             self._set_table_row(b, st.pages)
-        return np.asarray(logits[0, ln - base - 1]), ln
+        if st.shared_rows:
+            self.counters["prefix_hits"] += 1
+            self.counters["shared_rows"] += st.shared_rows
+            if st.chunks_done == 1:
+                self.counters["suffix_prefills"] += 1
+        elif st.chunks_done == 1 and not loop_prefill:
+            self.counters["oneshot_prefills"] += 1
+        if st.chunks_done > 1:
+            self.counters["chunked_prefills"] += 1
+        self.pos[b] = ln
+        st.pos = ln
+        tok = self._pick_token(last, req)
+        st.last_token = tok
+        st.emitted.append(tok)
+        if self._done(st):
+            self._finish(b)
+        return [(st.rid, tok)]
 
     def _finish(self, b: int):
         st = self.sched.evict(b)        # paged: returns the page chain
@@ -334,7 +402,7 @@ class Engine:
         self.pos[b] = 0
         if self.layout == "paged":
             self.block_tables[b, :] = 0
-        self.stats["completed"] += 1
+        self.counters["completed"] += 1
 
     def _done(self, st: SlotState) -> bool:
         req = st.request
@@ -343,42 +411,45 @@ class Engine:
         return req.eos_token is not None and st.emitted and \
             st.emitted[-1] == req.eos_token
 
-    def _admit(self) -> List[Tuple[int, int]]:
-        emitted = []
-        # seat one request at a time: each admission registers its prompt
-        # pages before the next is matched, so even same-tick arrivals of a
-        # repeated prompt share pages
-        while True:
-            placed = self.sched.admit(limit=1)
-            if not placed:
-                break
-            b, st = placed[0]
-            if self.layout == "paged":
-                last_logits, ln = self._prefill_paged_slot(b, st)
-            else:
-                last_logits, cache1, ln = self._prefill_request(st.request)
-                self.cache = self._write_slot(self.cache, cache1,
-                                              jnp.int32(b))
-            self.pos[b] = ln
-            st.pos = ln
-            tok = self._pick_token(last_logits, st.request)
-            st.last_token = tok
-            st.emitted.append(tok)
-            emitted.append((st.rid, tok))
-            if self._done(st):
-                self._finish(b)
-        if self.layout == "paged":
-            self.stats["cache_pages_peak"] = self.alloc.peak_live
-        return emitted
-
     # --- the engine loop ------------------------------------------------
 
     def step(self) -> List[Tuple[int, int]]:
-        """One scheduler tick: admit waiting requests into free slots, then
-        decode one token for every active slot.  Returns (rid, token) pairs
-        emitted this tick."""
-        emitted = self._admit()
-        active = self.sched.active
+        """One scheduler tick of the token-budget loop:
+
+        1. seat waiting requests into free slots (paged: reserve their page
+           budget; prefill does NOT run here),
+        2. run prefill chunks for prefilling slots under the tick's token
+           budget (``max_batched_tokens`` minus this tick's decode tokens;
+           a final chunk also charges the decode token of its handoff),
+           replanning after every chunk so a completion's registered prefix
+           is visible to the next slot's first chunk,
+        3. decode one token for every slot whose prompt is fully cached
+           (slots that handed off in step 2 join the same tick's batch).
+
+        Returns the (rid, token) pairs emitted this tick."""
+        self.counters["ticks"] += 1
+        emitted: List[Tuple[int, int]] = []
+        self.sched.admit()
+        n_decode = len(self.sched.decoding)
+        used = 0
+        chunked: set = set()
+        while True:
+            plan = self.sched.next_chunk(n_decode, used,
+                                         exclude=frozenset(chunked))
+            if plan is None:
+                break
+            b, st, pos0, ntok = plan
+            chunked.add(b)
+            # a final chunk hands the slot into this tick's decode batch:
+            # charge its decode token so the budget stays a real cap
+            used += ntok + (pos0 + ntok >= st.prompt_len)
+            emitted.extend(self._run_chunk(b, st, pos0, ntok))
+        for b in self.sched.prefilling:   # scheduler anti-starvation input
+            st = self.sched.slots[b]
+            st.starved_ticks = 0 if b in chunked else st.starved_ticks + 1
+        active = self.sched.decoding
+        if self.layout == "paged":
+            self.counters["cache_pages_peak"] = self.alloc.peak_live
         if not active:
             return emitted
         toks = np.zeros((self.batch, 1), np.int32)
@@ -403,8 +474,8 @@ class Engine:
             emitted.append((st.rid, tok))
             if self._done(st):
                 self._finish(b)
-        self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(active)
+        self.counters["decode_steps"] += 1
+        self.counters["decode_tokens"] += len(active)
         return emitted
 
     def run(self) -> List[Tuple[int, int]]:

@@ -4,7 +4,11 @@ The decode graph is compiled once for a fixed number of slots; this module
 owns the bookkeeping that lets requests stream through that fixed shape:
 a FIFO waiting queue, a slot table, admission of waiting requests into free
 slots, and eviction on completion.  It is deliberately model-agnostic — the
-engine owns prefill/decode; the scheduler only decides *who sits where*.
+engine owns prefill/decode; the scheduler only decides *who sits where* and,
+since the token-budget step loop, *how much prefill runs per tick*: a seated
+request no longer prefills whole at admission but carries a ``prefill_pos``
+cursor that ``next_chunk`` advances in page-aligned chunks, co-scheduled with
+the tick's decoding slots under ``max_batched_tokens``.
 
 ``BlockAllocator`` extends "where" from slots to cache memory: instead of an
 exclusive ``Smax`` stripe per slot, the paged engine draws fixed-size KV
@@ -48,6 +52,7 @@ class BlockAllocator:
         self.free: Deque[int] = collections.deque(range(1, n_pages))
         self.ref: List[int] = [0] * n_pages
         # chained-prefix registry: key -> (page, that page's own tokens)
+        self.registry_version = 0     # bumped on register (refresh memo)
         self._cached: Dict[int, Tuple[int, tuple]] = {}
         self._key_of: Dict[int, int] = {}     # page -> its registry key
         self._lru: "collections.OrderedDict[int, None]" = \
@@ -152,6 +157,7 @@ class BlockAllocator:
                 continue       # identical content already published
             self._cached[key] = (p, seg)
             self._key_of[p] = key
+            self.registry_version += 1
 
     def ensure_exclusive(self, pages: List[int], idx: int
                          ) -> Tuple[int, Optional[int]]:
@@ -176,6 +182,16 @@ class BlockAllocator:
     def cached_pages(self) -> int:
         return len(self._cached)
 
+    @property
+    def free_list_pages(self) -> int:
+        """Pages on the free list proper (excludes LRU-cached pages)."""
+        return len(self.free)
+
+    @property
+    def lru_pages(self) -> int:
+        """Refcount-0 registered pages parked on the LRU (reclaimable)."""
+        return len(self._lru)
+
 
 @dataclasses.dataclass
 class SlotState:
@@ -187,12 +203,28 @@ class SlotState:
     emitted: List[int] = dataclasses.field(default_factory=list)
     pages: List[int] = dataclasses.field(default_factory=list)
     shared_rows: int = 0            # prompt rows mapped from cached pages
+    prefill_pos: int = 0            # prompt rows already in the cache
+    chunks_done: int = 0            # prefill chunk forwards run so far
+    refresh_seen: int = -1          # registry version last re-matched against
+    starved_ticks: int = 0          # consecutive ticks prefilling w/o a chunk
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    @property
+    def prefilling(self) -> bool:
+        """True until the whole prompt is in the cache; the slot joins the
+        decode batch only after its final prefill chunk hands off."""
+        return self.prefill_pos < self.prompt_len
 
 
 class Scheduler:
     def __init__(self, n_slots: int,
                  allocator: Optional[BlockAllocator] = None,
-                 rows_fn: Optional[Callable[[object, int], int]] = None):
+                 rows_fn: Optional[Callable[[object, int], int]] = None,
+                 max_batched_tokens: Optional[int] = None,
+                 max_prefill_chunk: Optional[int] = None):
         assert n_slots >= 1
         self.n_slots = n_slots
         self.allocator = allocator
@@ -200,6 +232,21 @@ class Scheduler:
         # knows about prefill bucketing; the scheduler stays model-agnostic)
         self.rows_fn = rows_fn or (
             lambda req, shared: len(req.prompt) + req.max_new_tokens - 1)
+        # per-tick budget policy: max_batched_tokens caps prefill-chunk
+        # tokens + decode tokens per tick; max_prefill_chunk caps one slot's
+        # chunk.  Both None -> a seated request prefills whole in one chunk
+        # (the pre-chunking one-shot behavior through the unified loop).
+        ps = allocator.page_size if allocator is not None else 1
+        if max_prefill_chunk is not None:
+            assert allocator is not None, \
+                "chunked prefill needs the paged allocator (page-aligned " \
+                "chunks); the contiguous layout prefills in one chunk"
+            assert max_prefill_chunk >= ps and max_prefill_chunk % ps == 0, \
+                (max_prefill_chunk, ps)
+        if max_batched_tokens is not None:
+            assert max_batched_tokens >= 1
+        self.max_batched_tokens = max_batched_tokens
+        self.max_prefill_chunk = max_prefill_chunk
         self.slots: List[Optional[SlotState]] = [None] * n_slots
         self.waiting: Deque[Tuple[int, object]] = collections.deque()
         self._next_rid = 0
@@ -231,6 +278,7 @@ class Scheduler:
             return False
         st.pages = shared + excl
         st.shared_rows = shared_rows
+        st.prefill_pos = shared_rows       # the cursor skips mapped rows
         return True
 
     def admit(self, limit: Optional[int] = None
@@ -264,11 +312,150 @@ class Scheduler:
             self.allocator.free_pages(st.pages)
         return st
 
+    # --- chunked prefill planning ---------------------------------------
+
+    def refresh_prefix(self, st: SlotState) -> int:
+        """Re-match ``st``'s prompt against the prefix registry just before
+        its FIRST chunk runs.  Registration happens at prefill completion,
+        so a request admitted in the same tick as (or mid-prefill of) an
+        identical prompt misses at admission but hits here — the hit can
+        land mid-chunk, skipping rows the chunk grid would otherwise cover.
+        Adopted pages replace the exclusive pages reserved for the same
+        rows (those go back to the pool); returns rows newly shared.
+        Memoized on the registry version: a budget-starved slot polled
+        every chunk of every tick only re-hashes its prompt after a
+        registration actually changed what it could match."""
+        al = self.allocator
+        if al is None or st.chunks_done or not st.prefilling:
+            return 0
+        if st.refresh_seen == al.registry_version:
+            return 0
+        st.refresh_seen = al.registry_version
+        ps = al.page_size
+        prompt = [int(t) for t in st.request.prompt]
+        matched = al.match_prefix(prompt, (len(prompt) - 1) // ps)
+        new_rows = len(matched) * ps
+        if new_rows <= st.shared_rows:
+            al.free_pages(matched)         # nothing longer than we hold
+            return 0
+        # the registry chain is stable while we hold refs, so matched[:k]
+        # are the pages already mapped at admission: dropping one ref per
+        # replaced entry nets out for those and frees the exclusives
+        replaced = st.pages[:len(matched)]
+        st.pages = matched + st.pages[len(matched):]
+        al.free_pages(replaced)
+        gained = new_rows - st.shared_rows
+        st.shared_rows = new_rows
+        st.prefill_pos = new_rows
+        return gained
+
+    def next_chunk(self, n_decode_active: int, used_tokens: int,
+                   exclude: frozenset = frozenset()
+                   ) -> Optional[Tuple[int, SlotState, int, int]]:
+        """The next prefill chunk to run this tick: ``(slot, state, pos0,
+        n_tokens)`` — or None when the budget is spent or nothing prefills.
+
+        Policy: with a chunk policy active (either knob set), prefilling
+        slots are served shortest-remaining-first (rid breaks ties), so a
+        short prompt arriving while a long one is mid-prefill reaches its
+        first token after ONE chunk instead of queueing behind the whole
+        long prefill — the TTFT tail chunking exists to bound.  Two
+        anti-starvation guards protect the head-of-line (lowest-rid)
+        prefilling slot from a steady stream of short arrivals: while the
+        tick's starting budget covers at least two pages, every other slot
+        leaves one page of the REMAINING budget for the unserved head (so
+        later short picks cannot eat the reserved page); and a head that
+        got no chunk for two consecutive ticks preempts the SJF order
+        outright — under any budget the head advances at least one page
+        every third tick.  With no policy (one-shot mode) slots prefill
+        whole in FIFO order — the pre-chunking admission behavior,
+        preserved as the A/B baseline.  A chunk is ``min(remaining,
+        max_prefill_chunk, budget left)`` rounded DOWN to whole pages
+        unless it finishes the prompt (the ragged last chunk).
+        ``max_batched_tokens`` is shared with the tick's decode tokens
+        (``n_decode_active`` + chunk tokens already ``used_tokens`` this
+        tick).  When the budget leaves no whole page but nothing else runs
+        this tick, one page is forced so prefill always makes progress."""
+        pre = [(b, st) for b, st in enumerate(self.slots)
+               if st is not None and st.prefilling and b not in exclude]
+        if not pre:
+            return None
+        ps = self.allocator.page_size if self.allocator is not None else 1
+        budget = (None if self.max_batched_tokens is None else
+                  self.max_batched_tokens - n_decode_active - used_tokens)
+        # refresh before ordering: an adopted prefix shrinks `remaining`
+        for _, st in pre:
+            if st.chunks_done == 0:
+                self.refresh_prefix(st)
+        chunked_mode = self.max_batched_tokens is not None or \
+            self.max_prefill_chunk is not None
+        if chunked_mode:
+            pre.sort(key=lambda e: (e[1].prompt_len - e[1].prefill_pos,
+                                    e[1].rid))
+        else:
+            pre.sort(key=lambda e: e[1].rid)
+        # the head-of-line slot is the oldest PREFILLING slot, whether or
+        # not it already chunked this tick (exclude) — its reservation only
+        # lifts once it has actually been served
+        all_pre = [st for st in self.slots
+                   if st is not None and st.prefilling]
+        head_rid = min(st.rid for st in all_pre)
+        head_waiting = any(st.rid == head_rid for _, st in pre)
+        tick_budget = (None if self.max_batched_tokens is None else
+                       self.max_batched_tokens - n_decode_active)
+        if chunked_mode and head_waiting:
+            head = next(st for _, st in pre if st.rid == head_rid)
+            if head.starved_ticks >= 2:
+                # bounded starvation: a head that got nothing for two ticks
+                # (the tight-budget regime where the reservation is off)
+                # preempts the SJF order for this pick
+                pre.sort(key=lambda e: e[1].rid != head_rid)
+        for b, st in pre:
+            remaining = st.prompt_len - st.prefill_pos
+            take = remaining
+            if self.max_prefill_chunk is not None:
+                take = min(take, self.max_prefill_chunk)
+            if budget is not None:
+                # reserve one page of the REMAINING budget for the unserved
+                # head — gated on the tick-START budget covering head +
+                # someone else, so a one-page budget doesn't invert into
+                # the head starving every shorter prompt instead
+                reserve = ps if (st.rid != head_rid and head_waiting
+                                 and tick_budget >= 2 * ps) else 0
+                take = min(take, max(budget - reserve, 0))
+            if take < remaining:
+                take = (take // ps) * ps   # mid-prompt chunks: whole pages
+            if take <= 0 and st.rid == head_rid and st.starved_ticks >= 2:
+                # the override must FORCE a chunk, not just reorder: when
+                # the budget net of decode stays under a page for many
+                # ticks (slots decoding long budgets), reordering alone
+                # would stall the head for the decode's whole lifetime.
+                # Overshoots the budget by at most one page, like the
+                # final-chunk handoff token.
+                take = min(remaining, ps)
+            if take > 0:
+                return b, st, st.prefill_pos, take
+        if used_tokens or n_decode_active:
+            return None                    # budget went to real work
+        b, st = pre[0]                     # forced progress: empty tick
+        return b, st, st.prefill_pos, min(st.prompt_len - st.prefill_pos, ps)
+
     # --- queries --------------------------------------------------------
 
     @property
     def active(self) -> List[int]:
         return [b for b, st in enumerate(self.slots) if st is not None]
+
+    @property
+    def decoding(self) -> List[int]:
+        """Slots whose whole prompt is cached — the tick's decode batch."""
+        return [b for b, st in enumerate(self.slots)
+                if st is not None and not st.prefilling]
+
+    @property
+    def prefilling(self) -> List[int]:
+        return [b for b, st in enumerate(self.slots)
+                if st is not None and st.prefilling]
 
     @property
     def has_work(self) -> bool:

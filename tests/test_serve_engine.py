@@ -88,13 +88,13 @@ def test_continuous_matches_lockstep_token_for_token(layout, kw):
     got = [r.out.tolist() for r in out]
     assert got == truth
     # more requests than slots -> the scheduler really streamed them
-    assert eng.stats["completed"] == len(lens)
-    assert eng.stats["oneshot_prefills"] == len(lens)
-    assert eng.stats["loop_prefill_steps"] == 0
+    assert eng.counters["completed"] == len(lens)
+    assert eng.counters["oneshot_prefills"] == len(lens)
+    assert eng.counters["loop_prefill_steps"] == 0
     if layout == "paged":
         # reservation-based pool: peak pages reflect actual, not worst-case,
         # sequence memory — strictly under the contiguous footprint
-        assert 0 < eng.stats["cache_pages_peak"] <= eng.alloc.capacity
+        assert 0 < eng.counters["cache_pages_peak"] <= eng.alloc.capacity
         assert eng.alloc.live == 0                # all pages came back
 
 
@@ -127,7 +127,7 @@ def test_engine_eos_eviction_frees_slot():
     out2 = eng.generate(reqs)
     assert out2[0].out.tolist() == out[0].out.tolist()[:3]  # stopped at EOS
     assert out2[1].out.tolist() == out[1].out.tolist()      # unaffected
-    assert eng.stats["completed"] == 2
+    assert eng.counters["completed"] == 2
 
 
 def test_engine_rejects_overlong_request():
@@ -174,11 +174,11 @@ def test_paged_prefix_reuse_skips_prefill_and_pages():
     out = eng.generate(requests(7))
     assert [r.out.tolist() for r in out] == truth
     # first request prefills one-shot; the other four share its prefix pages
-    assert eng.stats["oneshot_prefills"] == 1
-    assert eng.stats["prefix_hits"] == 4
-    assert eng.stats["shared_rows"] == 4 * 24     # 3 pages x 8 rows each
+    assert eng.counters["oneshot_prefills"] == 1
+    assert eng.counters["prefix_hits"] == 4
+    assert eng.counters["shared_rows"] == 4 * 24     # 3 pages x 8 rows each
     # paged peak well under the contiguous footprint (2 slots x smax rows)
-    assert eng.stats["cache_pages_peak"] < eng.batch * eng.max_blocks
+    assert eng.counters["cache_pages_peak"] < eng.batch * eng.max_blocks
     # prefix pages stay cached (LRU) after every sharer finished
     assert eng.alloc.live == 0 and eng.alloc.cached_pages > 0
 
@@ -193,9 +193,9 @@ def test_paged_prefix_cache_survives_eviction():
     eng = Engine(cfg, folded, batch_slots=1, max_len=64, cache_layout="paged",
                  page_size=8)
     first = eng.generate([Request(prompt=prompt.copy(), max_new_tokens=4)])
-    assert eng.stats["prefix_hits"] == 0
+    assert eng.counters["prefix_hits"] == 0
     second = eng.generate([Request(prompt=prompt.copy(), max_new_tokens=4)])
-    assert eng.stats["prefix_hits"] == 1
+    assert eng.counters["prefix_hits"] == 1
     assert second[0].out.tolist() == first[0].out.tolist()
 
 
@@ -246,5 +246,145 @@ def test_continuous_matches_lockstep_hybrid_arch():
     eng = Engine(cfg, folded, batch_slots=2, max_len=32)
     out = eng.generate(_mixed_requests(cfg, lens, max_news))
     assert [r.out.tolist() for r in out] == truth
-    assert eng.stats["oneshot_prefills"] == 0
-    assert eng.stats["loop_prefill_steps"] == sum(lens)
+    assert eng.counters["oneshot_prefills"] == 0
+    assert eng.counters["loop_prefill_steps"] == sum(lens)
+
+
+# --- chunked prefill (token-budget step loop) ---------------------------------
+
+@pytest.mark.parametrize("chunk_kw", [
+    dict(max_prefill_chunk=4),                            # 1 page per chunk
+    dict(max_prefill_chunk=8),                            # 2 pages per chunk
+    dict(max_prefill_chunk=8, max_batched_tokens=10),     # + shared budget
+])
+def test_chunked_matches_oneshot_token_identity(chunk_kw):
+    """Chunked prefill must be token-identical to one-shot prefill (and the
+    lockstep engine) for every chunk size: 1-page chunks, multi-page
+    chunks, ragged last chunks (prompt lengths here are deliberately not
+    page multiples), and chunks co-scheduled under a token budget."""
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    lens = [3, 11, 6, 17, 29, 5]        # 17, 29: several chunks + ragged tail
+    max_news = [4, 6, 5, 3, 4, 6]
+
+    oneshot = Engine(cfg, folded, batch_slots=2, max_len=64,
+                     cache_layout="paged", page_size=4)
+    truth = [r.out.tolist()
+             for r in oneshot.generate(_mixed_requests(cfg, lens, max_news))]
+
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
+                 page_size=4, **chunk_kw)
+    out = eng.generate(_mixed_requests(cfg, lens, max_news))
+    assert [r.out.tolist() for r in out] == truth
+    # chunking really happened: more chunk forwards than requests, and the
+    # long prompts took several chunks each
+    assert eng.counters["prefill_chunks"] > len(lens)
+    assert eng.counters["chunked_prefills"] >= 2
+    assert eng.counters["prefill_tokens"] == sum(lens)
+    assert eng.alloc.live == 0
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """While a long prompt is mid-prefill, decoding slots must keep
+    emitting: submit a short request first (so it reaches decode), then a
+    long one whose prefill spans several ticks under a tight budget, and
+    check the short request emits tokens during those ticks."""
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
+                 page_size=4, max_prefill_chunk=4, max_batched_tokens=6)
+    short = Request(prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=12)
+    long = Request(prompt=np.arange(5, 38, dtype=np.int32), max_new_tokens=4)
+    rid_short = eng.submit(short)
+    eng.step()                          # short prefills (4 tok) and decodes
+    rid_long = eng.submit(long)
+    seen_interleaved = 0
+    while eng.sched.has_work:
+        long_slots = [b for b in eng.sched.prefilling
+                      if eng.sched.slots[b].rid == rid_long]
+        emitted = eng.step()
+        if long_slots and any(r == rid_short for r, _ in emitted):
+            seen_interleaved += 1
+    # the long prompt (33 tokens / 4-token chunks, sharing a 6-token budget
+    # with the short slot's decode) must have been mid-prefill across ticks
+    # in which the short request still emitted tokens
+    assert seen_interleaved >= 3
+    assert eng.counters["chunked_prefills"] == 1
+    assert short.out is not None and long.out is not None
+
+
+def test_chunked_prefix_hit_lands_mid_chunk():
+    """A prefix-registry hit discovered at first-chunk time (registration
+    happens at prefill completion, after this request was admitted) must
+    skip the shared rows even when they end mid-chunk — here shared_rows ==
+    24 with 16-token chunks — and still produce identical tokens."""
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    rng = np.random.default_rng(5)
+    sys_prompt = rng.integers(0, cfg.vocab_size, (26,)).astype(np.int32)
+
+    def requests():
+        r = np.random.default_rng(9)
+        return [Request(prompt=np.concatenate(
+                    [sys_prompt,
+                     r.integers(0, cfg.vocab_size, (4 + i,)).astype(np.int32)]),
+                    max_new_tokens=4)
+                for i in range(3)]
+
+    # batch_slots=1 so each sharer is admitted after the previous request
+    # completed (and registered) — the hit is then discovered by the
+    # first-chunk refresh, not at admission
+    oneshot = Engine(cfg, folded, batch_slots=1, max_len=64,
+                     cache_layout="paged", page_size=8)
+    truth = [r.out.tolist() for r in oneshot.generate(requests())]
+
+    eng = Engine(cfg, folded, batch_slots=1, max_len=64, cache_layout="paged",
+                 page_size=8, max_prefill_chunk=16)
+    out = eng.generate(requests())
+    assert [r.out.tolist() for r in out] == truth
+    # requests 1, 2 hit the registered 3-page (24-row) prefix, which is not
+    # a multiple of the 16-token chunk: their first chunk starts at row 24
+    assert eng.counters["prefix_hits"] == 2
+    assert eng.counters["shared_rows"] == 2 * 24
+    assert eng.alloc.live == 0
+
+
+def test_engine_stats_invariants_every_tick():
+    """Engine.stats() gauges must satisfy the serving invariants at every
+    tick: slot partitioning, page-pool partitioning, and pending-work
+    consistency with the queue."""
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
+                 page_size=4, max_prefill_chunk=4, max_batched_tokens=8)
+    for r in _mixed_requests(cfg, [3, 21, 6, 17, 5], [4, 5, 4, 3, 5]):
+        eng.submit(r)
+    saw_prefilling = False
+    while eng.sched.has_work:
+        eng.step()
+        g = eng.stats()
+        assert g["decode_slots_active"] + g["prefill_slots"] \
+            + g["free_slots"] == eng.batch
+        assert g["pages_in_use"] + g["pages_free"] + g["pages_cached_lru"] \
+            == g["pages_capacity"]
+        assert g["prefill_chunks_pending"] >= (g["prefill_slots"] > 0)
+        assert (g["prefill_tokens_pending"] > 0) == (g["prefill_slots"] > 0)
+        assert g["waiting"] >= 0
+        assert g["counters"]["ticks"] == eng.counters["ticks"]
+        saw_prefilling = saw_prefilling or g["prefill_slots"] > 0
+    assert saw_prefilling                # budget really deferred prefill
+    g = eng.stats()
+    assert g["counters"]["completed"] == 5
+    assert g["pages_in_use"] == 0 and g["prefill_tokens_pending"] == 0
+
+
+def test_chunk_knobs_require_paged_layout():
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    with pytest.raises(AssertionError):
+        Engine(cfg, folded, batch_slots=2, max_len=64,
+               cache_layout="contiguous", max_prefill_chunk=8)
+    with pytest.raises(AssertionError):
+        Engine(cfg, folded, batch_slots=2, max_len=64,
+               cache_layout="paged", page_size=4,
+               max_prefill_chunk=6)      # not page-aligned
