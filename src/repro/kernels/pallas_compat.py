@@ -4,6 +4,10 @@ jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
 toolchain pin in CI (and the baked container image) may sit on either side of
 the rename.  Kernels import ``CompilerParams`` from here so they compile
 against both.
+
+This shim was written against jax 0.4.37 (the ``TPUCompilerParams`` side),
+which is the floor requirements-dev.txt pins — move that pin if a future
+Pallas rename forces a third branch here.
 """
 from __future__ import annotations
 

@@ -30,9 +30,15 @@ Cache layouts (``cache_layout=``):
 
 * ``"paged"`` — the int8 KV cache is a global pool of fixed-size pages; each
   slot carries a block-table row instead of an exclusive ``Smax`` stripe.
-  Admission reserves exactly the pages a request can touch (prompt + decode
-  budget) — a 16-token request no longer pays for ``Smax`` rows — and a
-  head-of-line request that doesn't fit WAITS for pages instead of OOMing.
+  By default (``reserve_policy="ondemand"``) admission reserves only the
+  PROMPT's pages; decode slots request their next page when the write
+  cursor crosses a page boundary, and when the pool runs dry the engine
+  preempts a victim — spill registers its finished pages in the prefix
+  registry and requeues it at the queue front; restore replays through the
+  ordinary chunk-continuation path, hitting the registry for whatever
+  survived.  ``reserve_policy="full"`` keeps the PR-2 contract (prompt +
+  decode budget reserved up front, decode can never OOM, overload stalls
+  admission) for latency-critical serving where recompute is unacceptable.
   Prompt prefixes are shared at page granularity through the allocator's
   refcounted registry: a repeated system prompt maps cached pages and only
   the unseen suffix runs through the model.  Chunked prefill requires this
@@ -83,7 +89,8 @@ def supports_continuous(cfg: ModelConfig) -> bool:
 
 
 _CONTINUOUS_ONLY_KW = ("prefill_bucket", "cache_layout", "page_size",
-                       "n_pages", "max_batched_tokens", "max_prefill_chunk")
+                       "n_pages", "max_batched_tokens", "max_prefill_chunk",
+                       "reserve_policy")
 
 
 def make_engine(cfg: ModelConfig, folded, **kw):
@@ -110,7 +117,8 @@ class Engine:
                  cache_layout: str = "auto", page_size: int = 16,
                  n_pages: Optional[int] = None,
                  max_batched_tokens: Optional[int] = None,
-                 max_prefill_chunk: Optional[int] = None):
+                 max_prefill_chunk: Optional[int] = None,
+                 reserve_policy: Optional[str] = None):
         assert supports_continuous(cfg), \
             "continuous engine serves token-LM archs; use LockstepEngine"
         self.cfg = cfg
@@ -143,6 +151,16 @@ class Engine:
                 "requires the paged cache layout"
         self.max_batched_tokens = max_batched_tokens
         self.max_prefill_chunk = max_prefill_chunk
+        # page-reservation policy: on-demand growth + preemption is the
+        # default for the paged pool (the memory win paging exists for);
+        # "full" restores the reserve-everything-at-admission contract
+        if self.layout == "paged":
+            self.reserve_policy = reserve_policy or "ondemand"
+            assert self.reserve_policy in ("full", "ondemand"), reserve_policy
+        else:
+            assert reserve_policy in (None, "full"), \
+                "on-demand page growth requires the paged cache layout"
+            self.reserve_policy = "full"
         if self.layout == "paged":
             self.max_blocks = pages_needed(self.smax, page_size)
             # +1: page 0 is the reserved trash page (inactive-slot writes)
@@ -199,7 +217,16 @@ class Engine:
                     oneshot_prefills=0, chunked_prefills=0,
                     loop_prefill_steps=0, decode_steps=0, decode_tokens=0,
                     completed=0, prefix_hits=0, shared_rows=0,
-                    suffix_prefills=0, cache_pages_peak=0)
+                    suffix_prefills=0, cache_pages_peak=0,
+                    # on-demand growth + preemption accounting
+                    grown_pages=0,        # decode pages granted on demand
+                    preemptions=0,        # victims spilled (pool ran dry)
+                    preempted_prefill=0, preempted_decode=0,
+                    restores=0,           # preempted requests re-seated
+                    spilled_rows=0,       # cache rows held at spill time
+                    recomputed_tokens=0,  # replayed rows the registry lost
+                    pool_wait_ticks=0)    # ticks a request waited on pages
+    #                                       while a slot stood free
 
     def _init_state(self, seed: int):
         self.requests: Dict[int, Request] = {}
@@ -210,7 +237,8 @@ class Engine:
             self.alloc = BlockAllocator(self.n_pages, self.page_size)
             self.sched = Scheduler(self.batch, allocator=self.alloc,
                                    max_batched_tokens=self.max_batched_tokens,
-                                   max_prefill_chunk=self.max_prefill_chunk)
+                                   max_prefill_chunk=self.max_prefill_chunk,
+                                   reserve=self.reserve_policy)
             self.cache = S.init_paged_cache(self.cfg, self.n_pages,
                                             self.page_size)
             self.block_tables = np.zeros((self.batch, self.max_blocks),
@@ -226,14 +254,17 @@ class Engine:
 
     # --- observability ---------------------------------------------------
 
-    def stats(self) -> Dict:
+    def stats(self, check: bool = False) -> Dict:
         """Instantaneous serving gauges + the cumulative ``counters``.
 
         Invariants the engine maintains (asserted in the tests, logged per
         tick by serve_bench): occupied slots partition into decode-active +
         prefilling; in the paged layout ``pages_in_use + pages_free +
         pages_cached_lru == pages_capacity`` and every prefilling slot's
-        pending rows fit the pages it reserved."""
+        pending rows fit the pages it reserved.  ``check=True`` also sweeps
+        ``BlockAllocator.check_invariants()`` — O(n_pages), so the tests'
+        per-tick assertions opt in while bench/monitoring reads (which time
+        the step loop) stay cheap."""
         pre = [self.sched.slots[b] for b in self.sched.prefilling]
         chunk = self.max_prefill_chunk
         pending = [st.prompt_len - st.prefill_pos for st in pre]
@@ -248,6 +279,8 @@ class Engine:
         )
         if self.layout == "paged":
             al = self.alloc
+            if check:
+                al.check_invariants()
             g.update(pages_in_use=al.live,
                      pages_free=al.free_list_pages,
                      pages_cached_lru=al.lru_pages,
@@ -342,10 +375,20 @@ class Engine:
         shared ``block_tables`` row stays zeroed (trash page) until handoff,
         so decode ticks running while this slot is mid-prefill cannot
         scribble on its pages.  Contiguous: a single whole-prompt chunk via
-        the batch-1 prefill + slot write (chunking needs pages)."""
+        the batch-1 prefill + slot write (chunking needs pages).
+
+        A restored preempted slot runs through this same path — its
+        ``prompt_tokens`` replay sequence includes any tokens it emitted
+        before the spill.  Each chunk charges ``recomputed_tokens`` for the
+        rows it re-runs below the slot's high-water mark (the furthest row
+        ever computed, across every spill) — rows the prefix registry gave
+        back are skipped by the cursor and never charged."""
         req = st.request
-        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        prompt = np.asarray(st.prompt_tokens(), np.int32).reshape(-1)
         ln = len(prompt)
+        if pos0 < st.hwm_rows:
+            self.counters["recomputed_tokens"] += \
+                min(pos0 + ntok, st.hwm_rows) - pos0
         final = pos0 + ntok >= ln
         loop_prefill = False
         if self.layout == "paged":
@@ -377,6 +420,10 @@ class Engine:
         if self.layout == "paged":
             self.alloc.register_prefix([int(t) for t in prompt], st.pages)
             self._set_table_row(b, st.pages)
+        # the replay snapshot is spent: decode appends to ``emitted`` from
+        # here, so keeping it would silently desync prompt_tokens(); the
+        # next spill (if any) rebuilds it from prompt + emitted
+        st.tokens = None
         if st.shared_rows:
             self.counters["prefix_hits"] += 1
             self.counters["shared_rows"] += st.shared_rows
@@ -404,6 +451,52 @@ class Engine:
             self.block_tables[b, :] = 0
         self.counters["completed"] += 1
 
+    # --- on-demand growth + preemption -----------------------------------
+
+    def _preempt(self, b: int):
+        """Spill slot ``b`` (scheduler registers its finished pages and
+        requeues it at the queue front) and clear its engine-side rows."""
+        st = self.sched.slots[b]
+        was_prefilling = st.prefilling
+        self.sched.preempt(b)
+        self.pos[b] = 0
+        self.block_tables[b, :] = 0
+        self.counters["preemptions"] += 1
+        self.counters["preempted_prefill" if was_prefilling
+                      else "preempted_decode"] += 1
+        self.counters["spilled_rows"] += st.spilled_rows
+
+    def _grow_decode_pages(self):
+        """On-demand mode, run between the tick's prefill chunks and its
+        decode forward: make sure every decoding slot owns the page its
+        write cursor is about to enter.  Slots grow oldest-first; when the
+        pool comes up empty the scheduler names a victim (last-admitted
+        prefilling slot, else longest-remaining decoder — never the oldest
+        seated request while another candidate exists) which is spilled and
+        the allocation retried.  ``submit`` caps every request's worst-case
+        pages at pool capacity, so once every other slot is spilled the
+        grower's allocation cannot fail — the RuntimeError is a genuine
+        invariant breach, not an operating condition."""
+        order = sorted(self.sched.decoding,
+                       key=lambda b: self.sched.slots[b].rid)
+        for b in order:
+            st = self.sched.slots[b]
+            if st is None:              # preempted by an earlier grower
+                continue
+            while True:
+                got = self.sched.grow(st, st.pos + 1)
+                if got is not None:
+                    self.counters["grown_pages"] += got
+                    break
+                v = self.sched.pick_victim(exclude=frozenset({b}))
+                if v is None:
+                    raise RuntimeError(
+                        "page pool exhausted with no preemption victim; "
+                        "submit() sizing makes this unreachable")
+                self._preempt(v)
+            if got:                     # chain unchanged -> row already set
+                self._set_table_row(b, st.pages)
+
     def _done(self, st: SlotState) -> bool:
         req = st.request
         if len(st.emitted) >= req.max_new_tokens:
@@ -423,13 +516,24 @@ class Engine:
            a final chunk also charges the decode token of its handoff),
            replanning after every chunk so a completion's registered prefix
            is visible to the next slot's first chunk,
-        3. decode one token for every slot whose prompt is fully cached
+        3. (on-demand reservation) grow each decoding slot's page chain
+           where its write cursor crosses a page boundary, preempting a
+           victim when the pool runs dry,
+        4. decode one token for every slot whose prompt is fully cached
            (slots that handed off in step 2 join the same tick's batch).
 
         Returns the (rid, token) pairs emitted this tick."""
         self.counters["ticks"] += 1
         emitted: List[Tuple[int, int]] = []
-        self.sched.admit()
+        placed = self.sched.admit()
+        for _b, st in placed:
+            if st.preemptions:          # a spilled request re-seated
+                self.counters["restores"] += 1
+        if self.layout == "paged" and self.sched.waiting \
+                and self.sched.n_free > 0:
+            # a request is waiting on PAGES, not slots: the stranded-
+            # capacity signal the overload bench A/Bs across policies
+            self.counters["pool_wait_ticks"] += 1
         n_decode = len(self.sched.decoding)
         used = 0
         chunked: set = set()
@@ -447,6 +551,8 @@ class Engine:
         for b in self.sched.prefilling:   # scheduler anti-starvation input
             st = self.sched.slots[b]
             st.starved_ticks = 0 if b in chunked else st.starved_ticks + 1
+        if self.layout == "paged" and self.reserve_policy == "ondemand":
+            self._grow_decode_pages()     # may preempt victims
         active = self.sched.decoding
         if self.layout == "paged":
             self.counters["cache_pages_peak"] = self.alloc.peak_live

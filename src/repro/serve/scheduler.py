@@ -23,6 +23,16 @@ finished.  Shared pages are mapped copy-on-write: sharers only ever read
 them; a writer must own the page exclusively (``ensure_exclusive``), which
 the engine guarantees structurally by sharing only whole pages strictly
 before the first position it will write.
+
+With ``reserve="ondemand"`` the scheduler stops reserving a request's full
+decode budget at admission: only the prompt's pages are taken up front and
+decode slots request their next page when the write cursor crosses a page
+boundary (``grow``).  The pool can therefore run dry mid-request; the
+engine resolves that by preempting a victim (``pick_victim`` +
+``preempt``) instead of stalling.  Spill registers the victim's fully
+written pages in the prefix registry before dropping its references, so a
+restore that re-admits before allocation pressure reclaims them turns the
+lost work back into a prefix-cache hit and replays only the tail.
 """
 from __future__ import annotations
 
@@ -164,17 +174,23 @@ class BlockAllocator:
         """Copy-on-write: make ``pages[idx]`` safe to overwrite.  Returns
         ``(page, copy_src)`` — ``copy_src`` is the old page whose rows must
         be copied into the fresh page when the original was shared (or
-        registered, i.e. passively shareable), else None.  The paged engine
-        only ever writes pages it allocated exclusively, so in practice
-        this is a no-op assert; the hook exists so future preemption/swap
-        code inherits correct semantics."""
+        registered, i.e. passively shareable), else None.
+
+        The caller KEEPS its reference on ``copy_src`` until the row copy
+        is done and must then drop it with ``free_pages([copy_src])``.
+        Releasing it here instead (as this method once did) is a
+        use-after-free: a refcount-1 registered source parks on the LRU the
+        moment it is freed, and any allocation before the copy — including
+        the very ``alloc`` that serves a concurrent slot — may reclaim and
+        overwrite it.  The paged engine only ever writes pages it allocated
+        exclusively, so today this is a no-op assert; the hook carries the
+        semantics preemption/swap code inherits."""
         p = pages[idx]
         if self.ref[p] == 1 and p not in self._key_of:
             return p, None
         fresh = self.alloc(1)
         if fresh is None:
             raise RuntimeError("pool exhausted during copy-on-write")
-        self.free_pages([p])
         pages[idx] = fresh[0]
         return fresh[0], p
 
@@ -192,6 +208,44 @@ class BlockAllocator:
         """Refcount-0 registered pages parked on the LRU (reclaimable)."""
         return len(self._lru)
 
+    # --- debug ----------------------------------------------------------
+
+    def check_invariants(self):
+        """Assert the pool's structural invariants (O(n_pages); called from
+        ``Engine.stats()`` so every per-tick stats assertion sweeps the
+        allocator too, and hammered by the property tests):
+
+        * the trash page is never referenced, freed, cached, or registered,
+        * no page sits on the free list and the LRU at once,
+        * refcounts are nonnegative and ``live`` counts exactly the pages
+          with refcount > 0,
+        * live + LRU + free partitions the allocatable pool,
+        * the registry and its page->key inverse agree, every LRU page is a
+          refcount-0 registered page, and no free-list page is registered.
+        """
+        free = set(self.free)
+        lru = set(self._lru)
+        assert len(free) == len(self.free), "free list holds duplicates"
+        assert TRASH_PAGE not in free and TRASH_PAGE not in lru and \
+            TRASH_PAGE not in self._key_of and self.ref[TRASH_PAGE] == 0, \
+            "trash page leaked into the pool"
+        assert not free & lru, f"pages on free AND lru: {free & lru}"
+        assert all(r >= 0 for r in self.ref), f"negative refcount: {self.ref}"
+        held = {p for p in range(self.n_pages) if self.ref[p] > 0}
+        assert self.live == len(held), (self.live, held)
+        assert not held & free and not held & lru, \
+            "referenced page on free list or LRU"
+        assert self.live + len(lru) + len(free) == self.n_pages - 1, \
+            (self.live, len(lru), len(free), self.n_pages)
+        assert len(self._cached) == len(self._key_of)
+        for key, (p, _seg) in self._cached.items():
+            assert self._key_of.get(p) == key, f"registry desync on page {p}"
+        for p in lru:
+            assert self.ref[p] == 0 and p in self._key_of, \
+                f"LRU page {p} not a refcount-0 registered page"
+        for p in free:
+            assert p not in self._key_of, f"registered page {p} on free list"
+
 
 @dataclasses.dataclass
 class SlotState:
@@ -207,10 +261,28 @@ class SlotState:
     chunks_done: int = 0            # prefill chunk forwards run so far
     refresh_seen: int = -1          # registry version last re-matched against
     starved_ticks: int = 0          # consecutive ticks prefilling w/o a chunk
+    tokens: Optional[List[int]] = None   # replay sequence after a decode
+    #                                      preemption (prompt + emitted);
+    #                                      set by preempt, cleared at the
+    #                                      replay's handoff — only valid
+    #                                      while the slot prefills
+    spilled_rows: int = 0           # cache rows held when last preempted
+    hwm_rows: int = 0               # furthest row ever computed (across
+    #                                 spills): replay below it = recompute
+    preemptions: int = 0            # times this request was spilled
+
+    def prompt_tokens(self):
+        """The token sequence prefill must cover.  Normally the request
+        prompt; after a DECODE preemption it is prompt + every token
+        emitted so far — the spilled KV rows are regenerated by replaying
+        them (greedy decode is deterministic, so the replay is
+        bit-identical and the final chunk's logits emit the next new
+        token, never a repeat)."""
+        return self.request.prompt if self.tokens is None else self.tokens
 
     @property
     def prompt_len(self) -> int:
-        return len(self.request.prompt)
+        return len(self.prompt_tokens())
 
     @property
     def prefilling(self) -> bool:
@@ -224,10 +296,19 @@ class Scheduler:
                  allocator: Optional[BlockAllocator] = None,
                  rows_fn: Optional[Callable[[object, int], int]] = None,
                  max_batched_tokens: Optional[int] = None,
-                 max_prefill_chunk: Optional[int] = None):
+                 max_prefill_chunk: Optional[int] = None,
+                 reserve: str = "full"):
         assert n_slots >= 1
+        assert reserve in ("full", "ondemand"), reserve
+        assert reserve == "full" or allocator is not None, \
+            "on-demand page growth needs the paged allocator"
         self.n_slots = n_slots
         self.allocator = allocator
+        # "full": admission reserves prompt + decode budget, decode can
+        # never OOM.  "ondemand": admission reserves only the prompt's
+        # pages; decode pages are granted by ``grow`` at page-boundary
+        # crossings and exhaustion is resolved by preemption, not refusal.
+        self.reserve = reserve
         # rows_fn(request, shared_rows) -> cache rows to reserve (the engine
         # knows about prefill bucketing; the scheduler stays model-agnostic)
         self.rows_fn = rows_fn or (
@@ -261,16 +342,23 @@ class Scheduler:
 
     # --- slot side ------------------------------------------------------
 
-    def _reserve(self, st: SlotState, request) -> bool:
+    def _reserve(self, st: SlotState) -> bool:
         """Map shared prefix pages and allocate the exclusive tail.  False
         when the pool can't cover the request — admission stalls (FIFO is
-        preserved: later, smaller requests do NOT jump the queue)."""
+        preserved: later, smaller requests do NOT jump the queue).  Under
+        ``reserve="full"`` the tail covers the whole decode budget
+        (``rows_fn``); under ``"ondemand"`` only the prompt rows — the
+        prefill scatter writes whole pages, so ``pages_needed(len)`` is
+        exactly what the chunk forwards touch."""
         al = self.allocator
         ps = al.page_size
-        prompt = [int(t) for t in request.prompt]
+        prompt = [int(t) for t in st.prompt_tokens()]
         shared = al.match_prefix(prompt, (len(prompt) - 1) // ps)
         shared_rows = len(shared) * ps
-        rows = self.rows_fn(request, shared_rows)
+        if self.reserve == "ondemand":
+            rows = len(prompt)
+        else:
+            rows = self.rows_fn(st.request, shared_rows)
         need = max(0, pages_needed(rows, ps) - len(shared))
         excl = al.alloc(need)
         if excl is None:
@@ -286,18 +374,23 @@ class Scheduler:
         """Seat waiting requests in free slots (FIFO).  Returns the new
         (slot index, state) pairs; the engine prefills them and fills in
         ``pos`` / ``last_token``.  With a BlockAllocator, admission also
-        reserves the request's KV pages (shared prefix + exclusive tail)
-        up front — a head-of-line request that doesn't fit stalls the queue
-        instead of OOMing mid-decode."""
+        reserves the request's KV pages (shared prefix + an exclusive tail
+        covering the whole decode budget under ``reserve="full"``, or just
+        the prompt under ``"ondemand"``) — a head-of-line request that
+        doesn't fit stalls the queue.  A preempted SlotState requeued by
+        ``preempt`` sits at the queue front and is re-seated as-is: its
+        replay sequence re-matches the prefix registry, so spilled pages
+        that survived on the LRU come back as cache hits."""
         placed = []
         for b in range(self.n_slots):
             if limit is not None and len(placed) >= limit:
                 break
             if self.slots[b] is not None or not self.waiting:
                 continue
-            rid, request = self.waiting[0]
-            st = SlotState(rid=rid, request=request)
-            if self.allocator is not None and not self._reserve(st, request):
+            rid, item = self.waiting[0]
+            st = item if isinstance(item, SlotState) else \
+                SlotState(rid=rid, request=item)
+            if self.allocator is not None and not self._reserve(st):
                 break                       # out of pages: wait, keep FIFO
             self.waiting.popleft()
             self.slots[b] = st
@@ -309,7 +402,102 @@ class Scheduler:
         assert st is not None, f"evicting empty slot {b}"
         self.slots[b] = None
         if self.allocator is not None and st.pages:
-            self.allocator.free_pages(st.pages)
+            # tail first: registered refcount-0 pages enter the LRU in free
+            # order and reclaim pops oldest, so freeing the chain HEAD
+            # first would make the next allocation break the registry chain
+            # at page 0 and strand the rest unmatchable — reversed, reclaim
+            # consumes the tail and a usable prefix survives longest
+            self.allocator.free_pages(st.pages[::-1])
+        return st
+
+    # --- on-demand growth + preemption ----------------------------------
+
+    def grow(self, st: SlotState, rows: int) -> Optional[int]:
+        """Extend ``st``'s page chain to cover ``rows`` cache rows (the
+        on-demand decode path calls this just before the write cursor
+        enters a page it doesn't own).  Returns the number of pages newly
+        allocated (0 when the chain already covers ``rows``), or None when
+        the pool came up empty — the engine then preempts a victim and
+        retries; the chain is never partially grown."""
+        al = self.allocator
+        need = pages_needed(rows, al.page_size) - len(st.pages)
+        if need <= 0:
+            return 0
+        got = al.alloc(need)
+        if got is None:
+            return None
+        st.pages.extend(got)
+        return need
+
+    def pick_victim(self, exclude: frozenset = frozenset()
+                    ) -> Optional[int]:
+        """The slot to spill under pool pressure, or None if no candidate.
+
+        Policy: the LAST-admitted prefilling slot first (least sunk cost —
+        its unfinished pages are pure loss anyway and its restore is the
+        cheap chunk-replay path), then the decoding slot with the most
+        decode budget remaining (it would hold pages hostage longest;
+        ties break youngest).  When more than one candidate exists the
+        oldest (lowest-rid) seated request is never chosen — combined with
+        requeue-at-front restores this keeps the head of line progressing,
+        so every request eventually finishes under sustained overload."""
+        cands = [(b, st) for b, st in enumerate(self.slots)
+                 if st is not None and b not in exclude]
+        if not cands:
+            return None
+        if len(cands) > 1:
+            head = min(st.rid for _, st in cands)
+            cands = [(b, st) for b, st in cands if st.rid != head]
+        pre = [(st.rid, b) for b, st in cands if st.prefilling]
+        if pre:
+            return max(pre)[1]
+        dec = [(st.request.max_new_tokens - len(st.emitted), st.rid, b)
+               for b, st in cands]
+        return max(dec)[2]
+
+    def preempt(self, b: int) -> SlotState:
+        """Spill slot ``b``'s pages and requeue it at the FRONT of the
+        waiting queue (it outranks everything submitted after it).
+
+        The victim's fully written pages — up to the last page boundary
+        under its write cursor — are registered in the prefix registry
+        BEFORE its references drop, so they park on the LRU instead of the
+        free list; if allocation pressure hasn't reclaimed them by
+        re-admission, ``_reserve``/``refresh_prefix`` revive them as a
+        prefix hit and the replay prefills only the lost tail.  A decoding
+        victim folds its emitted tokens into the replay sequence
+        (``SlotState.prompt_tokens``): greedy replay regenerates the
+        identical KV rows and the handoff logits continue exactly where
+        the victim stopped.  The partial page past the boundary is
+        unregistered and returns to the free list — those rows are the
+        recompute cost the engine accounts."""
+        st = self.slots[b]
+        assert st is not None, f"preempting empty slot {b}"
+        al = self.allocator
+        ps = al.page_size
+        if st.prefilling:
+            cached = st.prefill_pos        # page-aligned mid-prefill
+        else:
+            cached = st.pos                # decode wrote rows [0, pos)
+            st.tokens = [int(t) for t in st.request.prompt] + \
+                [int(t) for t in st.emitted]
+        boundary = (cached // ps) * ps
+        if boundary:
+            al.register_prefix([int(t) for t in st.prompt_tokens()],
+                               st.pages[:boundary // ps])
+        al.free_pages(st.pages[::-1])  # tail first — see evict()
+        self.slots[b] = None
+        st.pages = []
+        st.shared_rows = 0
+        st.prefill_pos = 0
+        st.chunks_done = 0
+        st.refresh_seen = -1
+        st.starved_ticks = 0
+        st.pos = 0
+        st.spilled_rows = cached
+        st.hwm_rows = max(st.hwm_rows, cached)
+        st.preemptions += 1
+        self.waiting.appendleft((st.rid, st))
         return st
 
     # --- chunked prefill planning ---------------------------------------
@@ -332,7 +520,7 @@ class Scheduler:
             return 0
         st.refresh_seen = al.registry_version
         ps = al.page_size
-        prompt = [int(t) for t in st.request.prompt]
+        prompt = [int(t) for t in st.prompt_tokens()]
         matched = al.match_prefix(prompt, (len(prompt) - 1) // ps)
         new_rows = len(matched) * ps
         if new_rows <= st.shared_rows:

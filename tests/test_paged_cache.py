@@ -3,6 +3,7 @@
 Pure-python bookkeeping: page refcounts, prefix registry, LRU reclaim,
 FIFO-preserving admission stalls.  No model or jax required.
 """
+import collections
 import dataclasses
 
 import numpy as np
@@ -101,11 +102,44 @@ def test_ensure_exclusive_cow():
     pages = list(shared)
     page, copy_src = al.ensure_exclusive(pages, 0)
     assert copy_src == shared[0] and page != shared[0]   # fresh copy target
-    assert al.ref[page] == 1 and al.ref[shared[0]] == 1
+    # the caller still holds its reference on the copy source until the row
+    # copy lands; dropping it afterwards is the caller's job
+    assert al.ref[page] == 1 and al.ref[copy_src] == 2
+    al.free_pages([copy_src])                     # "copy done"
+    assert al.ref[copy_src] == 1                  # registry owner remains
     # exclusive unregistered page: no copy needed
     mine = al.alloc(1)
     page2, src2 = al.ensure_exclusive(mine, 0)
     assert page2 == mine[0] and src2 is None
+    al.check_invariants()
+
+
+def test_ensure_exclusive_source_not_reallocatable_before_copy():
+    """Regression (use-after-free): ensure_exclusive used to drop the
+    caller's reference on the copy source before returning it, so on a
+    nearly-full pool a refcount-1 REGISTERED source parked on the LRU and
+    the next allocation — e.g. a concurrent slot's growth, or the very CoW
+    of another page — could reclaim and overwrite it before its rows were
+    copied.  The source must stay pinned until the caller frees it."""
+    al = BlockAllocator(n_pages=3, page_size=2)   # 2 allocatable pages
+    prompt = [5, 6, 7]
+    chain = al.alloc(1)
+    al.register_prefix(prompt, chain)             # page registered
+    al.free_pages(chain)                          # rc 0: parked on the LRU
+    held = al.match_prefix(prompt, 1)             # revived, rc 1 — but still
+    assert held == chain                          # registered => CoW needed
+    pages = list(held)
+    page, copy_src = al.ensure_exclusive(pages, 0)
+    assert copy_src == chain[0] and page != chain[0]
+    # mid-CoW, the pool is now FULL (source + fresh page).  Any allocation
+    # must fail rather than hand the pending copy source back out.
+    assert al.alloc(1) is None
+    assert al.ref[copy_src] == 1                  # still pinned
+    al.check_invariants()
+    al.free_pages([copy_src])                     # copy done: rc 0 -> LRU
+    grabbed = al.alloc(1)                         # NOW it may be reclaimed
+    assert grabbed == [copy_src]
+    al.check_invariants()
 
 
 # --- scheduler + allocator ----------------------------------------------------
@@ -182,6 +216,61 @@ def test_allocator_invariants_random_traffic(ops, n_pages):
         assert al.live == len(held)
         assert len(al.free) + len(al._lru) + al.live == al.capacity
         assert al.peak_live >= al.live
+        al.check_invariants()
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 3)), min_size=1,
+                max_size=80), st.integers(4, 9))
+@settings(max_examples=60, deadline=None)
+def test_allocator_invariants_with_registry_traffic(ops, n_pages):
+    """Random interleaving of alloc / free / register_prefix /
+    match_prefix REVIVAL against concurrent LRU reclaim (the revival path
+    resurrects refcount-0 cached pages while allocation pressure is
+    popping that same LRU): every step must hold the full pool partition
+    and the registry bijection, matched chains must stay exclusively
+    owned or refcounted, and a revived page must never be concurrently
+    handed out by alloc."""
+    al = BlockAllocator(n_pages=n_pages, page_size=2)
+    chains = []          # (pages, prompt_or_None) we hold references on
+    prompts = []         # registered prompts that may still be cached
+    tok = iter(range(10_000))
+
+    for op, n in ops:
+        if op == 0:                                   # alloc a fresh chain
+            got = al.alloc(n)
+            if got is None:
+                assert al.available() < n
+            else:
+                chains.append((got, None))
+        elif op == 1 and chains:                      # drop one reference
+            pages, _ = chains.pop()
+            al.free_pages(pages)
+        elif op == 2 and chains:                      # register newest chain
+            pages, registered = chains[-1]
+            if registered is None:
+                prompt = [next(tok) for _ in range(len(pages) * 2 + 1)]
+                al.register_prefix(prompt, pages)
+                chains[-1] = (pages, prompt)
+                prompts.append((prompt, pages))
+        elif op == 3 and prompts:                     # revive via match
+            prompt, pages = prompts[n % len(prompts)]
+            matched = al.match_prefix(prompt, len(pages))
+            # a hit must be a prefix of the original chain; a miss means
+            # reclaim got there first — both legal, never a third thing
+            assert matched == pages[:len(matched)]
+            if matched:
+                chains.append((matched, None))
+        held = collections.Counter(
+            p for pages, _ in chains for p in pages)
+        assert al.live == len(held)
+        for p, k in held.items():
+            assert al.ref[p] == k, f"page {p}: ref {al.ref[p]} != held {k}"
+        al.check_invariants()
+
+    for pages, _ in chains:                           # full teardown
+        al.free_pages(pages)
+    assert al.live == 0
+    al.check_invariants()
 
 
 # --- chunk planning anti-starvation (pure scheduler simulation) ---------------
@@ -250,3 +339,105 @@ def test_chunked_head_of_line_not_starved_by_short_stream(budget, n_decode):
     long_slots = [st for st in sched.slots
                   if st is not None and st.rid == 0]
     assert not long_slots or not long_slots[0].prefilling
+
+
+# --- on-demand reservation + preemption (pure scheduler) ----------------------
+
+def _ondemand_sched(n_slots, n_pages, page_size):
+    al = BlockAllocator(n_pages, page_size)
+    return Scheduler(n_slots, allocator=al, reserve="ondemand"), al
+
+
+def test_ondemand_reserves_prompt_pages_only():
+    sched, al = _ondemand_sched(n_slots=2, n_pages=9, page_size=4)
+    sched.submit(_req(range(10), max_new=20))    # full policy would need 8
+    (b, st), = sched.admit()
+    assert len(st.pages) == 3                    # ceil(10 / 4) prompt pages
+    assert al.live == 3
+    # the decode tail is granted page by page as the cursor crosses
+    st.prefill_pos = 10                          # "prefill done"
+    st.pos = 10
+    assert sched.grow(st, 11) == 0               # row 10 sits in page 3
+    assert sched.grow(st, 13) == 1               # row 12 crosses into page 4
+    assert len(st.pages) == 4 and al.live == 4
+    assert sched.grow(st, 33) is None            # 9 pages > capacity: refuse
+    assert len(st.pages) == 4                    # never partially grown
+
+
+def test_pick_victim_prefers_young_prefiller_then_long_decoder():
+    sched, al = _ondemand_sched(n_slots=4, n_pages=32, page_size=4)
+    for i, (ln, mn) in enumerate([(4, 2), (4, 12), (4, 6), (8, 3)]):
+        sched.submit(_req(range(100 * i, 100 * i + ln), max_new=mn))
+    placed = sched.admit()
+    assert len(placed) == 4
+    # rids 0..2 decoding, rid 3 still prefilling
+    for b, st in placed[:3]:
+        st.prefill_pos = st.prompt_len
+        st.pos = st.prompt_len
+    # prefilling slot first, regardless of decode budgets
+    assert sched.pick_victim() == 3
+    # without prefilling candidates: the longest-remaining decoder (rid 1)
+    sched.slots[3].prefill_pos = sched.slots[3].prompt_len
+    assert sched.pick_victim() == 1
+    assert sched.pick_victim(exclude=frozenset({1})) == 2
+    # the oldest seated request is never chosen while another remains
+    sched.slots[0].request.max_new_tokens = 100
+    assert sched.pick_victim() == 1
+    # ... unless it is the only candidate left
+    assert sched.pick_victim(exclude=frozenset({1, 2, 3})) == 0
+    # slot index != rid (regression: the victim is a SLOT, not a rid)
+    sched.evict(1)
+    sched.submit(_req(range(900, 904), max_new=50))   # rid 4, longest left
+    (b4, st4), = sched.admit()
+    assert b4 == 1 and st4.rid == 4
+    st4.prefill_pos = st4.prompt_len
+    st4.pos = st4.prompt_len
+    assert sched.pick_victim() == 1
+
+
+def test_preempt_prefilling_victim_registers_boundary_and_requeues_front():
+    sched, al = _ondemand_sched(n_slots=2, n_pages=16, page_size=4)
+    prompt = list(range(700, 714))                    # 14 tokens, 4 pages
+    sched.submit(_req(prompt, max_new=4))             # rid 0
+    sched.submit(_req([1, 2], max_new=2))             # rid 1
+    placed = sched.admit()
+    st0 = placed[0][1]
+    st0.prefill_pos = 8                               # two chunks done
+    st0.chunks_done = 2
+    st0 = sched.preempt(0)
+    assert st0.spilled_rows == 8 and st0.preemptions == 1
+    assert st0.pages == [] and st0.prefill_pos == 0 and st0.chunks_done == 0
+    assert sched.slots[0] is None
+    # requeued at the FRONT: it outranks everything submitted after it
+    assert sched.waiting[0][0] == 0
+    al.check_invariants()
+    # its two finished pages were registered before the references dropped:
+    # still matchable, so re-admission restores them as a prefix hit
+    placed = sched.admit()
+    st0b = placed[0][1]
+    assert st0b is st0 and st0b.shared_rows == 8 and st0b.prefill_pos == 8
+    assert al.ref[st0b.pages[0]] == 1
+    al.check_invariants()
+
+
+def test_preempt_decode_victim_folds_emitted_into_replay():
+    sched, al = _ondemand_sched(n_slots=1, n_pages=16, page_size=4)
+    prompt = list(range(40, 46))                      # 6 tokens
+    sched.submit(_req(prompt, max_new=8))
+    (b, st), = sched.admit()
+    st.prefill_pos = 6
+    st.pos = 6
+    sched.grow(st, 9)                                 # decode grew a page
+    st.pos = 9                                        # wrote rows [0, 9)
+    st.emitted = [91, 92, 93]                         # handoff + 2 decodes
+    sched.preempt(b)
+    # replay covers prompt + every emitted token; rows [0,8) survive as
+    # registered pages, row 8 (the partial page) is the recompute cost
+    assert list(st.prompt_tokens()) == prompt + [91, 92, 93]
+    assert st.prompt_len == 9 and st.spilled_rows == 9
+    al.check_invariants()
+    placed = sched.admit()
+    assert placed[0][1] is st
+    assert st.shared_rows == 8 and st.prefill_pos == 8
+    assert len(st.pages) == 3                         # 2 shared + 1 fresh
+    al.check_invariants()

@@ -1,0 +1,166 @@
+"""On-demand page growth + preemption: forced-preemption runs must be
+greedy-token-identical to unlimited-pool runs, spilled work must be
+recoverable through the prefix registry, and sustained overload must not
+starve any request.
+
+The pool sizes here are chosen so the step loop *must* preempt: total
+worst-case page demand exceeds capacity while every individual request
+fits (``submit`` guarantees the latter, which is what makes the engine's
+preemption loop always able to find pages after spilling victims).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import fold as F
+from repro.models import transformer as T
+from repro.serve.engine import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def folded_cfg():
+    cfg = smoke_config("yi-6b")
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    calib = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    _, obs, _ = T.forward(cfg, params, amax, calib)
+    return cfg, F.fold_params(cfg, params, obs)
+
+
+def _requests(cfg, lens, max_news, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, (ln,)
+                                        ).astype(np.int32),
+                    max_new_tokens=mn)
+            for ln, mn in zip(lens, max_news)]
+
+
+def _truth(cfg, folded, lens, max_news, seed=0, **kw):
+    """Unlimited-pool reference: same engine, default (ample) n_pages."""
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
+                 cache_layout="paged", page_size=4, **kw)
+    out = eng.generate(_requests(cfg, lens, max_news, seed=seed))
+    assert eng.counters["preemptions"] == 0      # really unlimited
+    return [r.out.tolist() for r in out]
+
+
+def _drive(eng, requests, max_ticks=3000):
+    """Submit everything, step to completion under a tick cap (a cap-hit
+    is a livelock — exactly what the starvation guard must rule out),
+    asserting the stats invariants + allocator sweep every tick."""
+    for r in requests:
+        eng.submit(r)
+    ticks = 0
+    while eng.sched.has_work:
+        assert ticks < max_ticks, "engine livelocked under preemption"
+        ticks += 1
+        eng.step()
+        g = eng.stats(check=True)                # + allocator sweep
+        assert g["decode_slots_active"] + g["prefill_slots"] \
+            + g["free_slots"] == eng.batch
+        assert g["pages_in_use"] + g["pages_free"] + g["pages_cached_lru"] \
+            == g["pages_capacity"]
+    return requests
+
+
+def test_mid_decode_victim_token_identical(folded_cfg):
+    """Two decode-heavy requests whose combined page demand overflows the
+    pool: growth must spill the younger decoder and replay it to the exact
+    same greedy tokens the unlimited pool produces."""
+    cfg, folded = folded_cfg
+    lens, max_news = [4, 4], [12, 12]            # worst 4 pages each
+    truth = _truth(cfg, folded, lens, max_news)
+
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
+                 cache_layout="paged", page_size=4, n_pages=6)  # 5 < 4+4
+    out = _drive(eng, _requests(cfg, lens, max_news))
+    assert [r.out.tolist() for r in out] == truth
+    c = eng.counters
+    assert c["preemptions"] >= 1 and c["preempted_decode"] >= 1
+    assert c["restores"] == c["preemptions"]     # every victim came back
+    assert c["grown_pages"] >= 2                 # decode really grew pages
+    assert c["spilled_rows"] > 0                 # victims held real rows
+    assert eng.alloc.live == 0
+
+
+def test_mid_prefill_victim_token_identical(folded_cfg):
+    """A long prompt mid-chunked-prefill is the first-choice victim when an
+    older decoder needs a page: spill at the chunk boundary, requeue, and
+    replay through the ordinary chunk-continuation path — token identity
+    against the unlimited pool."""
+    cfg, folded = folded_cfg
+    # the long prompt's 6 prompt pages fill the pool at admission, so the
+    # older slots' FIRST decode growth already lands while it chunks
+    lens, max_news = [4, 4, 24], [12, 12, 4]
+    truth = _truth(cfg, folded, lens, max_news, max_prefill_chunk=4)
+
+    eng = Engine(cfg, folded, batch_slots=3, max_len=64,
+                 cache_layout="paged", page_size=4, n_pages=9,
+                 max_prefill_chunk=4)            # capacity 8 < 4+4+7
+    out = _drive(eng, _requests(cfg, lens, max_news))
+    assert [r.out.tolist() for r in out] == truth
+    c = eng.counters
+    assert c["preempted_prefill"] >= 1           # the chunking slot spilled
+    assert c["restores"] == c["preemptions"] >= 1
+    assert c["completed"] == 3 and eng.alloc.live == 0
+
+
+def test_restore_hits_prefix_registry(folded_cfg):
+    """Spill registers the victim's finished pages; a prompt re-admission
+    before allocation pressure reclaims them replays only the lost tail.
+    Pool sized so the grower stops growing right after the spill: the
+    victim's LRU pages survive and most spilled rows come back as a
+    prefix hit instead of recompute."""
+    cfg, folded = folded_cfg
+    lens, max_news = [4, 12], [8, 4]
+    truth = _truth(cfg, folded, lens, max_news, max_prefill_chunk=4)
+
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
+                 cache_layout="paged", page_size=4, n_pages=7,
+                 max_prefill_chunk=4)            # capacity 6 < 3+4
+    out = _drive(eng, _requests(cfg, lens, max_news))
+    assert [r.out.tolist() for r in out] == truth
+    c = eng.counters
+    assert c["preempted_decode"] >= 1
+    assert c["spilled_rows"] > 0
+    # the registry gave most of the spill back: only the partial page past
+    # the boundary was recomputed
+    assert 0 < c["recomputed_tokens"] < c["spilled_rows"]
+    assert c["prefix_hits"] >= 1                 # restore-as-cache-hit
+    assert eng.alloc.live == 0
+
+
+def test_sustained_overload_every_request_finishes(folded_cfg):
+    """Starvation guard: a queue several times the pool's worst-case
+    capacity must drain completely — preemption recycles pages but
+    requeue-at-front + head-of-line victim immunity keep every request
+    progressing to completion with its full decode budget."""
+    cfg, folded = folded_cfg
+    n = 8
+    lens, max_news = [4] * n, [8] * n            # worst 3 pages each
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
+                 cache_layout="paged", page_size=4, n_pages=6)  # capacity 5
+    out = _drive(eng, _requests(cfg, lens, max_news))
+    assert eng.counters["completed"] == n
+    assert all(r.out is not None and len(r.out) == 8 for r in out)
+    assert eng.counters["preemptions"] >= 1      # it really was overload
+    assert eng.alloc.live == 0 and len(eng.sched.waiting) == 0
+
+
+def test_full_reservation_policy_never_preempts(folded_cfg):
+    """reserve_policy="full" keeps the PR-2 contract under the same
+    overload: admission waits, decode never grows, nothing is spilled."""
+    cfg, folded = folded_cfg
+    lens, max_news = [4, 4, 4], [12, 12, 12]
+    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
+                 cache_layout="paged", page_size=4, n_pages=6,
+                 reserve_policy="full")
+    out = _drive(eng, _requests(cfg, lens, max_news))
+    c = eng.counters
+    assert c["completed"] == 3
+    assert c["preemptions"] == 0 and c["grown_pages"] == 0
+    assert c["pool_wait_ticks"] > 0              # overload stalled admission
+    assert all(len(r.out) == 12 for r in out)
