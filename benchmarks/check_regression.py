@@ -1,0 +1,125 @@
+"""Bench regression gate: compare freshly produced BENCH_*.json artifacts
+against the committed baselines in ``benchmarks/baselines/``.
+
+The bench scripts already exit non-zero on token divergence; this gate adds
+the two checks they don't make:
+
+  * every ``outputs_match`` flag anywhere in the current artifact must be
+    truthy (a bench that tolerated a mismatch — e.g. on the pallas backend
+    — still fails the gate, which only ever runs on the CPU lanes where
+    bit-identity is the contract);
+  * every throughput metric (keys named ``tok_per_s`` / ``*_tok_per_s``,
+    at any nesting depth) present in BOTH the current artifact and its
+    baseline must not drop more than ``--max-drop`` (default 25%).
+
+Speedup-ratio and latency keys are deliberately NOT gated: on 2-core CI
+runners wall-clock percentiles are too noisy (they remain in the artifacts
+for the perf trajectory); aggregate tok/s over a whole smoke run is the
+stable end of the measurement.
+
+    python benchmarks/check_regression.py BENCH_PR.json BENCH_PREFIX.json
+    python benchmarks/check_regression.py BENCH_TP.json --max-drop 0.4
+
+A missing baseline is an ERROR, not a skip — when a new bench artifact is
+added, run it once with ``--smoke`` and commit the JSON under
+``benchmarks/baselines/`` in the same PR, so the gate can never silently
+stop gating.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+
+
+def walk_metrics(obj, path=""):
+    """Yield (dotted_path, key, value) for every dict entry, depth-first."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            sub = f"{path}.{k}" if path else str(k)
+            yield sub, k, v
+            yield from walk_metrics(v, sub)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from walk_metrics(v, f"{path}[{i}]")
+
+
+def tok_per_s_metrics(doc):
+    return {p: float(v) for p, k, v in walk_metrics(doc)
+            if (k == "tok_per_s" or k.endswith("_tok_per_s"))
+            and isinstance(v, (int, float))}
+
+
+def divergence_flags(doc):
+    return {p: bool(v) for p, k, v in walk_metrics(doc)
+            if k == "outputs_match"}
+
+
+def check_artifact(cur_path: Path, baseline_dir: Path, max_drop: float):
+    failures = []
+    cur = json.loads(cur_path.read_text())
+    for p, ok in sorted(divergence_flags(cur).items()):
+        status = "ok" if ok else "DIVERGED"
+        print(f"{cur_path.name}: flag {p} = {ok} [{status}]")
+        if not ok:
+            failures.append(f"{cur_path.name}: divergence flag {p} is set")
+    base_path = baseline_dir / cur_path.name
+    if not base_path.exists():
+        failures.append(
+            f"{cur_path.name}: no committed baseline at {base_path} — run "
+            f"the bench with --smoke and commit its JSON there")
+        return failures
+    base = json.loads(base_path.read_text())
+    cur_m, base_m = tok_per_s_metrics(cur), tok_per_s_metrics(base)
+    for p in sorted(cur_m.keys() & base_m.keys()):
+        b, c = base_m[p], cur_m[p]
+        if b <= 0:
+            continue
+        ratio = c / b
+        status = "ok" if ratio >= 1.0 - max_drop else "REGRESSED"
+        print(f"{cur_path.name}: {p}: base={b:.2f} cur={c:.2f} "
+              f"ratio={ratio:.3f} [{status}]")
+        if status == "REGRESSED":
+            failures.append(
+                f"{cur_path.name}: {p} dropped {(1 - ratio) * 100:.1f}% "
+                f"(> {max_drop * 100:.0f}% allowed)")
+    only_base = base_m.keys() - cur_m.keys()
+    if only_base:
+        # a vanished metric is a silently-stopped measurement, not a pass
+        failures.append(f"{cur_path.name}: baseline metrics missing from "
+                        f"current run: {sorted(only_base)}")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+", type=Path,
+                    help="freshly produced BENCH_*.json files")
+    ap.add_argument("--baselines", type=Path, default=BASELINE_DIR,
+                    help="directory of committed baseline JSONs "
+                         "(matched by filename)")
+    ap.add_argument("--max-drop", type=float, default=0.25,
+                    help="max allowed fractional tok/s drop vs baseline")
+    args = ap.parse_args(argv)
+    failures = []
+    for art in args.artifacts:
+        if not art.exists():
+            failures.append(f"{art}: artifact not found (did its bench run?)")
+            continue
+        failures.extend(check_artifact(art, args.baselines, args.max_drop))
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"\nbench regression gate passed "
+          f"({len(args.artifacts)} artifact(s), max drop "
+          f"{args.max_drop * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,14 @@ Workloads (``--workload``):
     greedy outputs diverge from the unlimited pool's, or if the sized
     pool failed to force at least one spill.
 
+``--tp N`` (any workload flag ignored; Poisson shape) runs the
+tensor-parallel A/B instead: the paged engine unsharded vs sharded over an
+N-way model mesh (KV-head-sharded page pool, replicated block tables).
+Divergence always exits non-zero — the sharded forward reassembles int8
+head contexts, so it is bit-exact on every backend.  CI runs it in the
+test-tp lane under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(artifact BENCH_TP.json).
+
 Engines/layouts (``--layout``, poisson/prefix workloads):
 
   * ``contiguous`` — lockstep baseline vs the continuous engine on the dense
@@ -308,6 +316,71 @@ def bench_chunked(args, cfg, folded, Request):
     return 0
 
 
+def bench_tp(args, cfg, folded, Request):
+    """--tp N: sharded-vs-unsharded A/B on the paged engine — same Poisson
+    workload, the pool sharded over KV heads on an N-way model mesh (on
+    CPU: XLA_FLAGS=--xla_force_host_platform_device_count=N).  Sharding
+    must change memory layout only, never greedy tokens; exits non-zero on
+    divergence on any backend (the sharded forward all-gathers int8 head
+    contexts, which is bit-exact even where prefill kernels are not)."""
+    from repro.serve.engine import Engine
+
+    if len(jax.devices()) < args.tp:
+        print(f"ERROR: --tp {args.tp} needs {args.tp} devices, found "
+              f"{len(jax.devices())}; on CPU set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={args.tp}",
+              file=sys.stderr)
+        return 1
+    r_arrival, _, _ = _rng_streams(args.seed)
+    lengths = [int(x) for x in args.lengths.split(",")]
+    work = make_workload(r_arrival, args.requests, lengths, args.rate,
+                         (args.max_new_lo, args.max_new_hi))
+    max_len = max(lengths) + args.max_new_hi + 1
+
+    def fresh():
+        _, r_prompt, _ = _rng_streams(args.seed)
+        return build_requests(Request, r_prompt, work, cfg.vocab_size)
+
+    n_tok = sum(w["max_new"] for w in work)
+    rows, outs = [], {}
+    artifact = dict(
+        bench="serve_tp", workload="poisson", arch=cfg.name, tp=args.tp,
+        slots=args.slots, requests=args.requests, lengths=lengths,
+        page_size=args.page_size, seed=args.seed)
+
+    for name, kw in [("unsharded", {}), (f"tp{args.tp}", dict(tp=args.tp))]:
+        eng = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
+                     cache_layout="paged", page_size=args.page_size, **kw)
+        lat = {}
+        out, secs = _timed(run_continuous, eng, fresh, work, lat=lat)
+        outs[name] = [r.out.tolist() for r in out]
+        summ = latency_summary(work, lat)
+        tps = n_tok / secs
+        rows.append((f"serve/{name}_tok_per_s", tps, f"wall={secs:.2f}s"))
+        rows.append((f"serve/{name}_ttft_p95_ms",
+                     summ.get("ttft_all_p95_ms", 0.0),
+                     f"itl_p95={summ['itl_p95_ms']}"))
+        artifact[name] = dict(tok_per_s=round(tps, 2), **summ,
+                              engine_counters=eng.counters)
+
+    un, sh = outs["unsharded"], outs[f"tp{args.tp}"]
+    match = un == sh
+    rows.append(("serve/outputs_match", float(match),
+                 f"unsharded+tp{args.tp}"))
+    artifact.update(outputs_match=bool(match))
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
+    if not match:
+        print(f"ERROR: greedy outputs diverged between the unsharded and "
+              f"TP={args.tp} engines", file=sys.stderr)
+        return 1
+    return 0
+
+
 def bench_overload(args, cfg, folded, Request):
     """overload workload: on-demand growth + preemption vs full
     reservation on the same starved pool, plus an unlimited-pool truth
@@ -423,6 +496,8 @@ def bench(args):
     calib = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
     folded = calibrated_folded(cfg, key, calib)
 
+    if args.tp:
+        return bench_tp(args, cfg, folded, Request)
     if args.workload == "longprompt":
         return bench_chunked(args, cfg, folded, Request)
     if args.workload == "overload":
@@ -575,6 +650,11 @@ def main():
                     help="per-tick token budget of the chunked run")
     ap.add_argument("--max-prefill-chunk", type=int, default=32,
                     help="per-slot prefill chunk cap of the chunked run")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="run the sharded-vs-unsharded TP A/B at this "
+                         "model-parallel degree (needs that many devices; "
+                         "CPU: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--seed", type=int, default=0,
                     help="single seed for arrivals, prompts, and prefix")
     ap.add_argument("--json", default=None,

@@ -140,6 +140,11 @@ def paged_decode_attention_q(
     (B, Hkv, G, D) int8 context.  ref backend = the block-online oracle
     (kernel-exact accumulation order); pallas = the scalar-prefetch paged
     kernel, bit-exact vs. the oracle for any page count.
+
+    Under tensor parallelism the caller passes the rank-LOCAL head slice
+    (q and pool Hkv axes both divided by tp) with the scalar-prefetched
+    block table replicated — neither backend distinguishes a local slice
+    from a small model, so no TP branch exists at this layer.
     """
     b = backend(impl)
     if b == "ref":
@@ -165,7 +170,10 @@ def paged_prefill_attention_q(
     (kernel-exact accumulation order); pallas = the block-table-walking
     flash kernel, bit-exact vs. the oracle for any page count and q-block
     size.  The chunk's own K/V rows must already be scattered into the
-    pool."""
+    pool.  Under tensor parallelism the caller passes the rank-local head
+    slice with the block table replicated (see paged_decode_attention_q);
+    the chunk is the cross-rank work-division unit — every rank walks the
+    same chunk over its own heads."""
     b = backend(impl)
     if b == "ref":
         return _ref.paged_prefill_qattention_ref(

@@ -11,6 +11,8 @@ state — the dry-run sets XLA_FLAGS before first jax init.
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,3 +25,17 @@ def make_host_mesh(model: int = 1):
     """Whatever-fits mesh for CPU tests: (1, n_devices//model, model)."""
     n = len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_tp_mesh(model: int = 1):
+    """1-D ('model',) mesh over the first ``model`` devices — the serving
+    engine's tensor-parallel axis for the sharded paged KV pool.  Unlike
+    ``make_host_mesh`` it does not require the total device count to divide:
+    a TP=4 engine on an 8-device host takes devices [0, 4).  On CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` simulates the
+    devices — the recipe the test-tp CI lane runs under."""
+    devs = jax.devices()
+    assert 1 <= model <= len(devs), \
+        f"TP={model} needs {model} devices, found {len(devs)} " \
+        "(on CPU set XLA_FLAGS=--xla_force_host_platform_device_count)"
+    return Mesh(np.asarray(devs[:model]), ("model",))

@@ -272,7 +272,17 @@ def _attn_decode(x_i8, f, cfg, cache, pos_offset):
     return out, {"k": k_cache, "v": v_cache}
 
 
-def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables):
+def _tp_slice(x, tp_axis, nloc, axis):
+    """This rank's contiguous block of ``nloc`` heads along ``axis`` (only
+    meaningful inside a shard_map over ``tp_axis``).  Q heads slice in the
+    same contiguous blocks as KV heads, so GQA group structure — q head h
+    reads kv head h // group — is preserved rank-locally."""
+    r = jax.lax.axis_index(tp_axis)
+    return jax.lax.dynamic_slice_in_dim(x, r * nloc, nloc, axis)
+
+
+def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables,
+                       tp_axis=None):
     """Paged decode step: x (B,1,d); cache {'k','v'}: (n_pages, P, Hkv, hd)
     int8 global page pool; ``block_tables`` (B, max_blocks) int32 maps each
     slot's logical KV blocks onto pool pages.
@@ -284,25 +294,43 @@ def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables):
     the slot owns exclusively (refcount 1): shared prefix pages end strictly
     before the first written position (scheduler COW discipline).  Inactive
     slots (zeroed table rows) scatter into the reserved trash page 0.
+
+    Under tensor parallelism (``tp_axis`` set, running inside a shard_map
+    over that mesh axis) the pool's Hkv axis is the per-rank LOCAL slice;
+    the block table stays replicated and page ids are global, so this same
+    scatter/gather code addresses the rank's slice of the same pages every
+    other rank touches.  Q/K/V are sliced to the rank's contiguous head
+    block after the (replicated) projections, attention runs on local heads
+    only, and the int8 context is all-gathered back to full heads before
+    the output projection — a pure reassembly of independently-computed
+    heads, so sharded decode is bit-identical to unsharded decode.
     """
     b, s, d = x_i8.shape
     assert not cfg.sliding_window, \
         "paged cache serves full-attention archs; SWA keeps the ring buffer"
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     psize = cache["k"].shape[1]
+    nkv_loc = cache["k"].shape[2]                         # Hkv / tp
     pos_vec = _pos_vector(pos_offset, b)                  # (B,) int32
     qc, kc, vc = _decode_qkv(x_i8, f, cfg, pos_vec)
     aq = f["attn_q"]
     assert s == 1
-    # write-through-table: one (Hkv, hd) row per slot into its own page
+    group = nh // nkv
+    if tp_axis is not None:
+        nh_loc = group * nkv_loc
+        qc = _tp_slice(qc, tp_axis, nh_loc, 2)
+        kc = _tp_slice(kc, tp_axis, nkv_loc, 2)
+        vc = _tp_slice(vc, tp_axis, nkv_loc, 2)
+    else:
+        assert nkv_loc == nkv, (nkv_loc, nkv)
+    # write-through-table: one (Hkv_loc, hd) row per slot into its own page
     pg = jnp.take_along_axis(block_tables, (pos_vec // psize)[:, None],
                              axis=1)[:, 0]                # (B,) page ids
     row = pos_vec % psize
     k_pool = cache["k"].at[pg, row].set(kc[:, 0])
     v_pool = cache["v"].at[pg, row].set(vc[:, 0])
     lengths = pos_vec + 1
-    group = nh // nkv
-    qg = qc.reshape(b, nkv, group, hd)                    # (B,kv,g,hd) int8
+    qg = qc.reshape(b, nkv_loc, group, hd)                # (B,kv,g,hd) int8
     if ops.backend() == "pallas":
         from repro.kernels.decode_attention import paged_decode_qattention
         ctx = paged_decode_qattention(
@@ -310,12 +338,16 @@ def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables):
             aq["M_idx"], aq["sh_idx"], _lut_q7(),
             aq["inv_s_logit"], aq["out_scale"])           # (B,kv,g,hd) int8
     else:
-        # gathered per-slot view (B, max_blocks*P, Hkv, hd); masking makes
-        # the result bit-identical to the contiguous layout
-        kv_shape = (b, -1, nkv, hd)
+        # gathered per-slot view (B, max_blocks*P, Hkv_loc, hd); masking
+        # makes the result bit-identical to the contiguous layout
+        kv_shape = (b, -1, nkv_loc, hd)
         k_view = jnp.take(k_pool, block_tables, axis=0).reshape(kv_shape)
         v_view = jnp.take(v_pool, block_tables, axis=0).reshape(kv_shape)
         ctx = _gqa_decode_jnp(qg, k_view, v_view, lengths, aq)
+    if tp_axis is not None:
+        # reassemble full heads (rank order == head order): int8 values
+        # move, nothing is recomputed or re-rounded
+        ctx = jax.lax.all_gather(ctx, tp_axis, axis=1, tiled=True)
     ctx = ctx.reshape(b, nh, s, hd)                       # == (B,H,1,hd)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
     out = _lin(ctx, f["wo"], cfg.quant.w_bits)
@@ -323,7 +355,7 @@ def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables):
 
 
 def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
-                        row_exact):
+                        row_exact, tp_axis=None):
     """Chunk prefill through the block table: queries at absolute positions
     [pos0, pos0+S) write their K/V rows into the slot's pages and attend
     over the slot's WHOLE mapped chain — shared prefix pages and earlier
@@ -339,19 +371,35 @@ def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
     straight from the page pool instead of gathering a contiguous view
     (self-consistent q7 family, like _attn_prefill).  Pad rows and
     trash-page rows sit at kpos > every real query and are causally
-    masked."""
+    masked.
+
+    Under tensor parallelism (``tp_axis`` set) the chunk is the cross-rank
+    work-division unit: every rank runs the SAME chunk on its own head
+    slice of the pool (Hkv axis local, page ids global, block table
+    replicated), then the int8 context all-gathers back to full heads for
+    the output projection — same reassembly argument as
+    ``_attn_decode_paged``, so sharded chunk prefill is bit-identical to
+    unsharded on the row-exact path."""
     b, s, d = x_i8.shape
     wb = cfg.quant.w_bits
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     psize = cache["k"].shape[1]
+    nkv_loc = cache["k"].shape[2]                         # Hkv / tp
     qc, kc, vc = _qkv_rope(x_i8, f, cfg, pos)
     aq = f["attn_q"]
+    if tp_axis is not None:
+        nh_loc = (nh // nkv) * nkv_loc
+        qc = _tp_slice(qc, tp_axis, nh_loc, 2)
+        kc = _tp_slice(kc, tp_axis, nkv_loc, 2)
+        vc = _tp_slice(vc, tp_axis, nkv_loc, 2)
+    else:
+        assert nkv_loc == nkv, (nkv_loc, nkv)
     nb_s = s // psize
     btab_slice = jax.lax.dynamic_slice_in_dim(block_tables, pos0 // psize,
                                               nb_s, axis=1)
     ncache = _paged_prefill_write(cache, kc, vc, btab_slice)
     if row_exact:
-        kv_shape = (b, -1, nkv, hd)
+        kv_shape = (b, -1, nkv_loc, hd)
         k_view = jnp.take(ncache["k"], block_tables, axis=0).reshape(kv_shape)
         v_view = jnp.take(ncache["v"], block_tables, axis=0).reshape(kv_shape)
         rows = k_view.shape[1]
@@ -365,6 +413,8 @@ def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
             qc.transpose(0, 2, 1, 3), ncache["k"], ncache["v"],
             block_tables, pos0_vec, aq["M_idx"], aq["sh_idx"], _lut_q7(),
             aq["inv_s_logit"], aq["out_scale"])           # (B,H,S,hd) int8
+    if tp_axis is not None:
+        ctx = jax.lax.all_gather(ctx, tp_axis, axis=1, tiled=True)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
     out = _lin(ctx, f["wo"], wb)
     return out, ncache
@@ -609,6 +659,7 @@ def serve_forward(
     block_tables: Optional[jax.Array] = None,
     extra_embeds_i8: Optional[jax.Array] = None,
     pos3: Optional[jax.Array] = None,
+    tp_axis: Optional[str] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Integer forward.
 
@@ -626,8 +677,18 @@ def serve_forward(
     paged pool (``init_paged_cache``): both the prefill scatter and the
     decode read/write then indirect through each slot's block-table row
     inside the depth scan instead of addressing a contiguous Smax stripe.
+
+    ``tp_axis`` names the mesh axis of a tensor-parallel shard_map this
+    forward is running inside (paged layouts only): the pool's Hkv axis is
+    then the per-rank local slice, attention runs on the rank's contiguous
+    head block, and contexts all-gather back to full heads before the
+    output projection.  Everything outside attention is replicated compute
+    on replicated data, so the returned logits are replicated and the whole
+    sharded forward stays bit-identical to the unsharded one.
     """
     kinds = slot_kinds(cfg)
+    assert tp_axis is None or block_tables is not None, \
+        "tensor parallelism serves the paged cache layout only"
     x = _embed_int(cfg, folded, tokens)
     if extra_embeds_i8 is not None:
         x = jnp.concatenate([extra_embeds_i8, x], axis=1)
@@ -661,7 +722,8 @@ def serve_forward(
                 if mode == "decode":
                     if block_tables is not None:
                         out, nc = _attn_decode_paged(x_i8, f, cfg, cslot,
-                                                     pos_offset, block_tables)
+                                                     pos_offset, block_tables,
+                                                     tp_axis=tp_axis)
                     else:
                         out, nc = _attn_decode(x_i8, f, cfg, cslot, pos_offset)
                 else:
@@ -675,7 +737,7 @@ def serve_forward(
                         # and read through the block table
                         out, nc = _attn_prefill_paged(
                             x_i8, f, cfg, cslot, pos, block_tables, pos0,
-                            row_exact)
+                            row_exact, tp_axis=tp_axis)
                     else:
                         out, kc, vc = _attn_prefill(x_i8, f, cfg, pos,
                                                     row_exact=row_exact)

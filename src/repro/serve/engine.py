@@ -50,6 +50,20 @@ Cache layouts (``cache_layout=``):
 * ``"auto"`` (default) — paged when the arch supports it (all-attention,
   no sliding window), else contiguous.
 
+Tensor parallelism (``tp=N`` or an explicit ``mesh``, paged layout only):
+the page pool shards over its KV-head axis — every rank holds its heads'
+slice of EVERY page, so page ids are global, block tables replicate, and
+the host-side allocator/scheduler stays a single authority whose
+admission/grow/preempt/spill decisions bind all ranks at once
+(spill/restore never moves data across ranks; registration and replay are
+rank-local).  Decode and prefill-chunk forwards run under one shard_map:
+heads split per rank, chunks are the cross-rank work-division unit for
+prefill, and contexts all-gather before the output projection, so sharded
+greedy outputs are bit-identical to the unsharded engine on the
+ref/interpret backends.  On CPU, simulate ranks with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the test-tp CI
+lane's recipe).
+
 ``LockstepEngine`` — the original batch demo (kept as the benchmark baseline
 and for SSM/audio archs): lockstep decoding with one shared position scalar,
 prefill replayed token-by-token for the whole batch, admission only between
@@ -90,7 +104,7 @@ def supports_continuous(cfg: ModelConfig) -> bool:
 
 _CONTINUOUS_ONLY_KW = ("prefill_bucket", "cache_layout", "page_size",
                        "n_pages", "max_batched_tokens", "max_prefill_chunk",
-                       "reserve_policy")
+                       "reserve_policy", "tp", "mesh")
 
 
 def make_engine(cfg: ModelConfig, folded, **kw):
@@ -118,7 +132,8 @@ class Engine:
                  n_pages: Optional[int] = None,
                  max_batched_tokens: Optional[int] = None,
                  max_prefill_chunk: Optional[int] = None,
-                 reserve_policy: Optional[str] = None):
+                 reserve_policy: Optional[str] = None,
+                 tp: int = 1, mesh=None):
         assert supports_continuous(cfg), \
             "continuous engine serves token-LM archs; use LockstepEngine"
         self.cfg = cfg
@@ -130,10 +145,12 @@ class Engine:
         # one-shot prefill needs every mixer to be cache-writing attention
         self._attn_only = cfg.causal and \
             all(m == "attn" for m, _ in slot_kinds(cfg))
-        # the page pool has no batch axis and no sharding annotations yet
-        # (TP-sharded pool is a ROADMAP follow-on): under an active mesh the
-        # contiguous layout keeps its SPMD constrain guards, so auto falls
-        # back and an explicit "paged" is refused rather than silently slow
+        # the paged pool ignores the ACTIVATION-constraint mesh context
+        # (that ctx drives the contiguous layout's SPMD constrain guards):
+        # under an active ctx auto falls back to contiguous and an explicit
+        # "paged" is refused rather than silently slow.  Tensor parallelism
+        # for the paged pool goes through the engine-level ``tp``/``mesh``
+        # kwargs instead (shard_map over the pool's Hkv axis, below).
         from repro.sharding import partition as Pt
         pageable = self._attn_only and not cfg.sliding_window \
             and Pt.get_mesh_ctx() is None
@@ -167,21 +184,61 @@ class Engine:
             self.n_pages = n_pages if n_pages is not None else \
                 batch_slots * self.max_blocks + 1
             assert self.n_pages >= 2
+        # --- tensor parallelism (paged pool sharded over KV heads) -------
+        # Every rank holds its heads' slice of EVERY page: page ids stay
+        # global, the block tables replicated, and the host-side
+        # allocator/scheduler a single authority whose grow/preempt/spill
+        # decisions apply to all ranks' slices at once.  tp=1 with an
+        # explicit 1-device mesh runs the same shard_map path degenerately
+        # (the no-simulation CI fallback).
+        if mesh is None and tp != 1:
+            from repro.launch.mesh import make_tp_mesh
+            mesh = make_tp_mesh(tp)
+        self.mesh = mesh
+        if mesh is not None:
+            assert self.layout == "paged", \
+                "tensor parallelism shards the paged KV pool; the " \
+                "contiguous layout has no TP path"
+            assert "model" in mesh.axis_names, mesh.axis_names
+            self.tp = int(mesh.shape["model"])
+            assert tp in (1, self.tp), (tp, self.tp)
+            assert cfg.n_kv_heads % self.tp == 0, \
+                f"TP={self.tp} must divide n_kv_heads={cfg.n_kv_heads} " \
+                "(each rank owns a whole slice of KV heads)"
+        else:
+            self.tp = 1
         self._init_state(seed)
 
         if self.layout == "paged":
+            tp_axis = "model" if self.mesh is not None else None
+
             def decode_step(folded_, cache, tok, pos, btab):
                 return S.serve_forward(cfg, folded_, tok, cache=cache,
                                        pos_offset=pos, mode="decode",
-                                       block_tables=btab)
-
-            self._decode = jax.jit(decode_step, donate_argnums=(1,))
+                                       block_tables=btab, tp_axis=tp_axis)
 
             def prefill(folded_, cache, toks, btab, pos0):
                 return S.serve_forward(cfg, folded_, toks, cache=cache,
                                        pos_offset=pos0, mode="prefill",
-                                       block_tables=btab)
+                                       block_tables=btab, tp_axis=tp_axis)
 
+            if self.mesh is not None:
+                # one shard_map around the whole forward: the pool enters
+                # as the rank-local Hkv slice; tokens, positions, and the
+                # block table replicate; logits come back replicated (the
+                # forward all-gathers heads before the output projection)
+                from jax.sharding import PartitionSpec as P
+                from repro.sharding import partition as Pt
+                pool, rep = Pt.kv_pool_pspec(), P()
+                decode_step = Pt.shard_map_compat(
+                    decode_step, self.mesh,
+                    in_specs=(rep, pool, rep, rep, rep),
+                    out_specs=(rep, pool))
+                prefill = Pt.shard_map_compat(
+                    prefill, self.mesh,
+                    in_specs=(rep, pool, rep, rep, rep),
+                    out_specs=(rep, pool))
+            self._decode = jax.jit(decode_step, donate_argnums=(1,))
             # the chunk forward: writes straight through the block table
             # into the (donated) pool at page-aligned ``pos0`` and attends
             # over the slot's whole mapped chain; one compiled shape per
@@ -241,6 +298,12 @@ class Engine:
                                    reserve=self.reserve_policy)
             self.cache = S.init_paged_cache(self.cfg, self.n_pages,
                                             self.page_size)
+            if self.mesh is not None:
+                # lay the pool out sharded before the first donated step so
+                # every forward reuses the same per-rank Hkv-slice buffers
+                from repro.sharding import partition as Pt
+                self.cache = jax.device_put(
+                    self.cache, Pt.paged_pool_shardings(self.mesh, self.cache))
             self.block_tables = np.zeros((self.batch, self.max_blocks),
                                          np.int32)
         else:
@@ -284,7 +347,8 @@ class Engine:
             g.update(pages_in_use=al.live,
                      pages_free=al.free_list_pages,
                      pages_cached_lru=al.lru_pages,
-                     pages_capacity=al.capacity)
+                     pages_capacity=al.capacity,
+                     tp=self.tp)
         g["counters"] = dict(self.counters)
         return g
 

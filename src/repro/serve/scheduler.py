@@ -33,6 +33,18 @@ engine resolves that by preempting a victim (``pick_victim`` +
 written pages in the prefix registry before dropping its references, so a
 restore that re-admits before allocation pressure reclaims them turns the
 lost work back into a prefix-cache hit and replays only the tail.
+
+Tensor parallelism does not appear in this module by design: the engine
+shards the pool over KV heads, never over pages, so a page id names the
+same logical page on every rank and ONE allocator/scheduler instance on
+the host is the single authority for all of them.  Every decision here —
+admission reservations, ``grow`` grants, victim choice, spill
+registration, LRU reclaim — is a pure function of tokens, page ids, and
+refcounts (all rank-agnostic), which is the invariant that makes a
+sharded engine's scheduling trace, counters, and greedy tokens
+bit-identical to the unsharded engine's.  Spill/restore consequently
+never moves cache data across ranks: registration records page ids +
+tokens, and replay recomputes each rank's own head slice locally.
 """
 from __future__ import annotations
 
