@@ -4,13 +4,16 @@ against the committed baselines in ``benchmarks/baselines/``.
 The bench scripts already exit non-zero on token divergence; this gate adds
 the two checks they don't make:
 
-  * every ``outputs_match`` flag anywhere in the current artifact must be
-    truthy (a bench that tolerated a mismatch — e.g. on the pallas backend
-    — still fails the gate, which only ever runs on the CPU lanes where
-    bit-identity is the contract);
+  * every ``outputs_match`` / ``slo_ok`` flag anywhere in the current
+    artifact must be truthy (a bench that tolerated a mismatch — e.g. on
+    the pallas backend — still fails the gate, which only ever runs on the
+    CPU lanes where bit-identity is the contract);
   * every throughput metric (keys named ``tok_per_s`` / ``*_tok_per_s``,
     at any nesting depth) present in BOTH the current artifact and its
-    baseline must not drop more than ``--max-drop`` (default 25%).
+    baseline must not drop more than ``--max-drop`` (default 25%);
+  * every ``engine_counters`` / ``router_counters`` dict in the CURRENT
+    artifact must match the frozen stats schema exactly (baselines are
+    exempt: they may predate schema growth, but nothing fresh may drift).
 
 Speedup-ratio and latency keys are deliberately NOT gated: on 2-core CI
 runners wall-clock percentiles are too noisy (they remain in the artifacts
@@ -33,6 +36,9 @@ import sys
 from pathlib import Path
 
 BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+GATED_FLAGS = ("outputs_match", "slo_ok")
 
 
 def walk_metrics(obj, path=""):
@@ -55,7 +61,26 @@ def tok_per_s_metrics(doc):
 
 def divergence_flags(doc):
     return {p: bool(v) for p, k, v in walk_metrics(doc)
-            if k == "outputs_match"}
+            if k in GATED_FLAGS}
+
+
+def counter_schema_errors(doc):
+    """Validate every engine_counters/router_counters dict in ``doc``
+    against the frozen stats schema (exact key sets, versioned in
+    ``repro.serve.stats``)."""
+    from repro.serve import stats as SS
+    errs = []
+    for p, k, v in walk_metrics(doc):
+        if not isinstance(v, dict):
+            continue
+        try:
+            if k == "engine_counters":
+                SS.validate_counters(v)
+            elif k == "router_counters":
+                SS.validate_router_counters(v)
+        except ValueError as e:
+            errs.append(f"{p}: {e}")
+    return errs
 
 
 def check_artifact(cur_path: Path, baseline_dir: Path, max_drop: float):
@@ -66,6 +91,8 @@ def check_artifact(cur_path: Path, baseline_dir: Path, max_drop: float):
         print(f"{cur_path.name}: flag {p} = {ok} [{status}]")
         if not ok:
             failures.append(f"{cur_path.name}: divergence flag {p} is set")
+    for err in counter_schema_errors(cur):
+        failures.append(f"{cur_path.name}: stats schema: {err}")
     base_path = baseline_dir / cur_path.name
     if not base_path.exists():
         failures.append(

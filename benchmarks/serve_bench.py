@@ -127,6 +127,37 @@ def make_longprompt_workload(rng, n_long, long_len, n_short, lengths, rate,
     return sorted(longs + shorts, key=lambda w: w["arrival"])
 
 
+def make_bursty_workload(rng, n_requests, lengths, rate, max_new_range, *,
+                         burst=4, prefix_len=0, prefix_frac=0.5,
+                         cancel_frac=0.25):
+    """Bursty chat traffic for the serving stack: arrivals land in bursts
+    of ``burst`` requests on one tick (exponential gaps between bursts,
+    mean ``burst/rate`` so the long-run rate matches the Poisson
+    workloads), a ``prefix_frac`` share are prefix-heavy chat turns
+    sharing one system prompt, and ``cancel_frac`` of requests carry a
+    ``cancel_after`` token count after which the client cancels the
+    stream mid-decode."""
+    t = 0.0
+    work = []
+    while len(work) < n_requests:
+        t += rng.exponential(burst / rate)
+        for _ in range(min(burst, n_requests - len(work))):
+            chat = prefix_len > 0 and rng.random() < prefix_frac
+            mn = int(rng.integers(*max_new_range))
+            cancel_after = (int(rng.integers(1, max(2, mn)))
+                            if rng.random() < cancel_frac else None)
+            work.append(dict(
+                arrival=t,
+                prompt_len=(prefix_len if chat else 0)
+                + int(rng.choice(lengths)),
+                max_new=mn,
+                cls="chat" if chat else "plain",
+                chat=chat,
+                cancel_after=cancel_after,
+            ))
+    return work
+
+
 def build_requests(Request, rng, work, vocab, prefix=None):
     reqs = []
     for w in work:
@@ -243,7 +274,7 @@ def _rng_streams(seed):
 def bench_chunked(args, cfg, folded, Request):
     """longprompt workload: paged one-shot admission vs the chunked
     token-budget loop, same requests, same tokens — different TTFT tail."""
-    from repro.serve.engine import Engine
+    from repro.serve.engine import Engine, EngineConfig
 
     r_arrival, _, _ = _rng_streams(args.seed)
     lengths = [int(x) for x in args.lengths.split(",")]
@@ -271,8 +302,9 @@ def bench_chunked(args, cfg, folded, Request):
         ("chunked", dict(max_batched_tokens=args.max_batched_tokens,
                          max_prefill_chunk=args.max_prefill_chunk), trace),
     ]:
-        eng = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
-                     cache_layout="paged", page_size=args.page_size, **kw)
+        eng = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size, **kw))
         lat = {}
         out, secs = _timed(run_continuous, eng, fresh, work,
                            lat=lat, trace=tr)
@@ -323,7 +355,7 @@ def bench_tp(args, cfg, folded, Request):
     must change memory layout only, never greedy tokens; exits non-zero on
     divergence on any backend (the sharded forward all-gathers int8 head
     contexts, which is bit-exact even where prefill kernels are not)."""
-    from repro.serve.engine import Engine
+    from repro.serve.engine import Engine, EngineConfig
 
     if len(jax.devices()) < args.tp:
         print(f"ERROR: --tp {args.tp} needs {args.tp} devices, found "
@@ -349,8 +381,9 @@ def bench_tp(args, cfg, folded, Request):
         page_size=args.page_size, seed=args.seed)
 
     for name, kw in [("unsharded", {}), (f"tp{args.tp}", dict(tp=args.tp))]:
-        eng = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
-                     cache_layout="paged", page_size=args.page_size, **kw)
+        eng = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size, **kw))
         lat = {}
         out, secs = _timed(run_continuous, eng, fresh, work, lat=lat)
         outs[name] = [r.out.tolist() for r in out]
@@ -386,7 +419,7 @@ def bench_overload(args, cfg, folded, Request):
     reservation on the same starved pool, plus an unlimited-pool truth
     run.  Preemption must change memory, latency, and throughput — never
     greedy tokens."""
-    from repro.serve.engine import Engine
+    from repro.serve.engine import Engine, EngineConfig
     from repro.serve.scheduler import pages_needed
 
     r_arrival, _, _ = _rng_streams(args.seed)
@@ -426,8 +459,9 @@ def bench_overload(args, cfg, folded, Request):
         ("full", dict(n_pages=pool + 1, reserve_policy="full")),
         ("ondemand", dict(n_pages=pool + 1, reserve_policy="ondemand")),
     ]:
-        eng = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
-                     cache_layout="paged", page_size=args.page_size, **kw)
+        eng = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size, **kw))
         lat = {}
         out, secs = _timed(run_continuous, eng, fresh, work, lat=lat)
         outs[name] = [r.out.tolist() for r in out]
@@ -486,10 +520,239 @@ def bench_overload(args, cfg, folded, Request):
     return 0
 
 
+def run_serve(router, requests, work, info=None):
+    """Virtual-time driver for the ReplicaRouter (same event-driven core
+    the asyncio server polls): submit each request at its arrival tick,
+    client-cancel a stream after its workload item's ``cancel_after``-th
+    token, and treat a RouterBusy rejection as final (the shed, not
+    retried — the overload behavior the SLO phase measures).  ``info``
+    (list of dicts, one per request) collects submit/first-token ticks,
+    token counts, and terminal status."""
+    from repro.serve.router import RouterBusy
+
+    n = len(requests)
+    if info is None:
+        info = [dict() for _ in range(n)]
+    for rec in info:
+        rec.update(status=None, submit_tick=None, first_tick=None, tokens=0)
+    grid2idx = {}
+    i = 0
+    while i < n or router.has_work:
+        t = router.counters["ticks"]
+        while i < n and work[i]["arrival"] <= t:
+            try:
+                grid2idx[router.submit(requests[i])] = i
+                info[i]["submit_tick"] = t
+            except RouterBusy:
+                info[i]["status"] = "rejected"
+            i += 1
+        for e in router.poll():
+            idx = grid2idx.get(e.rid)
+            if idx is None:
+                continue
+            rec = info[idx]
+            tick = router.counters["ticks"]
+            if e.token is not None:
+                if rec["first_tick"] is None:
+                    rec["first_tick"] = tick
+                rec["tokens"] += 1
+                ca = work[idx]["cancel_after"]
+                if ca is not None and rec["tokens"] >= ca and not e.final:
+                    router.cancel(e.rid)
+            if e.final:
+                rec["status"] = e.finish_reason or "unknown"
+    return info
+
+
+def bench_serve(args, cfg, folded, Request):
+    """--serve: asyncio server + SLO-aware replica router over the bursty
+    chat workload, gated on token identity and on overload behavior.
+
+    Three phases over ONE seeded trace:
+
+      1. ``truth``     — a single Engine, ``generate()``: per-request full
+         greedy outputs (the identity reference).
+      2. ``unbounded`` — ReplicaRouter over ``--replicas`` engines with an
+         effectively unbounded queue and no deadlines; client
+         cancellations active.  Completed requests must be bit-identical
+         to truth, cancelled ones truth-prefixes.  The same trace then
+         replays through the asyncio AsyncServer (cancellations off) and
+         must ALSO match truth — the server and this synchronous driver
+         poll the identical event-driven core, so they cannot diverge.
+      3. ``slo``       — same trace against a small ``--max-queue`` and a
+         per-request ``deadline_tick`` (arrival + ``--slo-ticks``).  The
+         gate (``slo_ok``) asserts overload surfaced as shed/rejected
+         requests, survivors stayed token-identical, and the survivors'
+         TTFT p95 in TICKS (deterministic, no wall-clock noise) is no
+         worse than the unbounded run's — the router sheds the tail
+         instead of growing it.
+    """
+    import asyncio
+
+    from repro.serve import stats as stats_schema
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.router import ReplicaRouter, RouterConfig
+    from repro.serve.server import AsyncServer
+
+    r_arrival, _, r_prefix = _rng_streams(args.seed)
+    lengths = [int(x) for x in args.lengths.split(",")]
+    work = make_bursty_workload(
+        r_arrival, args.requests, lengths, args.rate,
+        (args.max_new_lo, args.max_new_hi), burst=args.burst,
+        prefix_len=args.prefix_len, cancel_frac=args.cancel_frac)
+    prefix = r_prefix.integers(0, cfg.vocab_size,
+                               (args.prefix_len,)).astype(np.int32)
+    max_len = args.prefix_len + max(lengths) + args.max_new_hi + 1
+
+    def fresh(deadline_ticks=None):
+        _, r_prompt, _ = _rng_streams(args.seed)
+        reqs = []
+        for w in work:
+            sfx = w["prompt_len"] - (args.prefix_len if w["chat"] else 0)
+            suffix = r_prompt.integers(0, cfg.vocab_size,
+                                       (sfx,)).astype(np.int32)
+            reqs.append(Request(
+                prompt=np.concatenate([prefix, suffix]) if w["chat"]
+                else suffix,
+                max_new_tokens=w["max_new"],
+                deadline_tick=None if deadline_ticks is None
+                else int(w["arrival"]) + deadline_ticks))
+        return reqs
+
+    ecfg = EngineConfig(batch_slots=args.slots, max_len=max_len,
+                        cache_layout="paged", page_size=args.page_size)
+
+    truth_eng = Engine(cfg, folded, ecfg)
+    truth = [r.out.tolist() for r in truth_eng.generate(fresh())]
+
+    replicas = [Engine(cfg, folded, ecfg) for _ in range(args.replicas)]
+
+    def serve_run(*, deadline_ticks=None, max_queue=None):
+        for e in replicas:
+            e.reset(ecfg.seed)
+        router = ReplicaRouter(replicas, RouterConfig(
+            max_queue=max_queue or len(work) + 1))
+        reqs = fresh(deadline_ticks)
+        t0 = time.perf_counter()
+        info = run_serve(router, reqs, work)
+        secs = time.perf_counter() - t0
+        stats_schema.validate_router_stats(router.stats())
+        return router, reqs, info, secs
+
+    def identity(reqs, info):
+        for i, (r, rec) in enumerate(zip(reqs, info)):
+            if rec["status"] == "rejected":
+                continue
+            out = [] if r.out is None else r.out.tolist()
+            full = rec["status"] in ("length", "eos")
+            if out != (truth[i] if full else truth[i][:len(out)]):
+                return False
+        return True
+
+    def ttft_p95(info):
+        tt = [rec["first_tick"] - rec["submit_tick"] for rec in info
+              if rec["first_tick"] is not None]
+        return float(np.percentile(tt, 95)) if tt else 0.0
+
+    def phase_summary(router, info, secs):
+        by_status = {}
+        for rec in info:
+            by_status[rec["status"]] = by_status.get(rec["status"], 0) + 1
+        return dict(
+            tok_per_s=round(sum(r["tokens"] for r in info) / secs, 2),
+            ttft_p95_ticks=round(ttft_p95(info), 2),
+            statuses=by_status,
+            router_counters=dict(router.counters),
+            replicas=[dict(engine_counters=dict(e.counters))
+                      for e in replicas])
+
+    serve_run()                                        # warmup (compile)
+    rt_u, reqs_u, info_u, secs_u = serve_run()         # timed, unbounded
+    match_u = identity(reqs_u, info_u)
+    cancelled_u = sum(1 for r in info_u if r["status"] == "cancelled")
+
+    # asyncio replay: all submissions through the AsyncServer frontend
+    async def async_replay():
+        for e in replicas:
+            e.reset(ecfg.seed)
+        router = ReplicaRouter(replicas, RouterConfig(
+            max_queue=len(work) + 1))
+        srv = AsyncServer(router, max_inflight=len(work) + 1)
+        task = asyncio.create_task(srv.serve_forever())
+        handles = [await srv.submit(r) for r in fresh()]
+        outs = [await h.tokens() for h in handles]
+        srv.stop()
+        await asyncio.sleep(0)
+        task.cancel()
+        return outs
+
+    match_async = asyncio.run(async_replay()) == truth
+
+    rt_s, reqs_s, info_s, _ = serve_run(deadline_ticks=args.slo_ticks,
+                                        max_queue=args.max_queue)
+    match_s = identity(reqs_s, info_s)
+    shed = rt_s.counters["shed_deadline"] \
+        + sum(r.counters["shed_deadline"] for r in replicas)
+    rejected = rt_s.counters["rejected"]
+    p95_u, p95_s = ttft_p95(info_u), ttft_p95(info_s)
+    slo_ok = bool(shed + rejected >= 1 and match_s and p95_s <= p95_u)
+
+    match = bool(match_u and match_async)
+    n_tok = sum(r["tokens"] for r in info_u)
+    rows = [
+        ("serve/unbounded_tok_per_s", n_tok / secs_u,
+         f"wall={secs_u:.2f}s_replicas={args.replicas}"),
+        ("serve/unbounded_ttft_p95_ticks", p95_u,
+         f"cancelled={cancelled_u}"),
+        ("serve/slo_ttft_p95_ticks", p95_s,
+         f"shed={shed}_rejected={rejected}"),
+        ("serve/slo_shed_plus_rejected", shed + rejected,
+         f"of {len(work)} requests"),
+        ("serve/outputs_match", float(match), "truth+router+async"),
+        ("serve/slo_ok", float(slo_ok),
+         "shed>=1 & identity & p95_slo<=p95_unbounded"),
+    ]
+    artifact = dict(
+        bench="serve_async", workload="bursty", arch=cfg.name,
+        replicas=args.replicas, slots=args.slots, requests=args.requests,
+        lengths=lengths, prefix_len=args.prefix_len, burst=args.burst,
+        cancel_frac=args.cancel_frac, slo_ticks=args.slo_ticks,
+        max_queue=args.max_queue, page_size=args.page_size, seed=args.seed,
+        stats_schema_version=stats_schema.STATS_SCHEMA_VERSION,
+        outputs_match=match, slo_ok=slo_ok,
+        unbounded=phase_summary(rt_u, info_u, secs_u),
+        slo=phase_summary(rt_s, info_s, 1.0))
+    artifact["slo"].pop("tok_per_s")    # shed runs don't measure throughput
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
+
+    from repro.kernels import ops
+    if not match and ops.backend() != "pallas":
+        print("ERROR: serve outputs diverged from the single-engine truth "
+              "(router or asyncio frontend changed tokens)", file=sys.stderr)
+        return 1
+    if not match:
+        print("note: output mismatch tolerated on the pallas backend "
+              "(prefill kernels are not bit-identical there)",
+              file=sys.stderr)
+    if not slo_ok:
+        print(f"ERROR: SLO phase failed its contract: shed+rejected="
+              f"{shed + rejected} (need >=1), survivor identity={match_s}, "
+              f"ttft_p95 slo={p95_s} vs unbounded={p95_u} (need <=)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 def bench(args):
     from repro.configs import smoke_config
     from repro.launch.serve import calibrated_folded
-    from repro.serve.engine import Engine, LockstepEngine, Request
+    from repro.serve.engine import (Engine, EngineConfig, LockstepEngine,
+                                    Request)
 
     cfg = smoke_config(args.arch)
     key = jax.random.PRNGKey(0)
@@ -498,6 +761,8 @@ def bench(args):
 
     if args.tp:
         return bench_tp(args, cfg, folded, Request)
+    if args.serve or args.workload == "bursty":
+        return bench_serve(args, cfg, folded, Request)
     if args.workload == "longprompt":
         return bench_chunked(args, cfg, folded, Request)
     if args.workload == "overload":
@@ -528,8 +793,8 @@ def bench(args):
     n_tok = n_prompt = None
     outs = {}
 
-    cont = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
-                  cache_layout="contiguous")
+    cont = Engine(cfg, folded, EngineConfig(
+        batch_slots=args.slots, max_len=max_len, cache_layout="contiguous"))
     cont_lat = {}
     cont_out, cont_s = _timed(run_continuous, cont, fresh, work, lat=cont_lat)
     n_tok = sum(len(r.out) for r in cont_out)
@@ -552,8 +817,8 @@ def bench(args):
                     engine_counters=cont.counters)
 
     if run_lock:
-        lock = LockstepEngine(cfg, folded, batch_slots=args.slots,
-                              max_len=max_len)
+        lock = LockstepEngine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len))
         lock_out, lock_s = _timed(run_lockstep, lock, fresh)
         lock_tps = n_tok / lock_s
         outs["lockstep"] = [r.out.tolist() for r in lock_out]
@@ -564,8 +829,9 @@ def bench(args):
                         speedup=round(cont_tps / lock_tps, 3))
 
     if run_paged:
-        paged = Engine(cfg, folded, batch_slots=args.slots, max_len=max_len,
-                       cache_layout="paged", page_size=args.page_size)
+        paged = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size))
         paged_lat = {}
         paged_out, paged_s = _timed(run_continuous, paged, fresh, work,
                                     lat=paged_lat)
@@ -631,7 +897,24 @@ def main():
                     help="contiguous: lockstep-vs-continuous baseline; "
                          "paged: contiguous-vs-paged cache A/B; both: all")
     ap.add_argument("--workload", default="poisson",
-                    choices=["poisson", "prefix", "longprompt", "overload"])
+                    choices=["poisson", "prefix", "longprompt", "overload",
+                             "bursty"])
+    ap.add_argument("--serve", action="store_true",
+                    help="serving-stack bench: asyncio server + replica "
+                         "router over the bursty workload (implied by "
+                         "--workload bursty)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="engine replicas behind the router (--serve)")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="requests arriving per burst (bursty workload)")
+    ap.add_argument("--cancel-frac", type=float, default=0.25,
+                    help="fraction of requests client-cancelled mid-stream "
+                         "(bursty workload)")
+    ap.add_argument("--slo-ticks", type=int, default=24,
+                    help="deadline_tick window after arrival for the SLO "
+                         "phase (--serve)")
+    ap.add_argument("--max-queue", type=int, default=4,
+                    help="router queue bound for the SLO phase (--serve)")
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="starved-pool capacity for the overload workload "
                          "(0 = auto: one worst-case request + 1 page)")
@@ -681,6 +964,13 @@ def main():
             # see real concurrency or nothing gets preempted
             args.rate = max(args.rate, 1.0)
             args.max_new_lo, args.max_new_hi = 8, 16
+        if args.serve or args.workload == "bursty":
+            # the SLO phase must actually overload the router: more
+            # requests than the trimmed default, tight slots, fast bursts
+            args.requests = max(args.requests, 8)
+            args.slots = min(args.slots, 2)
+            args.rate = max(args.rate, 1.0)
+            args.prefix_len = min(args.prefix_len, 16)
     raise SystemExit(bench(args))
 
 

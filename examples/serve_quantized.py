@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.launch.serve import calibrated_folded
-from repro.serve.engine import Request, make_engine
+from repro.serve.engine import EngineConfig, Request, make_engine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="yi-6b")
@@ -26,7 +26,8 @@ key = jax.random.PRNGKey(0)
 calib = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
 folded = calibrated_folded(cfg, key, calib)
 
-eng = make_engine(cfg, folded, batch_slots=args.slots, max_len=128)
+eng = make_engine(cfg, folded, EngineConfig(batch_slots=args.slots,
+                                            max_len=128))
 rng = np.random.default_rng(0)
 # more requests than slots: the scheduler streams them through mid-flight
 reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,

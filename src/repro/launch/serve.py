@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.models import fold as F
 from repro.models import transformer as T
-from repro.serve.engine import Request, make_engine
+from repro.serve.engine import EngineConfig, Request, make_engine
 
 
 def calibrated_folded(cfg, key, calib_tokens):
@@ -40,8 +40,8 @@ def main():
     key = jax.random.PRNGKey(0)
     calib = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
     folded = calibrated_folded(cfg, key, calib)
-    eng = make_engine(cfg, folded, batch_slots=args.prompts,
-                      max_len=args.max_len)
+    eng = make_engine(cfg, folded, EngineConfig(batch_slots=args.prompts,
+                                                max_len=args.max_len))
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         (args.prompt_len,)).astype(np.int32),

@@ -64,6 +64,21 @@ ref/interpret backends.  On CPU, simulate ranks with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the test-tp CI
 lane's recipe).
 
+Event-driven serving API (the surface the asyncio frontend, the replica
+router, and the bench all drive): ``submit()`` / ``poll()`` / ``cancel()``.
+``poll()`` runs ONE scheduler tick — admit → chunk-prefill-under-budget →
+decode, exactly the loop described above — and returns the tick's
+``TokenEvent`` stream: one event per emitted token plus terminal events
+for cancelled and deadline-shed requests.  ``step()``, ``run()`` and
+``generate()`` are thin wrappers over ``poll()``, so a bench run and a
+server run cannot diverge in behavior — they are the same code path.
+Requests carry an explicit lifecycle (``RequestStatus``: WAITING →
+PREFILL → DECODE → FINISHED, with CANCELLED and FAILED exits) and a
+``result()`` accessor; ``cancel()`` flows through this state machine and
+frees a seated request's pages via the ordinary eviction path.
+Construction takes a typed ``EngineConfig``; legacy keyword arguments
+keep working for one release behind a DeprecationWarning.
+
 ``LockstepEngine`` — the original batch demo (kept as the benchmark baseline
 and for SSM/audio archs): lockstep decoding with one shared position scalar,
 prefill replayed token-by-token for the whole batch, admission only between
@@ -72,6 +87,7 @@ prefill replayed token-by-token for the whole batch, admission only between
 from __future__ import annotations
 
 import dataclasses
+import enum
 import math
 import warnings
 from typing import Dict, List, Optional, Tuple
@@ -83,8 +99,54 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import serve_int as S
 from repro.models.transformer import slot_kinds
+from repro.serve import stats as stats_schema
 from repro.serve.scheduler import (BlockAllocator, Scheduler, SlotState,
                                    pages_needed)
+
+
+class RequestStatus(enum.Enum):
+    """Explicit request lifecycle.  WAITING → PREFILL → DECODE → FINISHED
+    is the happy path; preemption moves a seated request back to WAITING;
+    CANCELLED (explicit cancel or deadline shed) and FAILED are terminal
+    exits.  Callers read ``Request.status`` / ``Request.result()`` instead
+    of peeking at engine internals."""
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    FAILED = "failed"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestStatus.FINISHED, RequestStatus.CANCELLED,
+                        RequestStatus.FAILED)
+
+
+class RequestCancelled(RuntimeError):
+    """Raised by ``Request.result()`` for a cancelled / shed request."""
+
+
+class RequestFailed(RuntimeError):
+    """Raised by ``Request.result()`` for a failed request."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One element of the ``poll()`` event stream.
+
+    ``token`` is None for terminal events that do not carry a token
+    (cancellation, deadline shed, failure); ``index`` is the token's
+    0-based position in the request's output stream (for a terminal
+    non-token event: the number of tokens emitted before it).  ``final``
+    marks the request's last event — its status is terminal from here and
+    ``finish_reason`` says why: ``length`` / ``eos`` (FINISHED),
+    ``cancelled`` / ``deadline`` (CANCELLED), ``error`` (FAILED)."""
+    rid: int
+    token: Optional[int]
+    index: int
+    final: bool
+    finish_reason: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -93,7 +155,145 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     eos_token: Optional[int] = None
+    deadline_tick: Optional[int] = None  # shed if still WAITING at this tick
     out: Optional[np.ndarray] = None
+    # --- lifecycle (owned by the engine/router after submit) -------------
+    rid: Optional[int] = None
+    status: RequestStatus = RequestStatus.WAITING
+    finish_reason: Optional[str] = None
+
+    def result(self) -> np.ndarray:
+        """The generated tokens once FINISHED.  Raises ``RequestCancelled``
+        / ``RequestFailed`` on the terminal exits (``out`` still holds the
+        partial tokens emitted before the exit) and ``RuntimeError`` while
+        the request is in flight."""
+        if self.status is RequestStatus.FINISHED:
+            return self.out
+        if self.status is RequestStatus.CANCELLED:
+            raise RequestCancelled(
+                f"request rid={self.rid} cancelled ({self.finish_reason}); "
+                f"{0 if self.out is None else len(self.out)} partial "
+                f"token(s) in .out")
+        if self.status is RequestStatus.FAILED:
+            raise RequestFailed(
+                f"request rid={self.rid} failed ({self.finish_reason})")
+        raise RuntimeError(
+            f"request rid={self.rid} still in flight "
+            f"(status={self.status.value})")
+
+
+class EngineConfigError(ValueError):
+    """An EngineConfig is invalid or incompatible with the model config."""
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Typed, validated engine construction options (replaces the old
+    opaque ``**kwargs``).  Field-level constraints are checked by
+    ``validate()`` at engine construction; model-dependent compatibility
+    (paged layout support, TP divisibility) is checked by the engine with
+    the same ``EngineConfigError``.  Unknown options raise ``TypeError``
+    naming the valid fields (``from_kwargs``)."""
+    batch_slots: int = 8
+    max_len: int = 512
+    seed: int = 0
+    prefill_bucket: int = 16
+    cache_layout: str = "auto"           # auto | paged | contiguous
+    page_size: int = 16
+    n_pages: Optional[int] = None
+    max_batched_tokens: Optional[int] = None
+    max_prefill_chunk: Optional[int] = None
+    reserve_policy: Optional[str] = None  # None | "full" | "ondemand"
+    tp: int = 1
+    mesh: object = None
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "EngineConfig":
+        """Build from keyword options; unknown names raise a TypeError
+        listing the valid fields (the old ``**kw`` surface silently
+        warned or dropped — now it is an error)."""
+        valid = [f.name for f in dataclasses.fields(cls)]
+        unknown = sorted(set(kw) - set(valid))
+        if unknown:
+            raise TypeError(
+                f"unknown engine option(s) {', '.join(unknown)}; valid "
+                f"EngineConfig fields: {', '.join(valid)}")
+        return cls(**kw)
+
+    def validate(self) -> "EngineConfig":
+        """Field-level validation (model-independent); raises
+        ``EngineConfigError`` with an actionable message."""
+        def bad(msg):
+            raise EngineConfigError(f"invalid EngineConfig: {msg}")
+        if self.batch_slots < 1:
+            bad(f"batch_slots must be >= 1 (got {self.batch_slots})")
+        if self.max_len < 1:
+            bad(f"max_len must be >= 1 (got {self.max_len})")
+        if self.prefill_bucket < 1:
+            bad(f"prefill_bucket must be >= 1 (got {self.prefill_bucket})")
+        if self.cache_layout not in ("auto", "paged", "contiguous"):
+            bad(f"cache_layout must be auto|paged|contiguous "
+                f"(got {self.cache_layout!r})")
+        if self.page_size < 1:
+            bad(f"page_size must be >= 1 (got {self.page_size})")
+        if self.n_pages is not None and self.n_pages < 2:
+            bad(f"n_pages must be >= 2 — page 0 is the reserved trash page "
+                f"(got {self.n_pages})")
+        if self.reserve_policy not in (None, "full", "ondemand"):
+            bad(f"reserve_policy must be full|ondemand "
+                f"(got {self.reserve_policy!r})")
+        chunky = self.max_batched_tokens is not None or \
+            self.max_prefill_chunk is not None
+        if chunky and self.cache_layout == "contiguous":
+            bad("chunked prefill (max_batched_tokens / max_prefill_chunk) "
+                "requires cache_layout='paged' — chunks are pages")
+        if self.max_batched_tokens is not None and self.max_batched_tokens < 1:
+            bad(f"max_batched_tokens must be >= 1 "
+                f"(got {self.max_batched_tokens})")
+        if self.max_prefill_chunk is not None and (
+                self.max_prefill_chunk < self.page_size
+                or self.max_prefill_chunk % self.page_size):
+            bad(f"max_prefill_chunk must be a positive multiple of "
+                f"page_size={self.page_size} (got {self.max_prefill_chunk})")
+        if self.reserve_policy == "ondemand" and \
+                self.cache_layout == "contiguous":
+            bad("reserve_policy='ondemand' (on-demand page growth) requires "
+                "cache_layout='paged'")
+        if self.tp < 1:
+            bad(f"tp must be >= 1 (got {self.tp})")
+        if (self.tp != 1 or self.mesh is not None) and \
+                self.cache_layout == "contiguous":
+            bad("tensor parallelism shards the paged KV pool; "
+                "cache_layout='contiguous' has no TP path")
+        return self
+
+
+_DEFAULT_CONFIG = EngineConfig()
+# fields the LockstepEngine has no use for; make_engine warns when they
+# deviate from their defaults and resets them before construction
+_CONTINUOUS_ONLY_FIELDS = ("prefill_bucket", "cache_layout", "page_size",
+                           "n_pages", "max_batched_tokens",
+                           "max_prefill_chunk", "reserve_policy", "tp",
+                           "mesh")
+
+
+def _resolve_config(config: Optional[EngineConfig], kw: dict,
+                    caller: str) -> EngineConfig:
+    """Deprecation shim shared by Engine / LockstepEngine / make_engine:
+    legacy keyword options build an EngineConfig behind a
+    DeprecationWarning (one release); unknown names raise TypeError."""
+    if kw:
+        if config is not None:
+            raise TypeError(
+                f"{caller}: pass either an EngineConfig or legacy keyword "
+                f"options, not both")
+        warnings.warn(
+            f"{caller}(cfg, folded, batch_slots=..., ...) keyword options "
+            f"are deprecated and will be removed next release; pass "
+            f"{caller}(cfg, folded, EngineConfig(...))",
+            DeprecationWarning, stacklevel=3)
+        config = EngineConfig.from_kwargs(**kw)
+    return (config if config is not None else EngineConfig()).validate()
 
 
 def supports_continuous(cfg: ModelConfig) -> bool:
@@ -102,46 +302,46 @@ def supports_continuous(cfg: ModelConfig) -> bool:
     return cfg.frontend == "none" and cfg.n_lm_heads == 1
 
 
-_CONTINUOUS_ONLY_KW = ("prefill_bucket", "cache_layout", "page_size",
-                       "n_pages", "max_batched_tokens", "max_prefill_chunk",
-                       "reserve_policy", "tp", "mesh")
-
-
-def make_engine(cfg: ModelConfig, folded, **kw):
+def make_engine(cfg: ModelConfig, folded,
+                config: Optional[EngineConfig] = None, **kw):
     """The continuous engine when the arch supports it, else the lockstep
-    baseline (same generate() surface).  Continuous-only kwargs passed for a
-    lockstep arch are dropped with a warning — not silently."""
-    cls = Engine if supports_continuous(cfg) else LockstepEngine
-    if cls is LockstepEngine:
-        dropped = sorted(k for k in _CONTINUOUS_ONLY_KW if k in kw)
-        if dropped:
-            warnings.warn(
-                f"make_engine: arch {cfg.name!r} takes the LockstepEngine, "
-                f"which ignores {', '.join(dropped)}", stacklevel=2)
-            for k in dropped:
-                kw.pop(k)
-    return cls(cfg, folded, **kw)
+    baseline (same generate() surface).  Continuous-only EngineConfig
+    fields set to non-default values for a lockstep arch are reset with a
+    warning — not silently."""
+    config = _resolve_config(config, kw, "make_engine")
+    if supports_continuous(cfg):
+        return Engine(cfg, folded, config)
+    dropped = sorted(f for f in _CONTINUOUS_ONLY_FIELDS
+                     if getattr(config, f) != getattr(_DEFAULT_CONFIG, f))
+    if dropped:
+        warnings.warn(
+            f"make_engine: arch {cfg.name!r} takes the LockstepEngine, "
+            f"which ignores {', '.join(dropped)}", stacklevel=2)
+        config = dataclasses.replace(
+            config, **{f: getattr(_DEFAULT_CONFIG, f) for f in dropped})
+    return LockstepEngine(cfg, folded, config)
 
 
 class Engine:
     """Continuous-batching integer serving engine (token-budget step loop)."""
 
-    def __init__(self, cfg: ModelConfig, folded, *, batch_slots: int = 8,
-                 max_len: int = 512, seed: int = 0, prefill_bucket: int = 16,
-                 cache_layout: str = "auto", page_size: int = 16,
-                 n_pages: Optional[int] = None,
-                 max_batched_tokens: Optional[int] = None,
-                 max_prefill_chunk: Optional[int] = None,
-                 reserve_policy: Optional[str] = None,
-                 tp: int = 1, mesh=None):
-        assert supports_continuous(cfg), \
-            "continuous engine serves token-LM archs; use LockstepEngine"
+    def __init__(self, cfg: ModelConfig, folded,
+                 config: Optional[EngineConfig] = None, **kw):
+        config = _resolve_config(config, kw, "Engine")
+        if not supports_continuous(cfg):
+            raise EngineConfigError(
+                f"continuous engine serves token-LM archs; arch "
+                f"{cfg.name!r} needs LockstepEngine (use make_engine)")
         self.cfg = cfg
         self.folded = folded
+        self.config = config
+        batch_slots, max_len = config.batch_slots, config.max_len
+        cache_layout, page_size = config.cache_layout, config.page_size
+        tp, mesh = config.tp, config.mesh
         self.batch = batch_slots
         self.max_len = max_len
         self.smax = S.cache_rows(cfg, max_len)
-        self.prefill_bucket = prefill_bucket
+        self.prefill_bucket = config.prefill_bucket
         # one-shot prefill needs every mixer to be cache-writing attention
         self._attn_only = cfg.causal and \
             all(m == "attn" for m, _ in slot_kinds(cfg))
@@ -150,39 +350,45 @@ class Engine:
         # under an active ctx auto falls back to contiguous and an explicit
         # "paged" is refused rather than silently slow.  Tensor parallelism
         # for the paged pool goes through the engine-level ``tp``/``mesh``
-        # kwargs instead (shard_map over the pool's Hkv axis, below).
+        # config fields instead (shard_map over the pool's Hkv axis, below).
         from repro.sharding import partition as Pt
         pageable = self._attn_only and not cfg.sliding_window \
             and Pt.get_mesh_ctx() is None
         if cache_layout == "auto":
             cache_layout = "paged" if pageable else "contiguous"
-        assert cache_layout in ("paged", "contiguous"), cache_layout
-        assert cache_layout != "paged" or pageable, \
-            "paged layout requires an all-attention, non-SWA arch and no " \
-            "active device mesh"
+        if cache_layout == "paged" and not pageable:
+            raise EngineConfigError(
+                "cache_layout='paged' requires an all-attention, non-SWA "
+                "arch and no active device mesh; use cache_layout='auto' "
+                "to fall back to contiguous")
         self.layout = cache_layout
         self.page_size = page_size
-        if cache_layout != "paged":
-            assert max_batched_tokens is None and max_prefill_chunk is None, \
-                "chunked prefill (max_batched_tokens / max_prefill_chunk) " \
-                "requires the paged cache layout"
-        self.max_batched_tokens = max_batched_tokens
-        self.max_prefill_chunk = max_prefill_chunk
+        if cache_layout != "paged" and (
+                config.max_batched_tokens is not None
+                or config.max_prefill_chunk is not None):
+            raise EngineConfigError(
+                "chunked prefill (max_batched_tokens / max_prefill_chunk) "
+                "requires the paged cache layout, but cache_layout resolved "
+                f"to {cache_layout!r} for arch {cfg.name!r}")
+        self.max_batched_tokens = config.max_batched_tokens
+        self.max_prefill_chunk = config.max_prefill_chunk
         # page-reservation policy: on-demand growth + preemption is the
         # default for the paged pool (the memory win paging exists for);
         # "full" restores the reserve-everything-at-admission contract
         if self.layout == "paged":
-            self.reserve_policy = reserve_policy or "ondemand"
-            assert self.reserve_policy in ("full", "ondemand"), reserve_policy
+            self.reserve_policy = config.reserve_policy or "ondemand"
         else:
-            assert reserve_policy in (None, "full"), \
-                "on-demand page growth requires the paged cache layout"
+            if config.reserve_policy == "ondemand":
+                raise EngineConfigError(
+                    "reserve_policy='ondemand' requires the paged cache "
+                    "layout, but cache_layout resolved to "
+                    f"{cache_layout!r} for arch {cfg.name!r}")
             self.reserve_policy = "full"
         if self.layout == "paged":
             self.max_blocks = pages_needed(self.smax, page_size)
             # +1: page 0 is the reserved trash page (inactive-slot writes)
-            self.n_pages = n_pages if n_pages is not None else \
-                batch_slots * self.max_blocks + 1
+            self.n_pages = config.n_pages if config.n_pages is not None \
+                else batch_slots * self.max_blocks + 1
             assert self.n_pages >= 2
         # --- tensor parallelism (paged pool sharded over KV heads) -------
         # Every rank holds its heads' slice of EVERY page: page ids stay
@@ -196,18 +402,20 @@ class Engine:
             mesh = make_tp_mesh(tp)
         self.mesh = mesh
         if mesh is not None:
-            assert self.layout == "paged", \
-                "tensor parallelism shards the paged KV pool; the " \
-                "contiguous layout has no TP path"
+            if self.layout != "paged":
+                raise EngineConfigError(
+                    "tensor parallelism shards the paged KV pool; the "
+                    "contiguous layout has no TP path")
             assert "model" in mesh.axis_names, mesh.axis_names
             self.tp = int(mesh.shape["model"])
             assert tp in (1, self.tp), (tp, self.tp)
-            assert cfg.n_kv_heads % self.tp == 0, \
-                f"TP={self.tp} must divide n_kv_heads={cfg.n_kv_heads} " \
-                "(each rank owns a whole slice of KV heads)"
+            if cfg.n_kv_heads % self.tp:
+                raise EngineConfigError(
+                    f"TP={self.tp} must divide n_kv_heads={cfg.n_kv_heads} "
+                    "(each rank owns a whole slice of KV heads)")
         else:
             self.tp = 1
-        self._init_state(seed)
+        self._init_state(config.seed)
 
         if self.layout == "paged":
             tp_axis = "model" if self.mesh is not None else None
@@ -270,23 +478,16 @@ class Engine:
 
     @staticmethod
     def _zero_counters() -> Dict[str, int]:
-        return dict(ticks=0, prefill_tokens=0, prefill_chunks=0,
-                    oneshot_prefills=0, chunked_prefills=0,
-                    loop_prefill_steps=0, decode_steps=0, decode_tokens=0,
-                    completed=0, prefix_hits=0, shared_rows=0,
-                    suffix_prefills=0, cache_pages_peak=0,
-                    # on-demand growth + preemption accounting
-                    grown_pages=0,        # decode pages granted on demand
-                    preemptions=0,        # victims spilled (pool ran dry)
-                    preempted_prefill=0, preempted_decode=0,
-                    restores=0,           # preempted requests re-seated
-                    spilled_rows=0,       # cache rows held at spill time
-                    recomputed_tokens=0,  # replayed rows the registry lost
-                    pool_wait_ticks=0)    # ticks a request waited on pages
-    #                                       while a slot stood free
+        # built FROM the frozen schema: adding a counter means adding it to
+        # repro.serve.stats.COUNTERS (with a description) first — the dict
+        # and the schema cannot drift apart
+        return {k: 0 for k in stats_schema.COUNTERS}
 
     def _init_state(self, seed: int):
         self.requests: Dict[int, Request] = {}
+        # terminal events produced between polls (cancel, deadline shed);
+        # drained at the head of the next poll()
+        self._events: List[TokenEvent] = []
         self.pos = np.zeros(self.batch, np.int32)
         self.rng = np.random.default_rng(seed)
         self.counters = self._zero_counters()
@@ -327,11 +528,18 @@ class Engine:
         pending rows fit the pages it reserved.  ``check=True`` also sweeps
         ``BlockAllocator.check_invariants()`` — O(n_pages), so the tests'
         per-tick assertions opt in while bench/monitoring reads (which time
-        the step loop) stay cheap."""
+        the step loop) stay cheap.
+
+        The payload is the frozen, versioned schema in
+        ``repro.serve.stats`` (carried under ``schema_version``) and is
+        validated against it on every read — the router,
+        ``serve_bench.py``, and ``check_regression.py`` all consume the
+        same key sets."""
         pre = [self.sched.slots[b] for b in self.sched.prefilling]
         chunk = self.max_prefill_chunk
         pending = [st.prompt_len - st.prefill_pos for st in pre]
         g = dict(
+            schema_version=stats_schema.STATS_SCHEMA_VERSION,
             waiting=len(self.sched.waiting),
             decode_slots_active=len(self.sched.decoding),
             prefill_slots=len(pre),
@@ -350,7 +558,7 @@ class Engine:
                      pages_capacity=al.capacity,
                      tp=self.tp)
         g["counters"] = dict(self.counters)
-        return g
+        return stats_schema.validate_stats(g, paged=self.layout == "paged")
 
     # --- contiguous-layout helpers ---------------------------------------
 
@@ -391,8 +599,73 @@ class Engine:
                     f"request needs up to {worst} cache pages, pool has "
                     f"{self.alloc.capacity} (n_pages={self.n_pages})")
         rid = self.sched.submit(request)
+        request.rid = rid
+        request.status = RequestStatus.WAITING
+        request.finish_reason = None
+        request.out = None
         self.requests[rid] = request
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request anywhere in its lifecycle.  A seated request's
+        pages are freed through the ordinary eviction path (the same code
+        completion runs), a waiting one is removed from the queue; either
+        way the request goes CANCELLED, its partial tokens land in
+        ``.out``, and the next ``poll()`` emits the terminal event.
+        Returns False when ``rid`` is unknown or already terminal."""
+        req = self.requests.get(rid)
+        if req is None:
+            return False
+        for b, st in enumerate(self.sched.slots):
+            if st is not None and st.rid == rid:
+                st = self.sched.evict(b)       # frees the page chain
+                self.pos[b] = 0
+                if self.layout == "paged":
+                    self.block_tables[b, :] = 0
+                emitted = st.emitted
+                break
+        else:
+            item = self.sched.remove_waiting(rid)
+            assert item is not None, f"rid {rid} tracked but not found"
+            # a preempted SlotState kept its emitted tokens; a plain queued
+            # request has none (its pages were already freed at preemption)
+            emitted = item.emitted if isinstance(item, SlotState) else []
+        self._terminate(rid, req, emitted, RequestStatus.CANCELLED,
+                        "cancelled")
+        self.counters["cancelled"] += 1
+        return True
+
+    def _terminate(self, rid: int, req: Request, emitted: List[int],
+                   status: RequestStatus, reason: str):
+        """Move a request to a terminal exit and queue its final event.
+        ``rid`` is passed explicitly (not read off ``req.rid``): a router
+        re-stamps ``req.rid`` with its own global id, while the engine's
+        table and event stream stay keyed by the engine-local rid."""
+        self.requests.pop(rid, None)
+        req.out = np.asarray(emitted, np.int32)
+        req.status = status
+        req.finish_reason = reason
+        self._events.append(TokenEvent(rid, None, len(emitted), True,
+                                       reason))
+
+    def _shed_expired(self):
+        """Shed WAITING requests whose ``deadline_tick`` has passed (run at
+        the head of every poll, before admission): they leave through the
+        same terminal path as cancellation — a shed request can never be
+        holding pages (a queued request has none; a preempted SlotState's
+        were freed at preemption), so the pool cannot be poisoned."""
+        if not self.sched.waiting:
+            return
+        t = self.counters["ticks"]
+        for rid, item in [(r, i) for r, i in self.sched.waiting]:
+            req = item.request if isinstance(item, SlotState) else item
+            if req.deadline_tick is None or t < req.deadline_tick:
+                continue
+            self.sched.remove_waiting(rid)
+            emitted = item.emitted if isinstance(item, SlotState) else []
+            self._terminate(rid, req, emitted, RequestStatus.CANCELLED,
+                            "deadline")
+            self.counters["shed_deadline"] += 1
 
     def _pick_token(self, logits_row: np.ndarray, req: Request) -> int:
         if req.temperature > 0:
@@ -427,7 +700,7 @@ class Engine:
         return np.asarray(logits[0, -1]), cache1, ln
 
     def _run_chunk(self, b: int, st: SlotState, pos0: int, ntok: int
-                   ) -> List[Tuple[int, int]]:
+                   ) -> List[TokenEvent]:
         """One prefill chunk for slot ``b``: rows [pos0, pos0+ntok) of the
         prompt through the chunk forward.  On the FINAL chunk the last real
         row's logits hand the request straight into decode (first token
@@ -502,14 +775,20 @@ class Engine:
         tok = self._pick_token(last, req)
         st.last_token = tok
         st.emitted.append(tok)
+        req.status = RequestStatus.DECODE
         if self._done(st):
             self._finish(b)
-        return [(st.rid, tok)]
+        return [TokenEvent(st.rid, tok, len(st.emitted) - 1,
+                           req.status.terminal, req.finish_reason)]
 
     def _finish(self, b: int):
         st = self.sched.evict(b)        # paged: returns the page chain
         req = self.requests.pop(st.rid)
         req.out = np.asarray(st.emitted, np.int32)
+        req.status = RequestStatus.FINISHED
+        req.finish_reason = "eos" if (
+            req.eos_token is not None and st.emitted
+            and st.emitted[-1] == req.eos_token) else "length"
         self.pos[b] = 0
         if self.layout == "paged":
             self.block_tables[b, :] = 0
@@ -523,6 +802,7 @@ class Engine:
         st = self.sched.slots[b]
         was_prefilling = st.prefilling
         self.sched.preempt(b)
+        st.request.status = RequestStatus.WAITING
         self.pos[b] = 0
         self.block_tables[b, :] = 0
         self.counters["preemptions"] += 1
@@ -570,9 +850,11 @@ class Engine:
 
     # --- the engine loop ------------------------------------------------
 
-    def step(self) -> List[Tuple[int, int]]:
+    def poll(self) -> List[TokenEvent]:
         """One scheduler tick of the token-budget loop:
 
+        0. shed WAITING requests whose ``deadline_tick`` has passed, and
+           flush terminal events queued by ``cancel()`` since last tick,
         1. seat waiting requests into free slots (paged: reserve their page
            budget; prefill does NOT run here),
         2. run prefill chunks for prefilling slots under the tick's token
@@ -586,11 +868,16 @@ class Engine:
         4. decode one token for every slot whose prompt is fully cached
            (slots that handed off in step 2 join the same tick's batch).
 
-        Returns the (rid, token) pairs emitted this tick."""
+        Returns this tick's :class:`TokenEvent` stream, in emission order.
+        Every request's stream ends with exactly one ``final`` event; a
+        cancelled/shed request's final event carries ``token=None``."""
         self.counters["ticks"] += 1
-        emitted: List[Tuple[int, int]] = []
+        self._shed_expired()
+        events = self._events            # cancel/shed events queued so far
+        self._events = []
         placed = self.sched.admit()
         for _b, st in placed:
+            st.request.status = RequestStatus.PREFILL
             if st.preemptions:          # a spilled request re-seated
                 self.counters["restores"] += 1
         if self.layout == "paged" and self.sched.waiting \
@@ -611,7 +898,7 @@ class Engine:
             # a final chunk hands the slot into this tick's decode batch:
             # charge its decode token so the budget stays a real cap
             used += ntok + (pos0 + ntok >= st.prompt_len)
-            emitted.extend(self._run_chunk(b, st, pos0, ntok))
+            events.extend(self._run_chunk(b, st, pos0, ntok))
         for b in self.sched.prefilling:   # scheduler anti-starvation input
             st = self.sched.slots[b]
             st.starved_ticks = 0 if b in chunked else st.starved_ticks + 1
@@ -621,7 +908,7 @@ class Engine:
         if self.layout == "paged":
             self.counters["cache_pages_peak"] = self.alloc.peak_live
         if not active:
-            return emitted
+            return events
         toks = np.zeros((self.batch, 1), np.int32)
         for b in active:
             toks[b, 0] = self.sched.slots[b].last_token
@@ -636,22 +923,37 @@ class Engine:
         rows = np.asarray(logits[:, -1])          # (B, V)
         for b in active:
             st = self.sched.slots[b]
+            req = st.request
             self.pos[b] += 1
             st.pos += 1
-            tok = self._pick_token(rows[b], st.request)
+            tok = self._pick_token(rows[b], req)
             st.last_token = tok
             st.emitted.append(tok)
-            emitted.append((st.rid, tok))
             if self._done(st):
                 self._finish(b)
+            events.append(TokenEvent(st.rid, tok, len(st.emitted) - 1,
+                                     req.status.terminal,
+                                     req.finish_reason))
         self.counters["decode_steps"] += 1
         self.counters["decode_tokens"] += len(active)
-        return emitted
+        return events
+
+    @property
+    def has_work(self) -> bool:
+        """True while a poll() could still produce events: live requests
+        anywhere in the pipeline, or queued terminal events."""
+        return bool(self._events) or self.sched.has_work
+
+    def step(self) -> List[Tuple[int, int]]:
+        """Back-compat wrapper over :meth:`poll`: one tick, returning the
+        (rid, token) pairs emitted (token-less terminal events dropped)."""
+        return [(e.rid, e.token) for e in self.poll()
+                if e.token is not None]
 
     def run(self) -> List[Tuple[int, int]]:
         """Drain the queue; returns every (rid, token) emitted."""
         out = []
-        while self.sched.has_work:
+        while self.has_work:
             out.extend(self.step())
         return out
 
@@ -670,15 +972,17 @@ class LockstepEngine:
     Kept as the serve_bench baseline and for archs the continuous engine
     doesn't take (audio codebooks)."""
 
-    def __init__(self, cfg: ModelConfig, folded, *, batch_slots: int = 8,
-                 max_len: int = 512, seed: int = 0):
+    def __init__(self, cfg: ModelConfig, folded,
+                 config: Optional[EngineConfig] = None, **kw):
+        config = _resolve_config(config, kw, "LockstepEngine")
         self.cfg = cfg
         self.folded = folded
-        self.batch = batch_slots
-        self.max_len = max_len
-        self.cache = S.init_cache(cfg, batch_slots, max_len)
-        self.pos = np.zeros(batch_slots, np.int32)
-        self.key = jax.random.PRNGKey(seed)
+        self.config = config
+        self.batch = config.batch_slots
+        self.max_len = config.max_len
+        self.cache = S.init_cache(cfg, self.batch, self.max_len)
+        self.pos = np.zeros(self.batch, np.int32)
+        self.key = jax.random.PRNGKey(config.seed)
 
         def decode_step(folded_, cache, tok, pos):
             return S.serve_forward(cfg, folded_, tok, cache=cache,
@@ -727,4 +1031,6 @@ class LockstepEngine:
                     outs[i].append(int(cur[i]))
         for r, o in zip(requests, outs):
             r.out = np.asarray(o, np.int32)
+            r.status = RequestStatus.FINISHED
+            r.finish_reason = "length"
         return requests

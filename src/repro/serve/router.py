@@ -1,0 +1,232 @@
+"""SLO-aware data-parallel router over N engine replicas.
+
+The router is a thin, deterministic dispatch layer speaking the same
+event-driven protocol as a single :class:`~repro.serve.engine.Engine`
+(``submit`` / ``cancel`` / ``poll`` / ``has_work`` / ``stats``), so the
+asyncio server and ``serve_bench.py`` drive either interchangeably.  Each
+replica is an independent Engine (internally TP-sharded or not); the
+router holds a bounded FIFO queue in front of them and makes one
+admission decision per queued request per tick:
+
+* **dispatch** when some replica is *admissible* — its ``stats()`` gauges
+  show queue depth at or under ``max_replica_waiting``, prefill backlog
+  at or under ``max_replica_chunks``, and (paged) at least
+  ``min_free_pages`` pages free.  Among admissible replicas the least
+  loaded wins, compared lexicographically on
+  ``(waiting, prefill_chunks_pending, -pages_free, index)`` — the index
+  tiebreak keeps placement deterministic, which is what makes a routed
+  run token-identical to a single-engine run on the same trace.
+* **queue** when no replica is admissible: the head request waits (FIFO
+  is never reordered — later requests do not jump the line).
+* **shed** queued requests whose ``deadline_tick`` passes before
+  dispatch, through the same CANCELLED/"deadline" exit the engine uses.
+* **reject** at ``submit`` when the bounded queue is full —
+  :class:`RouterBusy` is the backpressure signal the asyncio frontend
+  turns into an HTTP-busy style error instead of letting the tail grow.
+
+Ticks: ``poll()`` polls every replica exactly once, so for replicas
+constructed fresh for this router (the supported configuration) replica
+tick counters advance in lockstep with the router's own and
+``deadline_tick`` means the same thing queued or dispatched.
+
+Token identity holds for greedy requests (``temperature == 0``): a
+replica computes the same tokens for a request regardless of which other
+requests share its batch.  Sampled requests draw from per-replica PRNG
+streams and are excluded from the contract, exactly as they are from the
+single-engine identity benches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve import stats as stats_schema
+from repro.serve.engine import Request, RequestStatus, TokenEvent
+
+
+class RouterBusy(RuntimeError):
+    """Submission refused: the router's bounded queue is full."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Admission knobs. The defaults dispatch eagerly (a replica with an
+    empty queue and any free pages is admissible) and bound only the
+    router queue; tighten them to shed earlier under overload."""
+    max_queue: int = 64            # router queue bound (submit -> RouterBusy)
+    max_replica_waiting: int = 0   # dispatch only if replica waiting <= this
+    max_replica_chunks: int = 8    # ... and prefill_chunks_pending <= this
+    min_free_pages: int = 1        # ... and pages_free >= this (paged only)
+
+    def validate(self) -> "RouterConfig":
+        if self.max_queue < 1:
+            raise ValueError("RouterConfig.max_queue must be >= 1")
+        if self.max_replica_waiting < 0 or self.max_replica_chunks < 0 \
+                or self.min_free_pages < 0:
+            raise ValueError("RouterConfig thresholds must be >= 0")
+        return self
+
+
+class ReplicaRouter:
+    """Dispatch requests across engine replicas; see the module docstring
+    for the admission policy.  Request ids handed out by the router are
+    global; per-replica engine rids are internal."""
+
+    def __init__(self, replicas: List, config: Optional[RouterConfig] = None):
+        if not replicas:
+            raise ValueError("ReplicaRouter needs at least one replica")
+        self.replicas = list(replicas)
+        self.config = (config or RouterConfig()).validate()
+        self.queue: List[tuple] = []       # [(grid, Request)] FIFO
+        self.requests: Dict[int, Request] = {}   # live (queued + inflight)
+        # per-replica engine-rid -> global-rid translation
+        self._rev: List[Dict[int, int]] = [dict() for _ in self.replicas]
+        self._next_rid = 0
+        self._events: List[TokenEvent] = []
+        self.counters = {k: 0 for k in stats_schema.ROUTER_COUNTERS}
+
+    # --- protocol: submit / cancel ---------------------------------------
+
+    def submit(self, request: Request) -> int:
+        if len(self.queue) >= self.config.max_queue:
+            self.counters["rejected"] += 1
+            raise RouterBusy(
+                f"router queue full ({self.config.max_queue}); retry later")
+        grid = self._next_rid
+        self._next_rid += 1
+        request.rid = grid
+        request.status = RequestStatus.WAITING
+        request.finish_reason = None
+        request.out = None
+        self.queue.append((grid, request))
+        self.requests[grid] = request
+        self.counters["submitted"] += 1
+        return grid
+
+    def cancel(self, grid: int) -> bool:
+        """Cancel wherever the request lives.  Queued: terminal here, event
+        on the next poll.  Dispatched: forwarded to the owning replica,
+        whose terminal event flows back translated."""
+        req = self.requests.get(grid)
+        if req is None:
+            return False
+        for i, (g, _r) in enumerate(self.queue):
+            if g == grid:
+                del self.queue[i]
+                self.requests.pop(grid)
+                self._terminate(req, RequestStatus.CANCELLED, "cancelled")
+                self.counters["cancelled"] += 1
+                return True
+        for i, rev in enumerate(self._rev):
+            for erid, g in rev.items():
+                if g == grid:
+                    ok = self.replicas[i].cancel(erid)
+                    if ok:
+                        self.counters["cancelled"] += 1
+                    return ok
+        raise AssertionError(f"rid {grid} tracked but neither queued "
+                             f"nor dispatched")
+
+    def _terminate(self, req: Request, status: RequestStatus, reason: str):
+        req.out = np.asarray([], np.int32)
+        req.status = status
+        req.finish_reason = reason
+        self._events.append(TokenEvent(req.rid, None, 0, True, reason))
+
+    # --- admission --------------------------------------------------------
+
+    def _admissible(self, stats: Dict) -> bool:
+        c = self.config
+        if stats["waiting"] > c.max_replica_waiting:
+            return False
+        if stats["prefill_chunks_pending"] > c.max_replica_chunks:
+            return False
+        if "pages_free" in stats and stats["pages_free"] < c.min_free_pages:
+            return False
+        return True
+
+    def _shed_expired(self):
+        t = self.counters["ticks"]
+        for grid, req in [q for q in self.queue]:
+            if req.deadline_tick is None or t < req.deadline_tick:
+                continue
+            self.queue.remove((grid, req))
+            self.requests.pop(grid)
+            self._terminate(req, RequestStatus.CANCELLED, "deadline")
+            self.counters["shed_deadline"] += 1
+
+    def _dispatch(self):
+        """Place queued requests head-first onto the least-loaded
+        admissible replica; stop at the first head that doesn't fit (FIFO:
+        nothing jumps the line)."""
+        while self.queue:
+            snaps = [eng.stats() for eng in self.replicas]
+            cands = [(s["waiting"], s["prefill_chunks_pending"],
+                      -s.get("pages_free", 0), i)
+                     for i, s in enumerate(snaps) if self._admissible(s)]
+            if not cands:
+                return
+            i = min(cands)[3]
+            grid, req = self.queue.pop(0)
+            try:
+                erid = self.replicas[i].submit(req)
+            except ValueError as e:
+                # the request can never run (too big for any replica built
+                # like this one): FAILED, not retried elsewhere
+                self.requests.pop(grid)
+                req.rid = grid
+                req.out = np.asarray([], np.int32)
+                req.status = RequestStatus.FAILED
+                req.finish_reason = f"error: {e}"
+                self._events.append(
+                    TokenEvent(grid, None, 0, True, req.finish_reason))
+                continue
+            req.rid = grid                 # engine stamped its local rid
+            self._rev[i][erid] = grid
+            self.counters["dispatched"] += 1
+
+    # --- the tick ---------------------------------------------------------
+
+    def poll(self) -> List[TokenEvent]:
+        """One router tick: shed expired queued requests, dispatch while
+        replicas are admissible, then poll every replica once and return
+        the merged, rid-translated event stream."""
+        self.counters["ticks"] += 1
+        self._shed_expired()
+        self._dispatch()
+        events = self._events
+        self._events = []
+        for i, eng in enumerate(self.replicas):
+            rev = self._rev[i]
+            for e in eng.poll():
+                grid = rev.get(e.rid)
+                if grid is None:           # replica-local traffic, not ours
+                    continue
+                if e.final:
+                    del rev[e.rid]
+                    self.requests.pop(grid, None)
+                    if e.finish_reason in ("length", "eos"):
+                        self.counters["completed"] += 1
+                events.append(dataclasses.replace(e, rid=grid))
+        return events
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self._events) \
+            or any(rev for rev in self._rev) \
+            or any(eng.has_work for eng in self.replicas)
+
+    def stats(self) -> Dict:
+        """Router gauges + counters wrapping each replica's payload;
+        validated against the frozen ``repro.serve.stats`` schema."""
+        s = {
+            "schema_version": stats_schema.STATS_SCHEMA_VERSION,
+            "queued": len(self.queue),
+            "inflight": sum(len(rev) for rev in self._rev),
+            "n_replicas": len(self.replicas),
+            "replicas": [eng.stats() for eng in self.replicas],
+            "counters": dict(self.counters),
+        }
+        return stats_schema.validate_router_stats(s)

@@ -352,6 +352,17 @@ class Scheduler:
         self.waiting.append((rid, request))
         return rid
 
+    def remove_waiting(self, rid: int):
+        """Drop ``rid`` from the waiting queue (cancellation / deadline
+        shed).  Returns the queued item — the plain request, or the
+        preempted SlotState if it was requeued by ``preempt`` (its pages
+        were already freed at spill time) — or None if not queued."""
+        for i, (r, item) in enumerate(self.waiting):
+            if r == rid:
+                del self.waiting[i]
+                return item
+        return None
+
     # --- slot side ------------------------------------------------------
 
     def _reserve(self, st: SlotState) -> bool:

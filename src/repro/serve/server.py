@@ -1,0 +1,171 @@
+"""Asyncio serving frontend over the event-driven engine protocol.
+
+:class:`AsyncServer` wraps any *core* speaking the event protocol — a
+single :class:`~repro.serve.engine.Engine` or a
+:class:`~repro.serve.router.ReplicaRouter` — and exposes per-request
+async streams:
+
+* ``await server.submit(req)`` returns a :class:`StreamHandle`;
+  ``async for tok in handle`` yields tokens as the engine emits them.
+* Backpressure is two-layered: a semaphore bounds requests in flight
+  through the server (``await``-ing submitters is the backpressure), and
+  the router's bounded queue underneath turns hard overload into
+  :class:`~repro.serve.router.RouterBusy` rejections.
+* ``handle.cancel()`` and per-request wall-clock ``timeout`` both route
+  through ``core.cancel()`` — the same state machine the engine uses for
+  deadline sheds, so a timed-out request frees its pages via the
+  ordinary eviction path and its stream ends with a terminal event.
+
+The server never threads or forks: ``serve_forever`` drives
+``core.poll()`` inline on the event loop, one tick per iteration, and
+fans events out to stream queues.  Because the asyncio layer only decides
+*when* to call the same ``submit``/``poll``/``cancel`` the synchronous
+bench calls, tokens cannot diverge between the two drivers — scheduling
+changes latency, never output (the engine's tick loop is deterministic in
+submission order).
+
+No external dependencies: plain ``asyncio`` from the standard library.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Request, TokenEvent
+
+
+class StreamHandle:
+    """One request's live output stream.  Async-iterate for tokens; after
+    exhaustion ``result()`` / the request's own ``result()`` give the full
+    output or raise for cancelled/failed exits."""
+
+    def __init__(self, server: "AsyncServer", rid: int, request: Request):
+        self.rid = rid
+        self.request = request
+        self._server = server
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._done = False
+        self._timeout_handle: Optional[asyncio.TimerHandle] = None
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> int:
+        if self._done:
+            raise StopAsyncIteration
+        ev: TokenEvent = await self._queue.get()
+        if ev.final:
+            self._done = True
+        if ev.token is None:        # token-less terminal (cancel/shed/fail)
+            raise StopAsyncIteration
+        return ev.token
+
+    async def tokens(self) -> List[int]:
+        """Drain the stream to completion and return every token."""
+        return [t async for t in self]
+
+    def cancel(self) -> bool:
+        """Client-side cancellation; the stream still ends with its
+        terminal event (delivered by the poll loop)."""
+        return self._server._cancel(self)
+
+    def result(self) -> np.ndarray:
+        """Terminal-state accessor (see ``Request.result``)."""
+        return self.request.result()
+
+
+class AsyncServer:
+    """Drive an event-protocol core from an asyncio event loop.
+
+    Parameters
+    ----------
+    core:
+        ``Engine`` or ``ReplicaRouter`` (anything with ``submit`` /
+        ``cancel`` / ``poll`` / ``has_work``).
+    max_inflight:
+        Semaphore bound on requests admitted into the core at once;
+        further ``submit`` callers await (backpressure).
+    idle_sleep:
+        Event-loop sleep while the core has no work (seconds).
+    """
+
+    def __init__(self, core, *, max_inflight: int = 64,
+                 idle_sleep: float = 0.001):
+        self.core = core
+        self.idle_sleep = idle_sleep
+        self._sem = asyncio.Semaphore(max_inflight)
+        self._streams: Dict[int, StreamHandle] = {}
+        self._stopped = False
+
+    async def submit(self, request: Request,
+                     timeout: Optional[float] = None) -> StreamHandle:
+        """Admit a request (awaiting the in-flight semaphore) and return
+        its stream.  ``timeout`` arms a wall-clock timer that cancels the
+        request through the core; tick-based ``deadline_tick`` on the
+        request itself additionally bounds time-to-first-schedule
+        deterministically.  Raises ``RouterBusy`` (after releasing the
+        slot) when the core's bounded queue rejects the submission."""
+        await self._sem.acquire()
+        try:
+            rid = self.core.submit(request)
+        except BaseException:
+            self._sem.release()
+            raise
+        handle = StreamHandle(self, rid, request)
+        self._streams[rid] = handle
+        if timeout is not None:
+            loop = asyncio.get_running_loop()
+            handle._timeout_handle = loop.call_later(
+                timeout, self._cancel, handle)
+        return handle
+
+    def _cancel(self, handle: StreamHandle) -> bool:
+        if handle.rid not in self._streams:
+            return False                   # already terminal
+        return self.core.cancel(handle.rid)
+
+    def _settle(self, handle: StreamHandle):
+        self._streams.pop(handle.rid, None)
+        if handle._timeout_handle is not None:
+            handle._timeout_handle.cancel()
+            handle._timeout_handle = None
+        self._sem.release()
+
+    async def serve_forever(self):
+        """Poll loop: one core tick per iteration while there is work,
+        yielding to the loop between ticks so submitters and consumers
+        interleave; sleeps when idle.  Run as a background task; cancel
+        the task (or ``stop()``) to shut down."""
+        try:
+            while not self._stopped:
+                if self.core.has_work:
+                    for ev in self.core.poll():
+                        handle = self._streams.get(ev.rid)
+                        if handle is None:
+                            continue       # not submitted through us
+                        handle._queue.put_nowait(ev)
+                        if ev.final:
+                            self._settle(handle)
+                    await asyncio.sleep(0)
+                else:
+                    await asyncio.sleep(self.idle_sleep)
+        except asyncio.CancelledError:
+            pass
+
+    def stop(self):
+        self._stopped = True
+
+    async def drain(self):
+        """Tick until the core has no work left (test/bench helper that
+        avoids a background task entirely)."""
+        while self.core.has_work:
+            for ev in self.core.poll():
+                handle = self._streams.get(ev.rid)
+                if handle is None:
+                    continue
+                handle._queue.put_nowait(ev)
+                if ev.final:
+                    self._settle(handle)
+            await asyncio.sleep(0)

@@ -59,7 +59,7 @@ def test_lower_serve_decode_smoke_mesh():
 
 
 def test_engine_generates_and_is_deterministic():
-    from repro.serve.engine import Engine, Request
+    from repro.serve.engine import Engine, EngineConfig, Request
 
     cfg = smoke_config("yi-6b")
     params = T.init_params(cfg, KEY)
@@ -72,7 +72,7 @@ def test_engine_generates_and_is_deterministic():
                for _ in range(2)]
 
     def run():
-        eng = Engine(cfg, folded, batch_slots=2, max_len=64)
+        eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64))
         reqs = [Request(prompt=p.copy(), max_new_tokens=5) for p in prompts]
         return [r.out.tolist() for r in eng.generate(reqs)]
 

@@ -15,7 +15,7 @@ import pytest
 from repro.configs import smoke_config
 from repro.models import fold as F
 from repro.models import transformer as T
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, EngineConfig, Request
 
 KEY = jax.random.PRNGKey(0)
 
@@ -40,8 +40,9 @@ def _requests(cfg, lens, max_news, seed=0):
 
 def _truth(cfg, folded, lens, max_news, seed=0, **kw):
     """Unlimited-pool reference: same engine, default (ample) n_pages."""
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
-                 cache_layout="paged", page_size=4, **kw)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                           cache_layout="paged", page_size=4,
+                                           **kw))
     out = eng.generate(_requests(cfg, lens, max_news, seed=seed))
     assert eng.counters["preemptions"] == 0      # really unlimited
     return [r.out.tolist() for r in out]
@@ -74,8 +75,9 @@ def test_mid_decode_victim_token_identical(folded_cfg):
     lens, max_news = [4, 4], [12, 12]            # worst 4 pages each
     truth = _truth(cfg, folded, lens, max_news)
 
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
-                 cache_layout="paged", page_size=4, n_pages=6)  # 5 < 4+4
+    eng = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged", page_size=4,
+        n_pages=6))                                  # capacity 5 < 4+4
     out = _drive(eng, _requests(cfg, lens, max_news))
     assert [r.out.tolist() for r in out] == truth
     c = eng.counters
@@ -97,9 +99,9 @@ def test_mid_prefill_victim_token_identical(folded_cfg):
     lens, max_news = [4, 4, 24], [12, 12, 4]
     truth = _truth(cfg, folded, lens, max_news, max_prefill_chunk=4)
 
-    eng = Engine(cfg, folded, batch_slots=3, max_len=64,
-                 cache_layout="paged", page_size=4, n_pages=9,
-                 max_prefill_chunk=4)            # capacity 8 < 4+4+7
+    eng = Engine(cfg, folded, EngineConfig(
+        batch_slots=3, max_len=64, cache_layout="paged", page_size=4,
+        n_pages=9, max_prefill_chunk=4))         # capacity 8 < 4+4+7
     out = _drive(eng, _requests(cfg, lens, max_news))
     assert [r.out.tolist() for r in out] == truth
     c = eng.counters
@@ -118,9 +120,9 @@ def test_restore_hits_prefix_registry(folded_cfg):
     lens, max_news = [4, 12], [8, 4]
     truth = _truth(cfg, folded, lens, max_news, max_prefill_chunk=4)
 
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
-                 cache_layout="paged", page_size=4, n_pages=7,
-                 max_prefill_chunk=4)            # capacity 6 < 3+4
+    eng = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged", page_size=4,
+        n_pages=7, max_prefill_chunk=4))         # capacity 6 < 3+4
     out = _drive(eng, _requests(cfg, lens, max_news))
     assert [r.out.tolist() for r in out] == truth
     c = eng.counters
@@ -141,8 +143,9 @@ def test_sustained_overload_every_request_finishes(folded_cfg):
     cfg, folded = folded_cfg
     n = 8
     lens, max_news = [4] * n, [8] * n            # worst 3 pages each
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
-                 cache_layout="paged", page_size=4, n_pages=6)  # capacity 5
+    eng = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged", page_size=4,
+        n_pages=6))                              # capacity 5
     out = _drive(eng, _requests(cfg, lens, max_news))
     assert eng.counters["completed"] == n
     assert all(r.out is not None and len(r.out) == 8 for r in out)
@@ -155,9 +158,9 @@ def test_full_reservation_policy_never_preempts(folded_cfg):
     overload: admission waits, decode never grows, nothing is spilled."""
     cfg, folded = folded_cfg
     lens, max_news = [4, 4, 4], [12, 12, 12]
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
-                 cache_layout="paged", page_size=4, n_pages=6,
-                 reserve_policy="full")
+    eng = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged", page_size=4,
+        n_pages=6, reserve_policy="full"))
     out = _drive(eng, _requests(cfg, lens, max_news))
     c = eng.counters
     assert c["completed"] == 3

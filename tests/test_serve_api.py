@@ -1,0 +1,396 @@
+"""Event-driven serving API: cancellation and deadline sheds must never
+perturb surviving requests' tokens or leak pool state, the replica router
+must be output-identical to a single engine, and the asyncio frontend must
+stream/cancel/time-out over the same core without touching token identity.
+
+Async tests drive real event loops via plain ``asyncio.run`` (no plugin);
+determinism holds because the core is ticked, not threaded.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import fold as F
+from repro.models import transformer as T
+from repro.serve import stats as SS
+from repro.serve.engine import (Engine, EngineConfig, Request,
+                                RequestCancelled, RequestFailed,
+                                RequestStatus)
+from repro.serve.router import ReplicaRouter, RouterBusy, RouterConfig
+from repro.serve.server import AsyncServer
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def folded_cfg():
+    cfg = smoke_config("yi-6b")
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    calib = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    _, obs, _ = T.forward(cfg, params, amax, calib)
+    return cfg, F.fold_params(cfg, params, obs)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (ln,)).astype(np.int32)
+            for ln in lens]
+
+
+def _truth(cfg, folded, prompts, max_news):
+    """Undisturbed single-engine reference for token identity."""
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64))
+    reqs = [Request(prompt=p.copy(), max_new_tokens=mn)
+            for p, mn in zip(prompts, max_news)]
+    return [r.out.tolist() for r in eng.generate(reqs)]
+
+
+def _paged_cfg(**kw):
+    base = dict(batch_slots=2, max_len=64, cache_layout="paged", page_size=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _sweep(eng):
+    """Per-tick invariants: slot accounting, pool conservation, allocator
+    refcount sweep (``check=True``)."""
+    g = eng.stats(check=True)
+    assert g["decode_slots_active"] + g["prefill_slots"] \
+        + g["free_slots"] == eng.batch
+    if "pages_capacity" in g:
+        assert g["pages_in_use"] + g["pages_free"] \
+            + g["pages_cached_lru"] == g["pages_capacity"]
+    return g
+
+
+def _drive(eng, max_ticks=500, on_tick=None):
+    ticks = 0
+    while eng.has_work:
+        assert ticks < max_ticks, "engine livelocked"
+        ticks += 1
+        eng.poll()
+        _sweep(eng)
+        if on_tick is not None:
+            on_tick(ticks)
+    return ticks
+
+
+def test_cancel_mid_prefill_survivors_identical(folded_cfg):
+    """Cancel a request while its chunked prefill is still in flight: the
+    slot/pages free immediately and the survivors' greedy tokens match an
+    engine that never saw the victim."""
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [16, 6, 6])
+    truth = _truth(cfg, folded, prompts[1:], [8, 8])
+
+    eng = Engine(cfg, folded, _paged_cfg(
+        max_batched_tokens=4, max_prefill_chunk=4))   # 16-prompt: 4 ticks
+    victim = Request(prompt=prompts[0].copy(), max_new_tokens=8)
+    survivors = [Request(prompt=p.copy(), max_new_tokens=8)
+                 for p in prompts[1:]]
+    vid = eng.submit(victim)
+    for r in survivors:
+        eng.submit(r)
+    eng.poll()
+    _sweep(eng)
+    assert victim.status is RequestStatus.PREFILL     # mid-prefill for real
+    assert eng.cancel(vid)
+    _sweep(eng)
+    _drive(eng)
+    assert victim.status is RequestStatus.CANCELLED
+    assert victim.out.tolist() == []                  # nothing emitted yet
+    with pytest.raises(RequestCancelled):
+        victim.result()
+    assert [r.result().tolist() for r in survivors] == truth
+    assert eng.counters["cancelled"] == 1
+    assert eng.alloc.live == 0
+
+
+def test_cancel_mid_decode_partial_prefix_and_survivors(folded_cfg):
+    """Cancel after a few decode steps: the victim keeps its emitted prefix
+    in ``.out`` (a prefix of its own truth), survivors are untouched."""
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [6, 6])
+    full = _truth(cfg, folded, prompts, [12, 12])
+
+    eng = Engine(cfg, folded, _paged_cfg())
+    victim = Request(prompt=prompts[0].copy(), max_new_tokens=12)
+    other = Request(prompt=prompts[1].copy(), max_new_tokens=12)
+    vid = eng.submit(victim)
+    eng.submit(other)
+    emitted = {vid: 0}
+    # drive by hand: cancel once the victim has decoded >= 3 tokens
+    ticks = 0
+    cancelled = False
+    while eng.has_work:
+        assert ticks < 500
+        ticks += 1
+        for ev in eng.poll():
+            if ev.rid == vid and ev.token is not None:
+                emitted[vid] += 1
+        _sweep(eng)
+        if not cancelled and emitted[vid] >= 3:
+            assert victim.status is RequestStatus.DECODE
+            assert eng.cancel(vid)
+            cancelled = True
+            _sweep(eng)
+    assert cancelled
+    assert victim.status is RequestStatus.CANCELLED
+    partial = victim.out.tolist()
+    assert 3 <= len(partial) < 12
+    assert partial == full[0][:len(partial)]          # truth prefix
+    assert other.result().tolist() == full[1]
+    assert eng.alloc.live == 0
+
+
+def test_deadline_shed_does_not_poison_pool(folded_cfg):
+    """Queued requests past ``deadline_tick`` are shed WAITING (they never
+    held pages); the running survivor finishes bit-identically and the
+    pool sweeps clean every tick."""
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [6, 6, 6])
+    truth = _truth(cfg, folded, prompts[:1], [10])
+
+    eng = Engine(cfg, folded, _paged_cfg(batch_slots=1))
+    keeper = Request(prompt=prompts[0].copy(), max_new_tokens=10)
+    late = [Request(prompt=p.copy(), max_new_tokens=10, deadline_tick=2)
+            for p in prompts[1:]]
+    eng.submit(keeper)
+    for r in late:
+        eng.submit(r)
+    _drive(eng)
+    assert keeper.result().tolist() == truth[0]
+    for r in late:
+        assert r.status is RequestStatus.CANCELLED
+        assert r.finish_reason == "deadline"
+        with pytest.raises(RequestCancelled):
+            r.result()
+    assert eng.counters["shed_deadline"] == 2
+    assert eng.alloc.live == 0
+    g = eng.stats(check=True)
+    assert g["pages_in_use"] == 0 and g["free_slots"] == eng.batch
+
+
+def test_router_two_replicas_identical_to_single_engine(folded_cfg):
+    """Data-parallel routing over two fresh replicas must not change a
+    single token vs the single-engine run, per the identity contract."""
+    cfg, folded = folded_cfg
+    lens = [6, 10, 4, 8, 6, 12]
+    prompts = _prompts(cfg, lens)
+    max_news = [8] * len(prompts)
+    truth = _truth(cfg, folded, prompts, max_news)
+
+    replicas = [Engine(cfg, folded, _paged_cfg()) for _ in range(2)]
+    router = ReplicaRouter(replicas)
+    reqs = [Request(prompt=p.copy(), max_new_tokens=mn)
+            for p, mn in zip(prompts, max_news)]
+    for r in reqs:
+        router.submit(r)
+    ticks = 0
+    while router.has_work:
+        assert ticks < 500, "router livelocked"
+        ticks += 1
+        router.poll()
+        SS.validate_router_stats(router.stats())
+        for rep in replicas:
+            _sweep(rep)
+    assert [r.result().tolist() for r in reqs] == truth
+    assert sum(rep.counters["completed"] for rep in replicas) == len(reqs)
+    c = router.counters
+    assert c["submitted"] == c["dispatched"] == c["completed"] == len(reqs)
+    # both replicas actually took work (least-loaded, fresh, 2 available)
+    assert all(rep.counters["completed"] >= 1 for rep in replicas)
+
+
+def test_router_bounded_queue_rejects(folded_cfg):
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [6] * 5)
+    replicas = [Engine(cfg, folded, _paged_cfg(batch_slots=1))]
+    router = ReplicaRouter(replicas, RouterConfig(max_queue=2))
+    reqs = [Request(prompt=p.copy(), max_new_tokens=4) for p in prompts]
+    accepted = []
+    rejected = 0
+    for r in reqs:
+        try:
+            router.submit(r)
+            accepted.append(r)
+        except RouterBusy:
+            rejected += 1
+    assert rejected == 3 and len(accepted) == 2      # queue bound is real
+    assert router.counters["rejected"] == 3
+    while router.has_work:
+        router.poll()
+    for r in accepted:
+        assert r.status is RequestStatus.FINISHED
+
+
+def test_router_failed_dispatch_surfaces_as_failed(folded_cfg):
+    """A request the engine rejects at dispatch (doesn't fit max_len) must
+    come back FAILED with the engine's reason, not crash the router."""
+    cfg, folded = folded_cfg
+    replicas = [Engine(cfg, folded, _paged_cfg())]
+    router = ReplicaRouter(replicas)
+    bad = Request(prompt=_prompts(cfg, [8])[0], max_new_tokens=500)
+    router.submit(bad)
+    events = router.poll()
+    assert bad.status is RequestStatus.FAILED
+    assert bad.finish_reason.startswith("error:")
+    assert any(e.final and e.finish_reason == bad.finish_reason
+               for e in events)
+    with pytest.raises(RequestFailed):
+        bad.result()
+    assert not router.has_work
+
+
+def test_router_cancel_queued_and_dispatched(folded_cfg):
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [6, 6, 6])
+    replicas = [Engine(cfg, folded, _paged_cfg(batch_slots=1))]
+    router = ReplicaRouter(replicas)
+    reqs = [Request(prompt=p.copy(), max_new_tokens=8) for p in prompts]
+    rids = [router.submit(r) for r in reqs]
+    router.poll()                         # dispatches r0 (slots=1)
+    assert router.cancel(rids[2])         # still in the router queue
+    assert reqs[2].status is RequestStatus.CANCELLED
+    assert router.cancel(rids[0])         # dispatched: flows via replica
+    while router.has_work:
+        router.poll()
+    assert reqs[0].status is RequestStatus.CANCELLED
+    assert reqs[1].status is RequestStatus.FINISHED
+    assert router.counters["cancelled"] == 2
+    assert not router.cancel(999)         # unknown rid
+    assert replicas[0].alloc.live == 0
+
+
+def test_async_server_streams_and_matches_truth(folded_cfg):
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [6, 10, 4])
+    truth = _truth(cfg, folded, prompts, [8, 8, 8])
+
+    async def run():
+        core = Engine(cfg, folded, _paged_cfg())
+        server = AsyncServer(core)
+        task = asyncio.ensure_future(server.serve_forever())
+        handles = [await server.submit(
+            Request(prompt=p.copy(), max_new_tokens=8)) for p in prompts]
+        streams = [await h.tokens() for h in handles]
+        server.stop()
+        await task
+        return streams, [h.result().tolist() for h in handles]
+
+    streams, results = asyncio.run(run())
+    assert streams == truth               # streamed tokens, in order
+    assert results == truth               # and the terminal result() agrees
+
+
+def test_async_server_cancel_mid_stream(folded_cfg):
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [6, 6])
+    truth = _truth(cfg, folded, prompts, [12, 12])
+
+    async def run():
+        core = Engine(cfg, folded, _paged_cfg())
+        server = AsyncServer(core)
+        task = asyncio.ensure_future(server.serve_forever())
+        victim = Request(prompt=prompts[0].copy(), max_new_tokens=12)
+        other = Request(prompt=prompts[1].copy(), max_new_tokens=12)
+        hv = await server.submit(victim)
+        ho = await server.submit(other)
+        got = []
+        async for tok in hv:
+            got.append(tok)
+            if len(got) == 3:
+                hv.cancel()
+        out = await ho.tokens()
+        server.stop()
+        await task
+        return victim, got, out
+
+    victim, got, out = asyncio.run(run())
+    assert victim.status is RequestStatus.CANCELLED
+    assert got == truth[0][:len(got)] and len(got) >= 3
+    assert out == truth[1]
+
+
+def test_async_server_timeout_cancels(folded_cfg):
+    cfg, folded = folded_cfg
+    prompt = _prompts(cfg, [6])[0]
+
+    async def run():
+        core = Engine(cfg, folded, _paged_cfg())
+        server = AsyncServer(core)
+        task = asyncio.ensure_future(server.serve_forever())
+        req = Request(prompt=prompt.copy(), max_new_tokens=12)
+        h = await server.submit(req, timeout=0.0)    # fires next loop turn
+        toks = await h.tokens()
+        server.stop()
+        await task
+        return req, toks
+
+    req, toks = asyncio.run(run())
+    assert req.status is RequestStatus.CANCELLED
+    assert req.finish_reason == "cancelled"
+    assert toks == req.out.tolist()       # stream saw exactly the partial
+
+
+def test_stats_schema_is_frozen(folded_cfg):
+    cfg, folded = folded_cfg
+    eng = Engine(cfg, folded, _paged_cfg())
+    eng.submit(Request(prompt=_prompts(cfg, [6])[0], max_new_tokens=2))
+    eng.poll()
+    s = eng.stats()
+    assert s["schema_version"] == SS.STATS_SCHEMA_VERSION
+    SS.validate_stats(s, paged=True)
+    SS.validate_counters(s["counters"])
+
+    missing = {k: v for k, v in s.items() if k != "pages_free"}
+    with pytest.raises(SS.StatsSchemaError, match="missing"):
+        SS.validate_stats(missing, paged=True)
+    unknown = dict(s, surprise=1)
+    with pytest.raises(SS.StatsSchemaError, match="unknown"):
+        SS.validate_stats(unknown, paged=True)
+    stale = dict(s, schema_version=SS.STATS_SCHEMA_VERSION + 1)
+    with pytest.raises(SS.StatsSchemaError, match="schema_version"):
+        SS.validate_stats(stale, paged=True)
+    bad_counters = {k: v for k, v in s["counters"].items() if k != "ticks"}
+    with pytest.raises(SS.StatsSchemaError, match="ticks"):
+        SS.validate_counters(bad_counters)
+    with pytest.raises(SS.StatsSchemaError, match="router"):
+        SS.validate_router_counters({"bogus": 1}, what="router counters")
+    eng.run()                             # drain so the pool sweeps clean
+    assert eng.alloc.live == 0
+
+
+def test_step_wrapper_and_poll_are_the_same_core(folded_cfg):
+    """`step()` is a thin view over `poll()`: two fresh engines driven
+    through either entry point emit identical tokens."""
+    cfg, folded = folded_cfg
+    prompts = _prompts(cfg, [6, 10])
+
+    def via_step():
+        eng = Engine(cfg, folded, _paged_cfg())
+        reqs = [Request(prompt=p.copy(), max_new_tokens=6) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        while eng.has_work:
+            eng.step()
+        return [r.out.tolist() for r in reqs]
+
+    def via_poll():
+        eng = Engine(cfg, folded, _paged_cfg())
+        reqs = [Request(prompt=p.copy(), max_new_tokens=6) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        toks = {r.rid: [] for r in reqs}
+        while eng.has_work:
+            for ev in eng.poll():
+                if ev.token is not None:
+                    toks[ev.rid].append(ev.token)
+        assert [toks[r.rid] for r in reqs] == [r.out.tolist() for r in reqs]
+        return [r.out.tolist() for r in reqs]
+
+    assert via_step() == via_poll()

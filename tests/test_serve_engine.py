@@ -7,7 +7,8 @@ import pytest
 from repro.configs import smoke_config
 from repro.models import fold as F
 from repro.models import transformer as T
-from repro.serve.engine import Engine, LockstepEngine, Request, make_engine
+from repro.serve.engine import (Engine, EngineConfig, EngineConfigError,
+                                LockstepEngine, Request, make_engine)
 from repro.serve.scheduler import Scheduler
 
 KEY = jax.random.PRNGKey(0)
@@ -79,14 +80,15 @@ def test_continuous_matches_lockstep_token_for_token(layout, kw):
     lens = [3, 11, 6, 17, 5]
     max_news = [4, 6, 5, 3, 6]
 
-    lock = LockstepEngine(cfg, folded, batch_slots=1, max_len=64)
+    lock = LockstepEngine(cfg, folded, EngineConfig(batch_slots=1, max_len=64))
     truth = []
     for r in _mixed_requests(cfg, lens, max_news):
         lock.reset()
         truth.append(lock.generate([r])[0].out.tolist())
 
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64, prefill_bucket=4,
-                 cache_layout=layout, **kw)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                           prefill_bucket=4,
+                                           cache_layout=layout, **kw))
     assert eng.layout == layout
     out = eng.generate(_mixed_requests(cfg, lens, max_news))
     got = [r.out.tolist() for r in out]
@@ -109,7 +111,7 @@ def test_continuous_matches_lockstep_token_for_token(layout, kw):
 def test_engine_streaming_admission_and_determinism():
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64))
 
     def run():
         eng.reset()
@@ -124,7 +126,7 @@ def test_engine_streaming_admission_and_determinism():
 def test_engine_eos_eviction_frees_slot():
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    eng = Engine(cfg, folded, batch_slots=1, max_len=64)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=1, max_len=64))
     # discover the greedy continuation, then rerun with it as the EOS token
     probe = _mixed_requests(cfg, [5, 7], [6, 6], seed=1)
     out = eng.generate(probe)
@@ -134,14 +136,16 @@ def test_engine_eos_eviction_frees_slot():
     reqs[0].eos_token = eos
     out2 = eng.generate(reqs)
     assert out2[0].out.tolist() == out[0].out.tolist()[:3]  # stopped at EOS
+    assert out2[0].finish_reason == "eos"
     assert out2[1].out.tolist() == out[1].out.tolist()      # unaffected
+    assert out2[1].finish_reason == "length"
     assert eng.counters["completed"] == 2
 
 
 def test_engine_rejects_overlong_request():
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    eng = Engine(cfg, folded, batch_slots=1, max_len=16)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=1, max_len=16))
     with pytest.raises(ValueError):
         eng.submit(Request(prompt=np.zeros(12, np.int32), max_new_tokens=8))
 
@@ -149,8 +153,9 @@ def test_engine_rejects_overlong_request():
 def test_paged_rejects_request_larger_than_pool():
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
-                 page_size=4, n_pages=3)         # 2 allocatable pages
+    eng = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged",
+        page_size=4, n_pages=3))                 # 2 allocatable pages
     with pytest.raises(ValueError):
         eng.submit(Request(prompt=np.zeros(10, np.int32), max_new_tokens=4))
 
@@ -173,12 +178,12 @@ def test_paged_prefix_reuse_skips_prefill_and_pages():
                     max_new_tokens=4)
                 for i in range(5)]
 
-    cont = Engine(cfg, folded, batch_slots=2, max_len=64,
-                  cache_layout="contiguous")
+    cont = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                            cache_layout="contiguous"))
     truth = [r.out.tolist() for r in cont.generate(requests(7))]
 
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
-                 page_size=8)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                           cache_layout="paged", page_size=8))
     out = eng.generate(requests(7))
     assert [r.out.tolist() for r in out] == truth
     # first request prefills one-shot; the other four share its prefix pages
@@ -198,8 +203,8 @@ def test_paged_prefix_cache_survives_eviction():
     folded = _folded(cfg)
     rng = np.random.default_rng(3)
     prompt = rng.integers(0, cfg.vocab_size, (17,)).astype(np.int32)
-    eng = Engine(cfg, folded, batch_slots=1, max_len=64, cache_layout="paged",
-                 page_size=8)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=1, max_len=64,
+                                           cache_layout="paged", page_size=8))
     first = eng.generate([Request(prompt=prompt.copy(), max_new_tokens=4)])
     assert eng.counters["prefix_hits"] == 0
     second = eng.generate([Request(prompt=prompt.copy(), max_new_tokens=4)])
@@ -207,33 +212,71 @@ def test_paged_prefix_cache_survives_eviction():
     assert second[0].out.tolist() == first[0].out.tolist()
 
 
-def test_make_engine_warns_on_dropped_kwargs():
-    """make_engine must not silently pop continuous-only kwargs for
-    lockstep archs (musicgen: audio codebooks)."""
+# --- EngineConfig + make_engine surface ---------------------------------------
+
+def _lockstep_cfg_folded():
     cfg = smoke_config("musicgen-medium", n_layers=1)
     params = T.init_params(cfg, KEY)
     amax = T.init_amax(cfg)
     calib = jax.random.randint(KEY, (2, cfg.n_codebooks, 8), 0,
                                cfg.vocab_size)
     _, obs, _ = T.forward(cfg, params, amax, calib)
-    folded = F.fold_params(cfg, params, obs)
+    return cfg, F.fold_params(cfg, params, obs)
+
+
+def test_make_engine_warns_on_dropped_config_fields():
+    """make_engine must not silently reset continuous-only config fields
+    for lockstep archs (musicgen: audio codebooks)."""
+    cfg, folded = _lockstep_cfg_folded()
     with pytest.warns(UserWarning, match="prefill_bucket"):
-        eng = make_engine(cfg, folded, batch_slots=2, max_len=32,
-                          prefill_bucket=8)
+        eng = make_engine(cfg, folded, EngineConfig(
+            batch_slots=2, max_len=32, prefill_bucket=8))
     assert isinstance(eng, LockstepEngine)
     with pytest.warns(UserWarning, match="cache_layout"):
-        make_engine(cfg, folded, batch_slots=2, max_len=32,
-                    cache_layout="paged", page_size=8)
+        make_engine(cfg, folded, EngineConfig(
+            batch_slots=2, max_len=32, cache_layout="paged", page_size=8))
 
 
-def test_make_engine_passes_kwargs_to_continuous():
+def test_make_engine_passes_config_to_continuous():
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    eng = make_engine(cfg, folded, batch_slots=2, max_len=64,
-                      prefill_bucket=4, cache_layout="paged", page_size=8)
+    eng = make_engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, prefill_bucket=4,
+        cache_layout="paged", page_size=8))
     assert isinstance(eng, Engine)
     assert eng.layout == "paged" and eng.page_size == 8
     assert eng.prefill_bucket == 4
+    assert eng.config.page_size == 8
+
+
+def test_legacy_kwargs_shim_deprecated_but_working():
+    """One-release shim: old **kwargs still construct engines behind a
+    DeprecationWarning; unknown names and config+kwargs are errors."""
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = make_engine(cfg, folded, batch_slots=2, max_len=64,
+                          cache_layout="paged", page_size=8)
+    assert isinstance(eng, Engine) and eng.page_size == 8
+    with pytest.raises(TypeError, match="btach_slots"):
+        make_engine(cfg, folded, btach_slots=2)   # typo -> error, not warn
+    with pytest.raises(TypeError, match="not both"):
+        make_engine(cfg, folded, EngineConfig(), batch_slots=2)
+
+
+def test_engine_config_validation_errors():
+    cfg = smoke_config("yi-6b")
+    folded = _folded(cfg)
+    with pytest.raises(EngineConfigError, match="cache_layout"):
+        Engine(cfg, folded, EngineConfig(cache_layout="pagd"))
+    with pytest.raises(EngineConfigError, match="batch_slots"):
+        EngineConfig(batch_slots=0).validate()
+    with pytest.raises(EngineConfigError, match="trash page"):
+        EngineConfig(cache_layout="paged", n_pages=1).validate()
+    # model-dependent: lockstep archs don't take the continuous Engine
+    lcfg, lfolded = _lockstep_cfg_folded()
+    with pytest.raises(EngineConfigError, match="make_engine"):
+        Engine(lcfg, lfolded, EngineConfig(batch_slots=2, max_len=32))
 
 
 @pytest.mark.slow
@@ -245,13 +288,13 @@ def test_continuous_matches_lockstep_hybrid_arch():
     lens = [3, 7]
     max_news = [4, 4]
 
-    lock = LockstepEngine(cfg, folded, batch_slots=1, max_len=32)
+    lock = LockstepEngine(cfg, folded, EngineConfig(batch_slots=1, max_len=32))
     truth = []
     for r in _mixed_requests(cfg, lens, max_news):
         lock.reset()
         truth.append(lock.generate([r])[0].out.tolist())
 
-    eng = Engine(cfg, folded, batch_slots=2, max_len=32)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=32))
     out = eng.generate(_mixed_requests(cfg, lens, max_news))
     assert [r.out.tolist() for r in out] == truth
     assert eng.counters["oneshot_prefills"] == 0
@@ -275,13 +318,15 @@ def test_chunked_matches_oneshot_token_identity(chunk_kw):
     lens = [3, 11, 6, 17, 29, 5]        # 17, 29: several chunks + ragged tail
     max_news = [4, 6, 5, 3, 4, 6]
 
-    oneshot = Engine(cfg, folded, batch_slots=2, max_len=64,
-                     cache_layout="paged", page_size=4)
+    oneshot = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                               cache_layout="paged",
+                                               page_size=4))
     truth = [r.out.tolist()
              for r in oneshot.generate(_mixed_requests(cfg, lens, max_news))]
 
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
-                 page_size=4, **chunk_kw)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                           cache_layout="paged", page_size=4,
+                                           **chunk_kw))
     out = eng.generate(_mixed_requests(cfg, lens, max_news))
     assert [r.out.tolist() for r in out] == truth
     # chunking really happened: more chunk forwards than requests, and the
@@ -299,8 +344,10 @@ def test_chunked_prefill_interleaves_with_decode():
     check the short request emits tokens during those ticks."""
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
-                 page_size=4, max_prefill_chunk=4, max_batched_tokens=6)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                           cache_layout="paged", page_size=4,
+                                           max_prefill_chunk=4,
+                                           max_batched_tokens=6))
     short = Request(prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=12)
     long = Request(prompt=np.arange(5, 38, dtype=np.int32), max_new_tokens=4)
     rid_short = eng.submit(short)
@@ -342,12 +389,14 @@ def test_chunked_prefix_hit_lands_mid_chunk():
     # batch_slots=1 so each sharer is admitted after the previous request
     # completed (and registered) — the hit is then discovered by the
     # first-chunk refresh, not at admission
-    oneshot = Engine(cfg, folded, batch_slots=1, max_len=64,
-                     cache_layout="paged", page_size=8)
+    oneshot = Engine(cfg, folded, EngineConfig(batch_slots=1, max_len=64,
+                                               cache_layout="paged",
+                                               page_size=8))
     truth = [r.out.tolist() for r in oneshot.generate(requests())]
 
-    eng = Engine(cfg, folded, batch_slots=1, max_len=64, cache_layout="paged",
-                 page_size=8, max_prefill_chunk=16)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=1, max_len=64,
+                                           cache_layout="paged", page_size=8,
+                                           max_prefill_chunk=16))
     out = eng.generate(requests())
     assert [r.out.tolist() for r in out] == truth
     # requests 1, 2 hit the registered 3-page (24-row) prefix, which is not
@@ -363,8 +412,10 @@ def test_engine_stats_invariants_every_tick():
     consistency with the queue."""
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64, cache_layout="paged",
-                 page_size=4, max_prefill_chunk=4, max_batched_tokens=8)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                           cache_layout="paged", page_size=4,
+                                           max_prefill_chunk=4,
+                                           max_batched_tokens=8))
     for r in _mixed_requests(cfg, [3, 21, 6, 17, 5], [4, 5, 4, 3, 5]):
         eng.submit(r)
     saw_prefilling = False
@@ -389,10 +440,11 @@ def test_engine_stats_invariants_every_tick():
 def test_chunk_knobs_require_paged_layout():
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    with pytest.raises(AssertionError):
-        Engine(cfg, folded, batch_slots=2, max_len=64,
-               cache_layout="contiguous", max_prefill_chunk=8)
-    with pytest.raises(AssertionError):
-        Engine(cfg, folded, batch_slots=2, max_len=64,
-               cache_layout="paged", page_size=4,
-               max_prefill_chunk=6)      # not page-aligned
+    with pytest.raises(EngineConfigError, match="paged"):
+        Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                         cache_layout="contiguous",
+                                         max_prefill_chunk=8))
+    with pytest.raises(EngineConfigError, match="multiple"):
+        Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                         cache_layout="paged", page_size=4,
+                                         max_prefill_chunk=6))

@@ -21,7 +21,8 @@ from repro.configs import smoke_config
 from repro.launch.mesh import make_tp_mesh
 from repro.models import fold as F
 from repro.models import transformer as T
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import (Engine, EngineConfig,
+                                EngineConfigError, Request)
 
 KEY = jax.random.PRNGKey(0)
 NDEV = len(jax.devices())
@@ -75,9 +76,9 @@ def _ab(cfg, folded, mkreqs, *, tp_kw, max_ticks=3000, **kw):
     """Run unsharded vs sharded on the same workload; outputs AND counters
     must match exactly (counters equality is the rank-agnostic-scheduling
     invariant: the sharded engine made the identical decision sequence)."""
-    ref = Engine(cfg, folded, **kw)
+    ref = Engine(cfg, folded, EngineConfig(**kw))
     out_ref = _drive(ref, mkreqs(), max_ticks=max_ticks)
-    tp = Engine(cfg, folded, **kw, **tp_kw)
+    tp = Engine(cfg, folded, EngineConfig(**kw, **tp_kw))
     out_tp = _drive(tp, mkreqs(), max_ticks=max_ticks)
     assert out_tp == out_ref
     assert tp.counters == ref.counters
@@ -98,8 +99,9 @@ def test_tp4_pool_is_actually_sharded(folded_cfg):
     """Each rank's shard holds Hkv/tp heads of EVERY page — the memory win
     the tentpole exists for, asserted on device buffers, not specs."""
     cfg, folded = folded_cfg
-    eng = Engine(cfg, folded, batch_slots=2, max_len=64,
-                 cache_layout="paged", page_size=4, tp=4)
+    eng = Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                           cache_layout="paged", page_size=4,
+                                           tp=4))
     leaf = eng.cache["slot0"]["k"]       # (n_reps, n_pages, P, Hkv, hd)
     shards = leaf.addressable_shards
     assert len(shards) == 4
@@ -133,7 +135,7 @@ def test_tp4_longprompt_chunked_token_identity(folded_cfg):
                              **kw)
     assert tp.counters["chunked_prefills"] >= 1
     # chunking changes latency, not tokens — sharded chunked == one-shot
-    out_oneshot = _drive(Engine(cfg, folded, **kw), mk())
+    out_oneshot = _drive(Engine(cfg, folded, EngineConfig(**kw)), mk())
     assert out_chunked == out_oneshot
 
 
@@ -146,7 +148,7 @@ def test_tp4_overload_preemption_token_identity(folded_cfg):
     cfg, folded = folded_cfg
     mk = lambda: _requests(cfg, [4, 4], [12, 12])
     kw = dict(batch_slots=2, max_len=64, cache_layout="paged", page_size=4)
-    truth = Engine(cfg, folded, **kw)        # ample default pool
+    truth = Engine(cfg, folded, EngineConfig(**kw))   # ample default pool
     out_truth = _drive(truth, mk())
     assert truth.counters["preemptions"] == 0
     out_starved, _, tp = _ab(cfg, folded, mk, tp_kw=dict(tp=4), n_pages=6,
@@ -159,16 +161,18 @@ def test_tp4_overload_preemption_token_identity(folded_cfg):
 @multi
 def test_tp_rejects_indivisible_heads(folded_cfg):
     cfg, folded = folded_cfg                 # nkv=4: TP=3 can't slice it
-    with pytest.raises(AssertionError, match="n_kv_heads"):
-        Engine(cfg, folded, batch_slots=2, max_len=64,
-               cache_layout="paged", page_size=4, tp=3)
+    with pytest.raises(EngineConfigError, match="n_kv_heads"):
+        Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                         cache_layout="paged", page_size=4,
+                                         tp=3))
 
 
 def test_tp_requires_paged_layout(folded_cfg):
     cfg, folded = folded_cfg
-    with pytest.raises(AssertionError, match="paged"):
-        Engine(cfg, folded, batch_slots=2, max_len=64,
-               cache_layout="contiguous", mesh=make_tp_mesh(1))
+    with pytest.raises(EngineConfigError, match="paged"):
+        Engine(cfg, folded, EngineConfig(batch_slots=2, max_len=64,
+                                         cache_layout="contiguous",
+                                         mesh=make_tp_mesh(1)))
 
 
 def test_tp1_degenerate_shard_map_identity(folded_cfg):
