@@ -25,9 +25,15 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-_DT_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+_DT_BYTES = {"pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2,
              "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
              "s64": 8, "u64": 8, "f64": 8, "token": 0, "u1": 1}
+
+# Ops whose names/metadata carry one of these markers move PACKED int4
+# payloads in u8 carriers (two nibbles per element — the kv4 pool and the
+# int4 weight path pack along the trailing axis), so their u8 buffers are
+# attributed at 0.5 byte/element.  True s4/u4 shapes are always 0.5.
+PACKED_U8_MARKERS = ("_q4", "kv4", "int4_pack", "pack_int4")
 
 _SHAPE_RE = re.compile(
     r"(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
@@ -36,15 +42,16 @@ _COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
-def _shape_bytes(s: str) -> int:
-    total = 0
+def _shape_bytes(s: str, u8_half: bool = False) -> float:
+    total = 0.0
     for m in _SHAPE_RE.finditer(s):
         dt, dims = m.groups()
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DT_BYTES[dt]
+        per = 0.5 if (u8_half and dt == "u8") else _DT_BYTES[dt]
+        total += n * per
     return total
 
 
@@ -117,7 +124,7 @@ def _operands(ls: str, comp: Comp) -> List[str]:
     return ops
 
 
-def analyze(hlo: str) -> Dict:
+def analyze(hlo: str, packed_u8_markers=PACKED_U8_MARKERS) -> Dict:
     comps, entry = parse_computations(hlo)
     # multipliers via BFS from entry
     mult: Dict[str, float] = defaultdict(float)
@@ -168,6 +175,9 @@ def analyze(hlo: str) -> Dict:
             kind = _op_kind(ls)
             if kind is None:
                 continue
+            # packed-int4-in-u8 annotation: attribute this op's u8 buffers
+            # at half a byte per element (nibble-planar payloads)
+            half = any(m in ls for m in packed_u8_markers)
             if kind == "dot":
                 out_dims = _shape_dims(ls.split(" dot(")[0]) or []
                 opnds = _operands(ls, comp)
@@ -185,7 +195,7 @@ def analyze(hlo: str) -> Dict:
                         else 0.0
             if kind in _COLL_KINDS and not ls.startswith("%" + cname):
                 shape_part = ls.split(f" {kind}(")[0]
-                b = _shape_bytes(shape_part)
+                b = _shape_bytes(shape_part, half)
                 coll[kind]["count"] += f
                 coll[kind]["bytes"] += f * b
             if not fused and kind not in (
@@ -197,11 +207,11 @@ def analyze(hlo: str) -> Dict:
                 # Fusions are classified by XLA's root-op naming so that a
                 # slice-fusion reading one layer from a loop-carried stacked
                 # tensor is charged the slice, not the whole stack.
-                res_b = _shape_bytes(ls.split(" " + kind + "(")[0])
+                res_b = _shape_bytes(ls.split(" " + kind + "(")[0], half)
                 name = ls.split(" = ")[0]
 
                 def opnds_b():
-                    return [_shape_bytes(comp.shapes.get(o, ""))
+                    return [_shape_bytes(comp.shapes.get(o, ""), half)
                             for o in _operands(ls, comp)]
 
                 if kind == "dynamic-update-slice" or (

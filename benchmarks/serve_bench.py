@@ -520,6 +520,120 @@ def bench_overload(args, cfg, folded, Request):
     return 0
 
 
+def _first_divergence(a, b):
+    """Index of the first differing token between two per-request output
+    lists, or -1 if identical (length difference counts at the shorter
+    length)."""
+    for i, (x, y) in enumerate(zip(a, b)):
+        if x != y:
+            return i
+    return -1 if len(a) == len(b) else min(len(a), len(b))
+
+
+def bench_kv4(args, cfg, folded, Request):
+    """--kv-bits 4: int8 vs int4-packed paged KV pool A/B on the plain
+    Poisson AND shared-prefix workloads.  The kv4 engine gets the SAME
+    POOL BYTE BUDGET as the int8 engine — which buys it ~2x the pages
+    (nibble-packed payloads + two fp32 per-page scales).
+
+    kv4 is a QUALITY contract, not an identity contract: greedy outputs
+    may diverge from int8 once a page's shared scale clips a code, so the
+    first-divergence token index per request is REPORTED (never gated).
+    What is gated: the packed pool must fit >= 1.5x more pages in the
+    int8 byte budget, and tok/s must hold against the committed baseline
+    (check_regression.py)."""
+    from repro.serve.engine import Engine, EngineConfig
+
+    lengths = [int(x) for x in args.lengths.split(",")]
+    rows = []
+    artifact = dict(
+        bench="serve_kv4", arch=cfg.name, slots=args.slots,
+        requests=args.requests, lengths=lengths,
+        prefix_len=args.prefix_len, page_size=args.page_size,
+        seed=args.seed)
+    worst_headroom = float("inf")
+
+    for wl in ("plain", "prefix"):
+        prefix_len = args.prefix_len if wl == "prefix" else 0
+        max_len = prefix_len + max(lengths) + args.max_new_hi + 1
+        r_arrival, _, r_prefix = _rng_streams(args.seed)
+        work = make_workload(r_arrival, args.requests, lengths, args.rate,
+                             (args.max_new_lo, args.max_new_hi),
+                             prefix_len=prefix_len)
+        prefix = (r_prefix.integers(0, cfg.vocab_size, (prefix_len,))
+                  .astype(np.int32) if prefix_len else None)
+
+        def fresh():
+            _, r_prompt, _ = _rng_streams(args.seed)
+            return build_requests(Request, r_prompt, work, cfg.vocab_size,
+                                  prefix=prefix)
+
+        n_tok = sum(w["max_new"] for w in work)
+        # int8 reference: ample auto pool.  Its byte budget defines the
+        # kv4 pool: same bytes, more (packed) pages.
+        eng8 = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size))
+        budget = eng8.alloc.pool_bytes
+        probe = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size, kv_bits=4, n_pages=2))
+        bpp4 = probe.alloc.bytes_per_page
+        eng4 = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size, kv_bits=4,
+            n_pages=budget // bpp4 + 1))
+
+        outs, wrec = {}, dict(
+            bytes_per_page_kv8=eng8.alloc.bytes_per_page,
+            bytes_per_page_kv4=bpp4,
+            pool_bytes_budget=budget,
+            pool_capacity_kv8=eng8.alloc.capacity,
+            pool_capacity_kv4=eng4.alloc.capacity)
+        for name, eng in (("kv8", eng8), ("kv4", eng4)):
+            lat = {}
+            out, secs = _timed(run_continuous, eng, fresh, work, lat=lat)
+            outs[name] = [r.out.tolist() for r in out]
+            tps = n_tok / secs
+            rows.append((f"serve/{wl}_{name}_tok_per_s", tps,
+                         f"wall={secs:.2f}s"))
+            wrec[name] = dict(tok_per_s=round(tps, 2),
+                              peak_pages=eng.counters["cache_pages_peak"],
+                              **latency_summary(work, lat),
+                              engine_counters=dict(eng.counters))
+
+        headroom = eng4.alloc.capacity / eng8.alloc.capacity
+        worst_headroom = min(worst_headroom, headroom)
+        div = [_first_divergence(a, b)
+               for a, b in zip(outs["kv4"], outs["kv8"])]
+        diverged = [d for d in div if d >= 0]
+        wrec.update(
+            pages_headroom=round(headroom, 3),
+            kv4_matches_int8=not diverged,
+            first_divergence_token=div,
+            min_first_divergence=min(diverged) if diverged else -1,
+            diverged_requests=len(diverged))
+        rows.append((f"serve/{wl}_kv4_pages_headroom", headroom,
+                     f"capacity {eng4.alloc.capacity} vs "
+                     f"{eng8.alloc.capacity} in {budget} bytes"))
+        rows.append((f"serve/{wl}_kv4_diverged_requests", len(diverged),
+                     f"of {len(div)}; first_token="
+                     f"{min(diverged) if diverged else -1}"))
+        artifact[wl] = wrec
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
+
+    if worst_headroom < 1.5:
+        print(f"ERROR: kv4 page headroom {worst_headroom:.2f}x < 1.5x — "
+              "the packed pool is not paying for itself", file=sys.stderr)
+        return 1
+    return 0
+
+
 def run_serve(router, requests, work, info=None):
     """Virtual-time driver for the ReplicaRouter (same event-driven core
     the asyncio server polls): submit each request at its arrival tick,
@@ -761,6 +875,8 @@ def bench(args):
 
     if args.tp:
         return bench_tp(args, cfg, folded, Request)
+    if args.kv_bits == 4:
+        return bench_kv4(args, cfg, folded, Request)
     if args.serve or args.workload == "bursty":
         return bench_serve(args, cfg, folded, Request)
     if args.workload == "longprompt":
@@ -921,6 +1037,12 @@ def main():
     ap.add_argument("--prefix-len", type=int, default=96,
                     help="shared system-prompt length (prefix workload)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-bits", type=int, default=8, choices=[8, 4],
+                    dest="kv_bits",
+                    help="4: int8-vs-int4-packed KV pool A/B at the same "
+                         "pool byte budget (plain + prefix workloads; "
+                         "quality divergence reported, page headroom "
+                         "gated at 1.5x)")
     ap.add_argument("--rate", type=float, default=0.25,
                     help="Poisson arrival rate (requests per engine tick)")
     ap.add_argument("--max-new-lo", type=int, default=8)

@@ -79,3 +79,65 @@ def packed_nbytes(shape, axis: int = -1) -> int:
     for i, d in enumerate(shape):
         n *= d // 2 if i == axis % len(shape) else d
     return n
+
+
+# --- int4-packed KV pages (shared scale per page) ------------------------------
+#
+# The serving KV pool stores int8 codes; at ``kv_bits=4`` each page is
+# re-quantized to signed 4-bit codes under ONE shared fp32 scale per page
+# and nibble-packed planar along the head dim (pages hold half the bytes).
+# The helpers below define the quantize/dequantize contract that the write
+# path (models/serve_int.py), the fused-dequant attention kernels, and the
+# bit-exact oracles (kernels/ref.py) all share: any drift between them
+# breaks the kernel-vs-oracle equality tests.
+
+KV4_QMAX = 7  # symmetric int4 target range: codes in [-7, 7] (+-8 unused
+              # by the scale so dequant round-trips the extremes exactly)
+
+
+def kv_page_scale(codes_i8: jax.Array) -> jax.Array:
+    """Shared dequant scale for one page of int8 KV codes.
+
+    ``max(amax(|codes|), 1) / 7`` — the ``max(.., 1)`` keeps an all-zero
+    page (trash page, never-written tail rows) at a well-defined scale
+    instead of dividing by zero.  fp32 scalar.
+    """
+    amax = jnp.max(jnp.abs(codes_i8.astype(jnp.int32)))
+    return jnp.maximum(amax, 1).astype(jnp.float32) / KV4_QMAX
+
+
+def quantize_kv_page(codes_i8: jax.Array, scale: jax.Array,
+                     axis: int = -1) -> jax.Array:
+    """int8 KV codes -> planar nibble-packed uint8 under a shared scale.
+
+    ``c4 = clip(round(c8 / scale), -8, 7)``, then ``pack_int4_planar`` along
+    ``axis`` (the head dim for the KV pool) — the packed axis halves.
+    """
+    c4 = jnp.clip(jnp.round(codes_i8.astype(jnp.float32) / scale), -8, 7)
+    return pack_int4_planar(c4.astype(jnp.int8), axis=axis)
+
+
+def dequant_int4_codes(c4_i8: jax.Array, scale: jax.Array) -> jax.Array:
+    """int4 codes (in int8 storage) -> int8 codes: clip(round(c4*scale)).
+
+    THE dequant formula: the Pallas kernels fuse exactly this (sign-extend,
+    fp32 multiply by the page scale, round, clip) into their inner loop.
+    """
+    y = jnp.round(c4_i8.astype(jnp.float32) * scale)
+    return jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+def dequantize_kv_page(packed_u8: jax.Array, scale: jax.Array,
+                       axis: int = -1) -> jax.Array:
+    """Inverse of ``quantize_kv_page`` (lossy at 4 bits): unpack + dequant."""
+    return dequant_int4_codes(unpack_int4_planar(packed_u8, axis=axis), scale)
+
+
+def dequantize_kv_pool(packed_pool_u8: jax.Array,
+                       page_scales: jax.Array) -> jax.Array:
+    """Whole-pool dequant: (n_pages, P, Hkv, hd//2) uint8 + (n_pages,) fp32
+    -> (n_pages, P, Hkv, hd) int8.  Used by the jnp fallback paths and the
+    kernel oracles — NOT by the Pallas kernels, which dequantize per tile
+    in VMEM and never materialize this view."""
+    c4 = unpack_int4_planar(packed_pool_u8, axis=-1)
+    return dequant_int4_codes(c4, page_scales[:, None, None, None])

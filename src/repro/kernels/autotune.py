@@ -1,0 +1,163 @@
+"""Per-shape tile-size selection for the attention kernels.
+
+``benchmarks/roofline.py`` and ``benchmarks/hlo_cost.py`` can price a kernel
+but fed no kernel decisions until now: the decode kernel always ran
+``bkv=512`` and the paged prefill kernel ``bq=128`` regardless of batch
+size, page size, head geometry, or KV bit width.  This module closes the
+loop with a tiny roofline-derived cost table:
+
+* ``decode_bkv(...)``  — KV tile length for the contiguous decode kernel.
+* ``prefill_bq(...)``  — q-block length for the paged prefill kernel.
+
+Selections are cached per shape key, overridable by environment
+(``REPRO_DECODE_BKV`` / ``REPRO_PREFILL_BQ`` pin a value,
+``REPRO_AUTOTUNE=off`` restores the legacy fixed defaults), and — because
+the paged kernels' dead-block clamping makes their outputs tile-size
+independent (see the kernel docstrings) — NEVER change numerics: autotune
+moves DMA/grid overhead around, not bits.
+
+The cost model mirrors ``benchmarks/roofline.py``'s v4-lite ceilings.  A
+grid step costs ``max(tile_bytes / HBM_BW, tile_flops / PEAK_INT8)`` plus a
+fixed per-step overhead (DMA issue + grid bookkeeping); fewer, larger steps
+amortize the overhead until the double-buffered tiles overflow the VMEM
+budget.  For prefill, every KV page is streamed once per (head, q-block),
+so the KV traffic itself scales with ``ceil(sq / bq)`` — the dominant term
+for long chains at big batch.
+
+``measure_best`` is the optional measured mode: given a timer it races the
+candidate set and caches the winner under the same key/override discipline
+(used by benchmarks; the serving path sticks to the analytic table so cold
+starts pay no compile storm).
+"""
+from __future__ import annotations
+
+import os
+
+# v4-lite ceilings — keep in sync with benchmarks/roofline.py (that module
+# sits outside the package, so the constants are mirrored, not imported).
+PEAK_INT8_FLOPS = 197e12     # int8 MXU ops/s
+HBM_BW = 819e9               # bytes/s
+VMEM_BUDGET = 16 * 2**20     # bytes/core
+VMEM_FILL = 0.5              # leave headroom for double-buffering + scratch
+STEP_OVERHEAD_S = 2e-6       # DMA issue + grid step bookkeeping
+
+DECODE_BKV_CANDIDATES = (128, 256, 512, 1024)
+PREFILL_BQ_CANDIDATES = (32, 64, 128, 256)
+
+DEFAULT_DECODE_BKV = 512     # legacy fixed defaults (REPRO_AUTOTUNE=off)
+DEFAULT_PREFILL_BQ = 128
+
+_cache: dict = {}
+
+
+def clear_cache() -> None:
+    _cache.clear()
+
+
+def _mode() -> str:
+    return os.environ.get("REPRO_AUTOTUNE", "roofline")
+
+
+def _env_int(name: str):
+    v = os.environ.get(name)
+    return int(v) if v else None
+
+
+def _fit(c: int, n: int) -> int:
+    """Largest divisor of ``n`` that is <= c (mirrors divisor_tile)."""
+    c = min(c, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _kv_bytes(hd: int, kv_bits: int) -> float:
+    return hd * (0.5 if kv_bits == 4 else 1.0)
+
+
+def decode_bkv(smax: int, *, batch_slots: int, hkv: int, hd: int,
+               kv_bits: int = 8) -> int:
+    """KV tile length for the contiguous decode kernel at this shape."""
+    env = _env_int("REPRO_DECODE_BKV")
+    if env:
+        return _fit(env, smax)
+    if _mode() == "off":
+        return _fit(DEFAULT_DECODE_BKV, smax)
+    key = ("decode_bkv", batch_slots, hkv, hd, smax, kv_bits)
+    got = _cache.get(key)
+    if got is None:
+        got = _roofline_pick(
+            DECODE_BKV_CANDIDATES, smax,
+            tile_bytes=lambda bkv: 2 * bkv * _kv_bytes(hd, kv_bits),
+            tile_flops=lambda bkv: 2 * 2 * bkv * hd,       # QK^T + P@V
+            steps=lambda bkv: batch_slots * hkv * (smax // bkv),
+        )
+        _cache[key] = got
+    return got
+
+
+def prefill_bq(sq: int, *, batch_slots: int, page_size: int, hkv: int,
+               hd: int, kv_bits: int = 8, n_blocks: int = 1,
+               n_heads: int | None = None) -> int:
+    """q-block length for the paged prefill kernel at this shape.
+
+    Safe to vary freely: block-level causal skipping makes the kernel
+    output bq-independent, so two engines tuned differently still agree
+    bit-for-bit.
+    """
+    env = _env_int("REPRO_PREFILL_BQ")
+    if env:
+        return _fit(env, sq)
+    if _mode() == "off":
+        return _fit(DEFAULT_PREFILL_BQ, sq)
+    h = n_heads or hkv
+    key = ("prefill_bq", batch_slots, page_size, hkv, hd, sq, kv_bits,
+           n_blocks, h)
+    got = _cache.get(key)
+    if got is None:
+        kvb = page_size * _kv_bytes(hd, kv_bits)
+        got = _roofline_pick(
+            PREFILL_BQ_CANDIDATES, sq,
+            # each page streams once per (head, q-block): q tile + KV page
+            tile_bytes=lambda bq: bq * hd + 2 * kvb,
+            tile_flops=lambda bq: 2 * 2 * bq * page_size * hd,
+            steps=lambda bq: batch_slots * h * (sq // bq) * n_blocks,
+            extra_vmem=lambda bq: 2 * bq * hd * 4,          # fp32 scratch
+        )
+        _cache[key] = got
+    return got
+
+
+def _roofline_pick(candidates, n, *, tile_bytes, tile_flops, steps,
+                   extra_vmem=lambda c: 0) -> int:
+    """Pick the candidate minimizing modeled wall time within VMEM budget."""
+    best, best_t = None, None
+    for raw in candidates:
+        c = _fit(raw, n)
+        # double-buffered in/out tiles must fit the fill fraction of VMEM
+        if 2 * tile_bytes(c) + extra_vmem(c) > VMEM_BUDGET * VMEM_FILL:
+            continue
+        t = steps(c) * (STEP_OVERHEAD_S +
+                        max(tile_bytes(c) / HBM_BW,
+                            tile_flops(c) / PEAK_INT8_FLOPS))
+        if best_t is None or t < best_t or (t == best_t and c > best):
+            best, best_t = c, t
+    if best is None:                      # every candidate overflowed VMEM
+        best = _fit(candidates[0], n)
+    return best
+
+
+def measure_best(candidates, timer, *, key=None):
+    """Measured mode: time ``timer(candidate)`` (seconds) over the candidate
+    set and cache the argmin under ``key``.  Used by benchmarks; returns the
+    winning candidate."""
+    if key is not None and key in _cache:
+        return _cache[key]
+    best, best_t = None, None
+    for c in candidates:
+        t = timer(c)
+        if best_t is None or t < best_t:
+            best, best_t = c, t
+    if key is not None:
+        _cache[key] = best
+    return best

@@ -40,8 +40,33 @@ from repro.kernels.quant_softmax import lut_lookup
 NEG_INIT = -(1 << 30)
 
 
-def _decode_kernel(g, bkv, len_ref, q_ref, k_ref, v_ref, lut_ref, mi_ref,
-                   si_ref, inv_ref, osc_ref, o_ref, m_scr, den_scr, acc_scr):
+def _kv_load_i8(k_ref, v_ref, b_i, k_i):
+    """Default KV tile loader: the pool already holds int8 codes."""
+    return k_ref[0, :, 0], v_ref[0, :, 0]
+
+
+def dequant_kv_tile(w_u8, scale):
+    """Fused in-VMEM dequant of one nibble-planar int4 KV tile.
+
+    (rows, D//2) uint8 -> (rows, D) int8: sign-extend both nibble planes
+    (same branch-free ``(x ^ 8) - 8`` as ``int4_matmul``/``core.packing``),
+    concatenate along the head dim (planar layout), multiply by the page's
+    shared fp32 scale, round, clip.  Bit-identical to
+    ``packing.dequantize_kv_page`` — the oracles depend on it."""
+    w = w_u8.astype(jnp.int32)
+    lo = ((w & 15) ^ 8) - 8
+    hi = (((w >> 4) & 15) ^ 8) - 8
+    c4 = jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+    return jnp.clip(jnp.round(c4 * scale), -127, 127).astype(jnp.int8)
+
+
+def _decode_body(g, bkv, kv_load, len_ref, q_ref, k_ref, v_ref, lut_ref,
+                 mi_ref, si_ref, inv_ref, osc_ref, o_ref, m_scr, den_scr,
+                 acc_scr):
+    # shared datapath of every decode-attention variant: the int8 and the
+    # int4-packed kernels differ ONLY in ``kv_load`` (identity load vs
+    # fused nibble dequant), so the int8 path stays byte-identical and the
+    # packed path inherits the oracle-exact accumulation order for free
     b_i = pl.program_id(0)
     k_i = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -61,8 +86,7 @@ def _decode_kernel(g, bkv, len_ref, q_ref, k_ref, v_ref, lut_ref, mi_ref,
     @pl.when(live)
     def _block():
         q = q_ref[0, 0]                           # (G, D) int8 — whole group
-        k = k_ref[0, :, 0]                        # (bkv, D) int8
-        v = v_ref[0, :, 0]
+        k, v = kv_load(k_ref, v_ref, b_i, k_i)    # (bkv, D) int8 each
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.int32)  # (G, bkv)
         kpos = k_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (g, bkv), 1)
@@ -88,6 +112,10 @@ def _decode_kernel(g, bkv, len_ref, q_ref, k_ref, v_ref, lut_ref, mi_ref,
         den = jnp.maximum(den_scr[:, :1], 1.0)
         o = acc_scr[...] / den * osc_ref[0]
         o_ref[0, 0] = jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
+
+
+def _decode_kernel(g, bkv, len_ref, *rest):
+    _decode_body(g, bkv, _kv_load_i8, len_ref, *rest)
 
 
 @functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
@@ -225,6 +253,97 @@ def paged_decode_qattention(
     )(jnp.asarray(lengths, jnp.int32).reshape(-1),
       jnp.asarray(block_tables, jnp.int32),
       q_i8, k_pool, v_pool, lut_q7,
+      jnp.asarray(M_idx, jnp.int32).reshape(1),
+      jnp.asarray(shift_idx, jnp.int32).reshape(1),
+      jnp.asarray(inv_s_logit, jnp.float32).reshape(1),
+      jnp.asarray(out_scale, jnp.float32).reshape(1))
+
+
+def _paged_decode_q4_kernel(g, psize, len_ref, btab_ref, q_ref, k_ref, v_ref,
+                            lut_ref, ks_ref, vs_ref, mi_ref, si_ref, inv_ref,
+                            osc_ref, o_ref, m_scr, den_scr, acc_scr):
+    # int4-packed pool: the KV tile arrives as (psize, D//2) planar nibbles;
+    # dequant happens here in VMEM under the page's shared scale (looked up
+    # through the block table — for a live step the clamped index map loaded
+    # exactly page btab[b, k], so scale and payload always agree)
+    def load(kr, vr, b_i, k_i):
+        pg = btab_ref[b_i, k_i]
+        return (dequant_kv_tile(kr[0, :, 0], ks_ref[pg]),
+                dequant_kv_tile(vr[0, :, 0], vs_ref[pg]))
+
+    _decode_body(g, psize, load, len_ref, q_ref, k_ref, v_ref, lut_ref,
+                 mi_ref, si_ref, inv_ref, osc_ref, o_ref, m_scr, den_scr,
+                 acc_scr)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_qattention_q4(
+    q_i8: jax.Array,          # int8 (B, Hkv, G, D) — one token/slot, grouped q
+    k_pool: jax.Array,        # uint8 (n_pages, P, Hkv, D//2) — packed pool
+    v_pool: jax.Array,
+    k_scale: jax.Array,       # fp32 (n_pages,): shared dequant scale per page
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # int32 (B, max_blocks): slot -> pool pages
+    lengths: jax.Array,       # int32 (B,): valid rows per slot
+    M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+    *, interpret: bool = False,
+) -> jax.Array:
+    """Paged decode attention over the int4-PACKED page pool: identical
+    grid/clamping/datapath to ``paged_decode_qattention``, but each page
+    streams HBM->VMEM at half the bytes (nibble-planar uint8 along the head
+    dim) and is dequantized inside the kernel body under its shared fp32
+    scale — exactly the fused-unpack idiom ``int4_matmul`` uses for
+    weights; no dequantized KV view ever materializes in HBM.  Bit-exact
+    vs ``ref.py::paged_decode_qattention_q4_ref``."""
+    b, hkv, g, d = q_i8.shape
+    psize = k_pool.shape[1]
+    dp = k_pool.shape[3]                          # D//2 packed bytes
+    assert dp * 2 == d, (dp, d)
+    nb = block_tables.shape[1]
+    grid = (b, hkv, nb)
+    kernel = functools.partial(_paged_decode_q4_kernel, g, psize)
+
+    def kv_map(bb, h, k, lens, btab):
+        last_live = jnp.maximum((lens[bb] - 1) // psize, 0)
+        return (btab[bb, jnp.minimum(k, last_live)], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # lengths, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bb, h, k, lens, btab: (bb, h, 0, 0)),
+            pl.BlockSpec((1, psize, 1, dp), kv_map),
+            pl.BlockSpec((1, psize, 1, dp), kv_map),
+            pl.BlockSpec((LUT_SIZE,), lambda bb, h, k, lens, btab: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # k page scales
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # v page scales
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, h, k, lens, btab: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.int32),     # running max (col-broadcast)
+            pltpu.VMEM((g, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((g, d), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.int8),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32).reshape(-1),
+      jnp.asarray(block_tables, jnp.int32),
+      q_i8, k_pool, v_pool, lut_q7,
+      jnp.asarray(k_scale, jnp.float32).reshape(-1),
+      jnp.asarray(v_scale, jnp.float32).reshape(-1),
       jnp.asarray(M_idx, jnp.int32).reshape(1),
       jnp.asarray(shift_idx, jnp.int32).reshape(1),
       jnp.asarray(inv_s_logit, jnp.float32).reshape(1),

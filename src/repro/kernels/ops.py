@@ -109,20 +109,26 @@ def layernorm_q(x_i8, p: QLNParams, *, eps_codes: int = 1, impl=None):
 
 def decode_attention_q(
     q_i8, k_i8, v_i8, lengths, M_idx, shift_idx, lut_q7, inv_s_logit,
-    out_scale, *, bkv: int = 512, impl=None,
+    out_scale, *, bkv: Optional[int] = None, impl=None,
 ):
     """Continuous-batching decode attention with per-slot length masking.
 
     (B, Hkv, G, D) grouped queries x (B, Smax, Hkv, D) cache-native int8 KV
     -> (B, Hkv, G, D) int8 context.  ref backend = row oracle (exact);
     pallas = the batched single-query flash kernel (skips KV blocks past
-    each slot's length).
+    each slot's length).  ``bkv=None`` (the default) lets
+    ``kernels/autotune.py`` pick the KV tile from the roofline cost table
+    for this shape; pass an int to pin it.
     """
     b = backend(impl)
     if b == "ref":
         return _ref.decode_qattention_ref(
             q_i8, k_i8.transpose(0, 2, 1, 3), v_i8.transpose(0, 2, 1, 3),
             lengths, M_idx, shift_idx, lut_q7, out_scale)
+    if bkv is None:
+        from repro.kernels import autotune
+        bsz, smax, hkv, hd = k_i8.shape
+        bkv = autotune.decode_bkv(smax, batch_slots=bsz, hkv=hkv, hd=hd)
     from repro.kernels.decode_attention import decode_qattention
     return decode_qattention(q_i8, k_i8, v_i8, lengths, M_idx, shift_idx,
                              lut_q7, inv_s_logit, out_scale, bkv=bkv,
@@ -157,9 +163,32 @@ def paged_decode_attention_q(
         lut_q7, inv_s_logit, out_scale, interpret=(b == "interpret"))
 
 
+def paged_decode_attention_q4(
+    q_i8, k_pool_u8, v_pool_u8, k_scale, v_scale, block_tables, lengths,
+    M_idx, shift_idx, lut_q7, inv_s_logit, out_scale, *, impl=None,
+):
+    """Paged decode attention over the int4-PACKED page pool.
+
+    Same contract as ``paged_decode_attention_q`` but the pool leaves are
+    (n_pages, P, Hkv, D//2) uint8 nibble-planar with (n_pages,) fp32 shared
+    scales per page; the pallas backend fuses dequant into the kernel's
+    inner loop (half the HBM bytes per page), the ref backend dequantizes
+    the whole pool and runs the int8 oracle — bit-exact either way."""
+    b = backend(impl)
+    if b == "ref":
+        return _ref.paged_decode_qattention_q4_ref(
+            q_i8, k_pool_u8, v_pool_u8, k_scale, v_scale, block_tables,
+            lengths, M_idx, shift_idx, lut_q7, inv_s_logit, out_scale)
+    from repro.kernels.decode_attention import paged_decode_qattention_q4
+    return paged_decode_qattention_q4(
+        q_i8, k_pool_u8, v_pool_u8, k_scale, v_scale, block_tables, lengths,
+        M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+        interpret=(b == "interpret"))
+
+
 def paged_prefill_attention_q(
     q_i8, k_pool, v_pool, block_tables, pos0, M_idx, shift_idx, lut_q7,
-    inv_s_logit, out_scale, *, bq: int = 128, impl=None,
+    inv_s_logit, out_scale, *, bq: Optional[int] = None, impl=None,
 ):
     """Paged chunked-prefill attention.
 
@@ -173,16 +202,52 @@ def paged_prefill_attention_q(
     pool.  Under tensor parallelism the caller passes the rank-local head
     slice with the block table replicated (see paged_decode_attention_q);
     the chunk is the cross-rank work-division unit — every rank walks the
-    same chunk over its own heads."""
+    same chunk over its own heads.  ``bq=None`` (the default) lets
+    ``kernels/autotune.py`` pick the q-block from the roofline cost table
+    for this shape (output is bq-independent, so tuning never moves bits);
+    pass an int to pin it."""
     b = backend(impl)
     if b == "ref":
         return _ref.paged_prefill_qattention_ref(
             q_i8, k_pool, v_pool, block_tables, pos0, M_idx, shift_idx,
             lut_q7, inv_s_logit, out_scale)
+    if bq is None:
+        bq = _autotuned_bq(q_i8, k_pool, block_tables, kv_bits=8)
     from repro.kernels.prefill_attention import paged_prefill_qattention
     return paged_prefill_qattention(
         q_i8, k_pool, v_pool, block_tables, pos0, M_idx, shift_idx, lut_q7,
         inv_s_logit, out_scale, bq=bq, interpret=(b == "interpret"))
+
+
+def _autotuned_bq(q_i8, k_pool, block_tables, *, kv_bits: int) -> int:
+    from repro.kernels import autotune
+    bsz, h, sq, hd = q_i8.shape
+    return autotune.prefill_bq(
+        sq, batch_slots=bsz, page_size=k_pool.shape[1],
+        hkv=k_pool.shape[2], hd=hd, kv_bits=kv_bits,
+        n_blocks=block_tables.shape[1], n_heads=h)
+
+
+def paged_prefill_attention_q4(
+    q_i8, k_pool_u8, v_pool_u8, k_scale, v_scale, block_tables, pos0,
+    M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+    *, bq: Optional[int] = None, impl=None,
+):
+    """Paged chunked-prefill attention over the int4-PACKED page pool (see
+    ``paged_decode_attention_q4`` for the packed-pool contract and
+    ``paged_prefill_attention_q`` for the prefill semantics)."""
+    b = backend(impl)
+    if b == "ref":
+        return _ref.paged_prefill_qattention_q4_ref(
+            q_i8, k_pool_u8, v_pool_u8, k_scale, v_scale, block_tables,
+            pos0, M_idx, shift_idx, lut_q7, inv_s_logit, out_scale)
+    if bq is None:
+        bq = _autotuned_bq(q_i8, k_pool_u8, block_tables, kv_bits=4)
+    from repro.kernels.prefill_attention import paged_prefill_qattention_q4
+    return paged_prefill_qattention_q4(
+        q_i8, k_pool_u8, v_pool_u8, k_scale, v_scale, block_tables, pos0,
+        M_idx, shift_idx, lut_q7, inv_s_logit, out_scale, bq=bq,
+        interpret=(b == "interpret"))
 
 
 def attention_q(

@@ -46,9 +46,14 @@ from repro.kernels.quant_softmax import lut_lookup
 NEG_INIT = -(1 << 30)
 
 
-def _paged_prefill_kernel(bq, psize, pos0_ref, btab_ref, q_ref, k_ref, v_ref,
-                          lut_ref, mi_ref, si_ref, inv_ref, osc_ref, o_ref,
-                          m_scr, den_scr, acc_scr):
+def _kv_load_i8(k_ref, v_ref, b_i, k_i):
+    """Default int8 page load: the pool tile IS the code tile."""
+    return k_ref[0, :, 0], v_ref[0, :, 0]
+
+
+def _prefill_body(bq, psize, kv_load, pos0_ref, q_ref, k_ref, v_ref,
+                  lut_ref, mi_ref, si_ref, inv_ref, osc_ref, o_ref,
+                  m_scr, den_scr, acc_scr):
     b_i = pl.program_id(0)
     q_i = pl.program_id(2)
     k_i = pl.program_id(3)
@@ -69,8 +74,7 @@ def _paged_prefill_kernel(bq, psize, pos0_ref, btab_ref, q_ref, k_ref, v_ref,
     @pl.when(live)
     def _block():
         q = q_ref[0, 0]                       # (bq, D) int8
-        k = k_ref[0, :, 0]                    # (psize, D) int8 — one page
-        v = v_ref[0, :, 0]
+        k, v = kv_load(k_ref, v_ref, b_i, k_i)   # (psize, D) int8 — one page
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.int32)  # (bq,P)
         qpos = pos0 + q_i * bq + \
@@ -99,6 +103,11 @@ def _paged_prefill_kernel(bq, psize, pos0_ref, btab_ref, q_ref, k_ref, v_ref,
         den = jnp.maximum(den_scr[:, :1], 1.0)
         o = acc_scr[...] / den * osc_ref[0]
         o_ref[0, 0] = jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
+
+
+def _paged_prefill_kernel(bq, psize, pos0_ref, btab_ref, *rest):
+    # int8 pool: the block table is consumed only by the index map
+    _prefill_body(bq, psize, _kv_load_i8, pos0_ref, *rest)
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
@@ -168,6 +177,103 @@ def paged_prefill_qattention(
     )(jnp.asarray(pos0, jnp.int32).reshape(-1),
       jnp.asarray(block_tables, jnp.int32),
       q_i8, k_pool, v_pool, lut_q7,
+      jnp.asarray(M_idx, jnp.int32).reshape(1),
+      jnp.asarray(shift_idx, jnp.int32).reshape(1),
+      jnp.asarray(inv_s_logit, jnp.float32).reshape(1),
+      jnp.asarray(out_scale, jnp.float32).reshape(1))
+
+
+def _paged_prefill_q4_kernel(bq, psize, pos0_ref, btab_ref, q_ref, k_ref,
+                             v_ref, lut_ref, ks_ref, vs_ref, mi_ref, si_ref,
+                             inv_ref, osc_ref, o_ref, m_scr, den_scr,
+                             acc_scr):
+    from repro.kernels.decode_attention import dequant_kv_tile
+
+    # int4-packed pool: dequantize the half-width page tile in VMEM under
+    # its shared scale (a live block's index map loaded exactly page
+    # btab[b, k], so btab_ref[b_i, k_i] names the scale of the loaded tile)
+    def load(kr, vr, b_i, k_i):
+        pg = btab_ref[b_i, k_i]
+        return (dequant_kv_tile(kr[0, :, 0], ks_ref[pg]),
+                dequant_kv_tile(vr[0, :, 0], vs_ref[pg]))
+
+    _prefill_body(bq, psize, load, pos0_ref, q_ref, k_ref, v_ref, lut_ref,
+                  mi_ref, si_ref, inv_ref, osc_ref, o_ref, m_scr, den_scr,
+                  acc_scr)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def paged_prefill_qattention_q4(
+    q_i8: jax.Array,          # int8 (B, H, S, D) — chunk queries, ungrouped
+    k_pool: jax.Array,        # uint8 (n_pages, P, Hkv, D//2) — packed pool
+    v_pool: jax.Array,
+    k_scale: jax.Array,       # fp32 (n_pages,): shared dequant scale per page
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # int32 (B, max_blocks): slot -> pool pages
+    pos0: jax.Array,          # int32 (B,): page-aligned chunk start per slot
+    M_idx, shift_idx, lut_q7, inv_s_logit, out_scale,
+    *, bq: int = 128, interpret: bool = False,
+) -> jax.Array:
+    """Chunked-prefill attention over the int4-PACKED page pool: the same
+    grid/frontier clamping/datapath as ``paged_prefill_qattention``, with
+    each pool page streamed HBM->VMEM at half the bytes and dequantized
+    in-kernel under its shared fp32 page scale.  Bit-exact vs
+    ``ref.py::paged_prefill_qattention_q4_ref``."""
+    b, h, sq, d = q_i8.shape
+    psize = k_pool.shape[1]
+    hkv = k_pool.shape[2]
+    dp = k_pool.shape[3]                          # D//2 packed bytes
+    assert dp * 2 == d, (dp, d)
+    group = h // hkv
+    nb = block_tables.shape[1]
+    bq = divisor_tile(bq, sq)
+    grid = (b, h, sq // bq, nb)
+    kernel = functools.partial(_paged_prefill_q4_kernel, bq, psize)
+
+    def kv_map(bb, hh, qi, ki, pos0s, btab):
+        frontier = (pos0s[bb] + (qi + 1) * bq - 1) // psize
+        return (btab[bb, jnp.minimum(ki, frontier)], 0, hh // group, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # pos0, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bb, hh, qi, ki, pos0s, btab: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, psize, 1, dp), kv_map),
+            pl.BlockSpec((1, psize, 1, dp), kv_map),
+            pl.BlockSpec((LUT_SIZE,),
+                         lambda bb, hh, qi, ki, pos0s, btab: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # k page scales
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # v page scales
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d),
+            lambda bb, hh, qi, ki, pos0s, btab: (bb, hh, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.int32),    # running max (col-broadcast)
+            pltpu.VMEM((bq, 128), jnp.float32),  # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), jnp.int8),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(pos0, jnp.int32).reshape(-1),
+      jnp.asarray(block_tables, jnp.int32),
+      q_i8, k_pool, v_pool, lut_q7,
+      jnp.asarray(k_scale, jnp.float32).reshape(-1),
+      jnp.asarray(v_scale, jnp.float32).reshape(-1),
       jnp.asarray(M_idx, jnp.int32).reshape(1),
       jnp.asarray(shift_idx, jnp.int32).reshape(1),
       jnp.asarray(inv_s_logit, jnp.float32).reshape(1),

@@ -271,6 +271,38 @@ def paged_prefill_qattention_ref(
     return jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
 
 
+def paged_decode_qattention_q4_ref(q_i8, k_pool_u8, v_pool_u8, k_scale,
+                                   v_scale, block_tables, lengths, M_idx,
+                                   shift_idx, lut, inv_s_logit, out_scale):
+    """Oracle for the int4-packed paged decode kernel.
+
+    Dequantizes the whole packed pool with the shared packing helpers
+    (``clip(round(c4 * scale), -127, 127)`` — the exact formula the kernel
+    fuses per tile) and delegates to the int8 block-online oracle.  This is
+    an exact identity with the kernel's in-VMEM dequant: every page the
+    kernel touches dequantizes to the same int8 codes this full view holds,
+    and pages it never reads (dead blocks re-address already-live pages)
+    contribute nothing either way."""
+    k_pool = packing.dequantize_kv_pool(k_pool_u8, k_scale)
+    v_pool = packing.dequantize_kv_pool(v_pool_u8, v_scale)
+    return paged_decode_qattention_ref(q_i8, k_pool, v_pool, block_tables,
+                                       lengths, M_idx, shift_idx, lut,
+                                       inv_s_logit, out_scale)
+
+
+def paged_prefill_qattention_q4_ref(q_i8, k_pool_u8, v_pool_u8, k_scale,
+                                    v_scale, block_tables, pos0, M_idx,
+                                    shift_idx, lut, inv_s_logit, out_scale):
+    """Oracle for the int4-packed paged prefill kernel (see the decode q4
+    oracle for why whole-pool dequant + int8 oracle is bit-exact vs the
+    kernel's fused per-tile dequant)."""
+    k_pool = packing.dequantize_kv_pool(k_pool_u8, k_scale)
+    v_pool = packing.dequantize_kv_pool(v_pool_u8, v_scale)
+    return paged_prefill_qattention_ref(q_i8, k_pool, v_pool, block_tables,
+                                        pos0, M_idx, shift_idx, lut,
+                                        inv_s_logit, out_scale)
+
+
 def make_exp_lut_q7():
     """Q0.7 exp table for the attention kernels (max code 127, fits int8)."""
     import numpy as np

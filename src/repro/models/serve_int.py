@@ -281,6 +281,25 @@ def _tp_slice(x, tp_axis, nloc, axis):
     return jax.lax.dynamic_slice_in_dim(x, r * nloc, nloc, axis)
 
 
+def _is_kv4(cslot) -> bool:
+    """Packed int4 pool slots carry per-page scale leaves ('ks'/'vs')."""
+    return isinstance(cslot, dict) and "ks" in cslot
+
+
+def _dequant_paged_view(pool_u8, scales, block_tables, nkv_loc, hd):
+    """Gather a slot-major contiguous KV view out of the PACKED pool and
+    dequantize it (jnp fallback path only — the Pallas kernels dequantize
+    per tile in VMEM and never build this).  (B, max_blocks*P, Hkv_loc, hd)
+    int8."""
+    from repro.core import packing
+    b = block_tables.shape[0]
+    pg = jnp.take(pool_u8, block_tables, axis=0)      # (B,nb,P,Hkv,hd/2) u8
+    sc = jnp.take(scales, block_tables, axis=0)       # (B,nb)
+    c4 = packing.unpack_int4_planar(pg, axis=-1)
+    c8 = packing.dequant_int4_codes(c4, sc[:, :, None, None, None])
+    return c8.reshape(b, -1, nkv_loc, hd)
+
+
 def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables,
                        tp_axis=None):
     """Paged decode step: x (B,1,d); cache {'k','v'}: (n_pages, P, Hkv, hd)
@@ -316,6 +335,8 @@ def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables,
     aq = f["attn_q"]
     assert s == 1
     group = nh // nkv
+    kv4 = _is_kv4(cache)
+    kc_full, vc_full = kc, vc                             # pre-TP-slice
     if tp_axis is not None:
         nh_loc = group * nkv_loc
         qc = _tp_slice(qc, tp_axis, nh_loc, 2)
@@ -327,22 +348,57 @@ def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables,
     pg = jnp.take_along_axis(block_tables, (pos_vec // psize)[:, None],
                              axis=1)[:, 0]                # (B,) page ids
     row = pos_vec % psize
-    k_pool = cache["k"].at[pg, row].set(kc[:, 0])
-    v_pool = cache["v"].at[pg, row].set(vc[:, 0])
+    if kv4:
+        from repro.core import packing
+        # page scale from the FULL-head codes (rank-identical under TP — a
+        # sliced amax would let ranks disagree on the shared scale): the
+        # row opening a page (row == 0) sets a fresh scale from its own
+        # codes, later rows reuse the page's existing scale so previously
+        # written rows keep dequantizing to the same values
+        ks_fresh = jax.vmap(packing.kv_page_scale)(kc_full[:, 0])   # (B,)
+        vs_fresh = jax.vmap(packing.kv_page_scale)(vc_full[:, 0])
+        ks_pg = jnp.where(row == 0, ks_fresh, cache["ks"][pg])
+        vs_pg = jnp.where(row == 0, vs_fresh, cache["vs"][pg])
+        kq = packing.quantize_kv_page(kc[:, 0], ks_pg[:, None, None])
+        vq = packing.quantize_kv_page(vc[:, 0], vs_pg[:, None, None])
+        k_pool = cache["k"].at[pg, row].set(kq)
+        v_pool = cache["v"].at[pg, row].set(vq)
+        npool = {"k": k_pool, "v": v_pool,
+                 "ks": cache["ks"].at[pg].set(ks_pg),
+                 "vs": cache["vs"].at[pg].set(vs_pg)}
+    else:
+        k_pool = cache["k"].at[pg, row].set(kc[:, 0])
+        v_pool = cache["v"].at[pg, row].set(vc[:, 0])
+        npool = {"k": k_pool, "v": v_pool}
     lengths = pos_vec + 1
     qg = qc.reshape(b, nkv_loc, group, hd)                # (B,kv,g,hd) int8
     if ops.backend() == "pallas":
-        from repro.kernels.decode_attention import paged_decode_qattention
-        ctx = paged_decode_qattention(
-            qg, k_pool, v_pool, block_tables, lengths,
-            aq["M_idx"], aq["sh_idx"], _lut_q7(),
-            aq["inv_s_logit"], aq["out_scale"])           # (B,kv,g,hd) int8
+        if kv4:
+            from repro.kernels.decode_attention import \
+                paged_decode_qattention_q4
+            ctx = paged_decode_qattention_q4(
+                qg, k_pool, v_pool, npool["ks"], npool["vs"], block_tables,
+                lengths, aq["M_idx"], aq["sh_idx"], _lut_q7(),
+                aq["inv_s_logit"], aq["out_scale"])       # (B,kv,g,hd) int8
+        else:
+            from repro.kernels.decode_attention import paged_decode_qattention
+            ctx = paged_decode_qattention(
+                qg, k_pool, v_pool, block_tables, lengths,
+                aq["M_idx"], aq["sh_idx"], _lut_q7(),
+                aq["inv_s_logit"], aq["out_scale"])       # (B,kv,g,hd) int8
     else:
         # gathered per-slot view (B, max_blocks*P, Hkv_loc, hd); masking
-        # makes the result bit-identical to the contiguous layout
-        kv_shape = (b, -1, nkv_loc, hd)
-        k_view = jnp.take(k_pool, block_tables, axis=0).reshape(kv_shape)
-        v_view = jnp.take(v_pool, block_tables, axis=0).reshape(kv_shape)
+        # makes the result bit-identical to the contiguous layout (int8)
+        # resp. to the kernel's fused per-tile dequant (kv4)
+        if kv4:
+            k_view = _dequant_paged_view(k_pool, npool["ks"], block_tables,
+                                         nkv_loc, hd)
+            v_view = _dequant_paged_view(v_pool, npool["vs"], block_tables,
+                                         nkv_loc, hd)
+        else:
+            kv_shape = (b, -1, nkv_loc, hd)
+            k_view = jnp.take(k_pool, block_tables, axis=0).reshape(kv_shape)
+            v_view = jnp.take(v_pool, block_tables, axis=0).reshape(kv_shape)
         ctx = _gqa_decode_jnp(qg, k_view, v_view, lengths, aq)
     if tp_axis is not None:
         # reassemble full heads (rank order == head order): int8 values
@@ -351,7 +407,7 @@ def _attn_decode_paged(x_i8, f, cfg, cache, pos_offset, block_tables,
     ctx = ctx.reshape(b, nh, s, hd)                       # == (B,H,1,hd)
     ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
     out = _lin(ctx, f["wo"], cfg.quant.w_bits)
-    return out, {"k": k_pool, "v": v_pool}
+    return out, npool
 
 
 def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
@@ -387,6 +443,8 @@ def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
     nkv_loc = cache["k"].shape[2]                         # Hkv / tp
     qc, kc, vc = _qkv_rope(x_i8, f, cfg, pos)
     aq = f["attn_q"]
+    kv4 = _is_kv4(cache)
+    kc_full, vc_full = kc, vc                             # pre-TP-slice
     if tp_axis is not None:
         nh_loc = (nh // nkv) * nkv_loc
         qc = _tp_slice(qc, tp_axis, nh_loc, 2)
@@ -397,8 +455,13 @@ def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
     nb_s = s // psize
     btab_slice = jax.lax.dynamic_slice_in_dim(block_tables, pos0 // psize,
                                               nb_s, axis=1)
-    ncache = _paged_prefill_write(cache, kc, vc, btab_slice)
-    if row_exact:
+    ncache = _paged_prefill_write(cache, kc, vc, btab_slice,
+                                  kc_full=kc_full, vc_full=vc_full)
+    # kv4 drops the row-exact q8 identity claim by construction (a
+    # decode-written page's scale comes from its first row, a prefill-
+    # written page's from the whole page), so it always takes the q7
+    # paged family — the quality-A/B contract, not the identity one
+    if row_exact and not kv4:
         kv_shape = (b, -1, nkv_loc, hd)
         k_view = jnp.take(ncache["k"], block_tables, axis=0).reshape(kv_shape)
         v_view = jnp.take(ncache["v"], block_tables, axis=0).reshape(kv_shape)
@@ -406,6 +469,14 @@ def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
         qpos = pos0 + jnp.arange(s, dtype=jnp.int32)[:, None]
         kpos = jnp.arange(rows, dtype=jnp.int32)[None, :]
         ctx = _attn_rows_q8(qc, k_view, v_view, aq, cfg, kpos <= qpos)
+    elif kv4:
+        pos0_vec = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32).reshape(-1),
+                                    (b,))
+        ctx = ops.paged_prefill_attention_q4(
+            qc.transpose(0, 2, 1, 3), ncache["k"], ncache["v"],
+            ncache["ks"], ncache["vs"], block_tables, pos0_vec,
+            aq["M_idx"], aq["sh_idx"], _lut_q7(),
+            aq["inv_s_logit"], aq["out_scale"])           # (B,H,S,hd) int8
     else:
         pos0_vec = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32).reshape(-1),
                                     (b,))
@@ -420,12 +491,19 @@ def _attn_prefill_paged(x_i8, f, cfg, cache, pos, block_tables, pos0,
     return out, ncache
 
 
-def _paged_prefill_write(cache, kc, vc, block_tables):
+def _paged_prefill_write(cache, kc, vc, block_tables, kc_full=None,
+                         vc_full=None):
     """Scatter a prefill chunk's K/V rows (B, S, Hkv, hd) into the page pool
     through the block table.  S must be a whole number of pages and every
     table entry a page the request owns — pad rows land inside owned pages
     (masked or overwritten by decode, same argument as the contiguous
-    bucketed prefill)."""
+    bucketed prefill).
+
+    On a packed (kv4) pool each written page is quantized to int4 codes
+    under ONE shared scale computed from the page's FULL-head codes
+    (``kc_full``/``vc_full``, pre-TP-slice — every rank derives the same
+    scale) and nibble-packed along hd; the scale leaves update in the same
+    scatter so payload and scale always travel together."""
     psize = cache["k"].shape[1]
     b, s = kc.shape[0], kc.shape[1]
     nb = s // psize
@@ -433,6 +511,20 @@ def _paged_prefill_write(cache, kc, vc, block_tables):
         (s, psize, block_tables.shape)
     kr = kc.reshape(b, nb, psize, *kc.shape[2:])
     vr = vc.reshape(b, nb, psize, *vc.shape[2:])
+    if _is_kv4(cache):
+        from repro.core import packing
+        kfr = (kc if kc_full is None else kc_full).reshape(
+            b, nb, psize, *((kc if kc_full is None else kc_full).shape[2:]))
+        vfr = (vc if vc_full is None else vc_full).reshape(
+            b, nb, psize, *((vc if vc_full is None else vc_full).shape[2:]))
+        ks = jax.vmap(jax.vmap(packing.kv_page_scale))(kfr)       # (b, nb)
+        vs = jax.vmap(jax.vmap(packing.kv_page_scale))(vfr)
+        kq = packing.quantize_kv_page(kr, ks[:, :, None, None, None])
+        vq = packing.quantize_kv_page(vr, vs[:, :, None, None, None])
+        return {"k": cache["k"].at[block_tables].set(kq),
+                "v": cache["v"].at[block_tables].set(vq),
+                "ks": cache["ks"].at[block_tables].set(ks),
+                "vs": cache["vs"].at[block_tables].set(vs)}
     return {"k": cache["k"].at[block_tables].set(kr),
             "v": cache["v"].at[block_tables].set(vr)}
 
@@ -625,15 +717,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     return cache
 
 
-def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int) -> Dict:
+def paged_page_nbytes(cfg: ModelConfig, page_size: int,
+                      kv_bits: int = 8) -> int:
+    """HBM bytes one pool page occupies across every rep/slot leaf of the
+    ``init_paged_cache`` pytree (K + V payload, plus the two fp32 page
+    scales at ``kv_bits=4``).  The allocator carries this for pool-bytes
+    accounting: at 4 bits a fixed byte budget holds ~2x the pages."""
+    kinds = slot_kinds(cfg)
+    hd = cfg.hd // 2 if kv_bits == 4 else cfg.hd
+    per = 2 * page_size * cfg.n_kv_heads * hd       # k + v payload bytes
+    if kv_bits == 4:
+        per += 2 * 4                                 # ks + vs fp32 scales
+    return cfg.n_reps * len(kinds) * per
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     kv_bits: int = 8) -> Dict:
     """Global paged KV pool, stacked (n_reps, n_pages, P, Hkv, hd) per attn
     slot.  Pages are position-agnostic: a slot's (max_blocks,) block-table
     row, not the pool layout, decides which rows belong to which request.
     Only all-attention archs page (SSM/xLSTM state is O(1) per slot and
-    SWA already ring-buffers to the window)."""
+    SWA already ring-buffers to the window).
+
+    ``kv_bits=4`` switches each slot to the PACKED layout: payload leaves
+    become (n_reps, n_pages, P, Hkv, hd//2) uint8 (nibble-planar along hd —
+    half the pool bytes) plus per-page fp32 shared-scale leaves 'ks'/'vs'
+    of shape (n_reps, n_pages).  The trash-page scale initializes to the
+    all-zero page's well-defined scale (1/7) so dead reads stay exact
+    zeros."""
     kinds = slot_kinds(cfg)
     assert all(m == "attn" for m, _ in kinds) and not cfg.sliding_window, \
         "paged cache requires an all-attention, non-SWA arch"
+    assert kv_bits in (8, 4), kv_bits
+    if kv_bits == 4:
+        from repro.core import packing
+        assert cfg.hd % 2 == 0, cfg.hd
+        shape = (cfg.n_reps, n_pages, page_size, cfg.n_kv_heads, cfg.hd // 2)
+        sshape = (cfg.n_reps, n_pages)
+        # NB: one jnp.full per leaf — sharing a single scale array across
+        # leaves would alias buffers and break donate_argnums on the pool
+        def s0():
+            return jnp.full(sshape, 1.0 / packing.KV4_QMAX, jnp.float32)
+        return {f"slot{i}": {"k": jnp.zeros(shape, jnp.uint8),
+                             "v": jnp.zeros(shape, jnp.uint8),
+                             "ks": s0(), "vs": s0()}
+                for i in range(len(kinds))}
     shape = (cfg.n_reps, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
     return {f"slot{i}": {"k": jnp.zeros(shape, jnp.int8),
                          "v": jnp.zeros(shape, jnp.int8)}

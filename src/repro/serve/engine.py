@@ -204,6 +204,7 @@ class EngineConfig:
     max_batched_tokens: Optional[int] = None
     max_prefill_chunk: Optional[int] = None
     reserve_policy: Optional[str] = None  # None | "full" | "ondemand"
+    kv_bits: int = 8                      # 8 (identity default) | 4 (packed)
     tp: int = 1
     mesh: object = None
 
@@ -259,6 +260,11 @@ class EngineConfig:
                 self.cache_layout == "contiguous":
             bad("reserve_policy='ondemand' (on-demand page growth) requires "
                 "cache_layout='paged'")
+        if self.kv_bits not in (8, 4):
+            bad(f"kv_bits must be one of 8, 4 (got {self.kv_bits})")
+        if self.kv_bits != 8 and self.cache_layout == "contiguous":
+            bad("kv_bits=4 packs the paged KV pool; "
+                "cache_layout='contiguous' stores int8 rows only")
         if self.tp < 1:
             bad(f"tp must be >= 1 (got {self.tp})")
         if (self.tp != 1 or self.mesh is not None) and \
@@ -273,8 +279,8 @@ _DEFAULT_CONFIG = EngineConfig()
 # deviate from their defaults and resets them before construction
 _CONTINUOUS_ONLY_FIELDS = ("prefill_bucket", "cache_layout", "page_size",
                            "n_pages", "max_batched_tokens",
-                           "max_prefill_chunk", "reserve_policy", "tp",
-                           "mesh")
+                           "max_prefill_chunk", "reserve_policy", "kv_bits",
+                           "tp", "mesh")
 
 
 def _resolve_config(config: Optional[EngineConfig], kw: dict,
@@ -384,6 +390,17 @@ class Engine:
                     "layout, but cache_layout resolved to "
                     f"{cache_layout!r} for arch {cfg.name!r}")
             self.reserve_policy = "full"
+        # KV pool precision: 8 is the identity-contract default; 4 packs
+        # pages to nibbles (paged layout only — validate() already rejects
+        # an EXPLICIT contiguous+kv4 combination, this handles 'auto'
+        # resolving to contiguous for archs the paged pool can't serve)
+        self.kv_bits = config.kv_bits
+        if self.kv_bits != 8 and self.layout != "paged":
+            warnings.warn(
+                f"kv_bits={self.kv_bits} requires the paged cache layout, "
+                f"but cache_layout resolved to {self.layout!r} for arch "
+                f"{cfg.name!r}; falling back to kv_bits=8", stacklevel=2)
+            self.kv_bits = 8
         if self.layout == "paged":
             self.max_blocks = pages_needed(self.smax, page_size)
             # +1: page 0 is the reserved trash page (inactive-slot writes)
@@ -437,7 +454,10 @@ class Engine:
                 # forward all-gathers heads before the output projection)
                 from jax.sharding import PartitionSpec as P
                 from repro.sharding import partition as Pt
-                pool, rep = Pt.kv_pool_pspec(), P()
+                # per-leaf specs: kv4 pools carry 2-D (n_reps, n_pages)
+                # scale leaves next to the 5-D packed payloads, so one
+                # broadcast pspec would rank-mismatch — match each leaf
+                pool, rep = Pt.kv_pool_specs(self.cache, self.mesh), P()
                 decode_step = Pt.shard_map_compat(
                     decode_step, self.mesh,
                     in_specs=(rep, pool, rep, rep, rep),
@@ -492,13 +512,16 @@ class Engine:
         self.rng = np.random.default_rng(seed)
         self.counters = self._zero_counters()
         if self.layout == "paged":
-            self.alloc = BlockAllocator(self.n_pages, self.page_size)
+            self.alloc = BlockAllocator(
+                self.n_pages, self.page_size,
+                bytes_per_page=S.paged_page_nbytes(self.cfg, self.page_size,
+                                                   self.kv_bits))
             self.sched = Scheduler(self.batch, allocator=self.alloc,
                                    max_batched_tokens=self.max_batched_tokens,
                                    max_prefill_chunk=self.max_prefill_chunk,
                                    reserve=self.reserve_policy)
             self.cache = S.init_paged_cache(self.cfg, self.n_pages,
-                                            self.page_size)
+                                            self.page_size, self.kv_bits)
             if self.mesh is not None:
                 # lay the pool out sharded before the first donated step so
                 # every forward reuses the same per-rank Hkv-slice buffers

@@ -67,10 +67,19 @@ class BlockAllocator:
     scatter its garbage rows somewhere that no live request reads.
     """
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int,
+                 bytes_per_page: Optional[int] = None):
         assert n_pages >= 2 and page_size >= 1
         self.n_pages = n_pages
         self.page_size = page_size
+        # HBM bytes one pool page occupies across every rep/slot leaf —
+        # payload AND per-page scales for the packed (kv_bits=4) layout,
+        # where a page holds ~half the bytes of the int8 layout.  Purely
+        # observational (pool sizing / benchmarks); allocation stays
+        # page-granular, so refcounts, CoW, and spill/restore move packed
+        # payloads and their scales together by construction (a page id
+        # names both).
+        self.bytes_per_page = bytes_per_page
         self.free: Deque[int] = collections.deque(range(1, n_pages))
         self.ref: List[int] = [0] * n_pages
         # chained-prefix registry: key -> (page, that page's own tokens)
@@ -88,6 +97,14 @@ class BlockAllocator:
     def capacity(self) -> int:
         """Allocatable pages (excludes the trash page)."""
         return self.n_pages - 1
+
+    @property
+    def pool_bytes(self) -> Optional[int]:
+        """Total allocatable-pool HBM bytes (None when the engine never
+        told the allocator its page byte size)."""
+        if self.bytes_per_page is None:
+            return None
+        return self.capacity * self.bytes_per_page
 
     def available(self) -> int:
         return len(self.free) + len(self._lru)

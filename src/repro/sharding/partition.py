@@ -245,6 +245,20 @@ def paged_pool_shardings(mesh: Mesh, tree):
         treedef, [NamedSharding(mesh, s) for s in specs])
 
 
+def kv_pool_specs(tree, mesh: Mesh):
+    """Pytree of PartitionSpecs (not NamedShardings) mirroring the paged
+    cache — the ``in_specs``/``out_specs`` form for a shard_map over the
+    pool.  5-D payload leaves take ``kv_pool_pspec`` (Hkv over the model
+    axis); lower-rank leaves — the packed pool's per-page (n_reps, n_pages)
+    scale leaves — are replicated, since scales are derived from FULL-head
+    codes and every rank holds all of them."""
+    def spec(v):
+        if v.ndim == 5:
+            return _fit_spec(kv_pool_pspec(), v.shape, mesh)
+        return P(*([None] * v.ndim))
+    return jax.tree.map(spec, tree)
+
+
 def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
     """``shard_map`` with per-rank (unchecked) replication semantics across
     the jax rename: 0.4.x has ``jax.experimental.shard_map`` with

@@ -1,0 +1,97 @@
+"""kernels/autotune.py: roofline-derived tile selection, caching, overrides.
+
+Autotune only moves DMA/grid overhead around — the paged kernels' outputs
+are tile-size independent (dead-block clamping) — so these tests check the
+selection MACHINERY: picked values are legal (candidate-derived divisors),
+cached per shape, overridable by env, and the off switch restores the
+legacy fixed defaults.
+"""
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture(autouse=True)
+def _clean(monkeypatch):
+    for var in ("REPRO_DECODE_BKV", "REPRO_PREFILL_BQ", "REPRO_AUTOTUNE"):
+        monkeypatch.delenv(var, raising=False)
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_decode_bkv_legal_divisor():
+    for smax in (64, 512, 2048, 96):
+        got = autotune.decode_bkv(smax, batch_slots=8, hkv=8, hd=128)
+        assert smax % got == 0 and got >= 1
+        assert got <= max(autotune.DECODE_BKV_CANDIDATES)
+
+
+def test_prefill_bq_legal_divisor():
+    for sq in (16, 128, 384):
+        got = autotune.prefill_bq(sq, batch_slots=8, page_size=16, hkv=8,
+                                  hd=128, n_blocks=32, n_heads=32)
+        assert sq % got == 0 and got >= 1
+        assert got <= max(autotune.PREFILL_BQ_CANDIDATES)
+
+
+def test_bigger_q_blocks_for_long_chains():
+    """The KV-restream term dominates for long chains: each page streams
+    once per q-block, so the model must not pick a tiny bq when the chain
+    is long (it would multiply KV traffic)."""
+    big = autotune.prefill_bq(256, batch_slots=8, page_size=16, hkv=8,
+                              hd=128, n_blocks=128, n_heads=32)
+    assert big >= 128
+
+
+def test_selection_cached_per_shape():
+    k = ("decode_bkv", 4, 8, 128, 1024, 8)
+    autotune.decode_bkv(1024, batch_slots=4, hkv=8, hd=128)
+    assert k in autotune._cache
+    autotune._cache[k] = 128          # poison: cache hit must win
+    assert autotune.decode_bkv(1024, batch_slots=4, hkv=8, hd=128) == 128
+    autotune.clear_cache()
+    assert autotune.decode_bkv(1024, batch_slots=4, hkv=8, hd=128) != 128 \
+        or autotune._cache[k] != 128
+
+
+def test_env_override_pins_value(monkeypatch):
+    monkeypatch.setenv("REPRO_DECODE_BKV", "256")
+    assert autotune.decode_bkv(1024, batch_slots=4, hkv=8, hd=128) == 256
+    # override still divisor-fitted to the actual length
+    assert autotune.decode_bkv(96, batch_slots=4, hkv=8, hd=128) == 96
+    monkeypatch.setenv("REPRO_PREFILL_BQ", "64")
+    assert autotune.prefill_bq(128, batch_slots=4, page_size=16, hkv=8,
+                               hd=128) == 64
+
+
+def test_off_mode_restores_legacy_defaults(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "off")
+    assert autotune.decode_bkv(1024, batch_slots=4, hkv=8, hd=128) == \
+        autotune.DEFAULT_DECODE_BKV
+    assert autotune.prefill_bq(256, batch_slots=4, page_size=16, hkv=8,
+                               hd=128) == autotune.DEFAULT_PREFILL_BQ
+
+
+def test_kv4_halves_tile_bytes():
+    """A 4-bit pool halves page bytes — selections stay legal and the key
+    space distinguishes bit widths (no cross-contamination)."""
+    a = autotune.decode_bkv(2048, batch_slots=8, hkv=8, hd=128, kv_bits=8)
+    b = autotune.decode_bkv(2048, batch_slots=8, hkv=8, hd=128, kv_bits=4)
+    assert 2048 % a == 0 and 2048 % b == 0
+    keys = {k for k in autotune._cache if k[0] == "decode_bkv"}
+    assert len(keys) == 2
+
+
+def test_measure_best_caches_argmin():
+    times = {32: 3.0, 64: 1.0, 128: 2.0}
+    calls = []
+
+    def timer(c):
+        calls.append(c)
+        return times[c]
+
+    got = autotune.measure_best((32, 64, 128), timer, key=("m", 1))
+    assert got == 64
+    assert autotune.measure_best((32, 64, 128), timer, key=("m", 1)) == 64
+    assert len(calls) == 3            # second call served from cache

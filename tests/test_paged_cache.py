@@ -142,6 +142,49 @@ def test_ensure_exclusive_source_not_reallocatable_before_copy():
     al.check_invariants()
 
 
+def test_bytes_per_page_accounting():
+    """Observational byte accounting: pool_bytes reflects the per-page
+    footprint the engine reports (int8 rows vs nibble-packed rows + two
+    fp32 per-page scales)."""
+    al8 = BlockAllocator(n_pages=5, page_size=4, bytes_per_page=2048)
+    al4 = BlockAllocator(n_pages=5, page_size=4, bytes_per_page=1040)
+    assert al8.pool_bytes == 4 * 2048              # capacity excludes trash
+    assert al4.pool_bytes == 4 * 1040
+    # same byte budget fits >= 1.5x more packed pages
+    assert al8.bytes_per_page >= 1.5 * al4.bytes_per_page
+    assert BlockAllocator(n_pages=5, page_size=4).pool_bytes is None
+
+
+def test_ensure_exclusive_cow_moves_scale_with_payload():
+    """kv4 pages are (packed payload, per-page scale) pairs named by ONE
+    page id, so allocator-level CoW moves both or neither by construction.
+    Model the pool as parallel payload/scale stores keyed by page id and
+    replay the engine's CoW dance: after the copy lands, the fresh page
+    must carry the source's payload AND scale, and the registered source
+    must be untouched."""
+    al = BlockAllocator(n_pages=5, page_size=2, bytes_per_page=1040)
+    payload = {p: None for p in range(1, 5)}
+    scale = {p: 1.0 / 7 for p in range(1, 5)}      # trash-scale default
+    chain = al.alloc(1)
+    payload[chain[0]] = b"packed-nibble-rows"
+    scale[chain[0]] = 0.42
+    prompt = [1, 2, 3]
+    al.register_prefix(prompt, chain)
+    shared = al.match_prefix(prompt, 1)            # rc -> 2: CoW required
+    pages = list(shared)
+    page, copy_src = al.ensure_exclusive(pages, 0)
+    assert copy_src == chain[0] and page != copy_src
+    # the copy the engine performs: payload and scale travel together —
+    # there is no path that copies rows without the page's scale
+    payload[page] = payload[copy_src]
+    scale[page] = scale[copy_src]
+    al.free_pages([copy_src])                      # copy done, drop pin
+    assert payload[page] == b"packed-nibble-rows" and scale[page] == 0.42
+    assert payload[copy_src] == b"packed-nibble-rows"
+    assert scale[copy_src] == 0.42                 # source untouched
+    al.check_invariants()
+
+
 # --- scheduler + allocator ----------------------------------------------------
 
 def _paged_sched(n_slots, n_pages, page_size):

@@ -135,22 +135,55 @@ def test_restore_hits_prefix_registry(folded_cfg):
     assert eng.alloc.live == 0
 
 
-def test_sustained_overload_every_request_finishes(folded_cfg):
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_sustained_overload_every_request_finishes(folded_cfg, kv_bits):
     """Starvation guard: a queue several times the pool's worst-case
     capacity must drain completely — preemption recycles pages but
     requeue-at-front + head-of-line victim immunity keep every request
-    progressing to completion with its full decode budget."""
+    progressing to completion with its full decode budget.  Runs at both
+    KV precisions: the packed pool must survive the same spill/restore
+    traffic (scales travel with their pages by construction)."""
     cfg, folded = folded_cfg
     n = 8
     lens, max_news = [4] * n, [8] * n            # worst 3 pages each
     eng = Engine(cfg, folded, EngineConfig(
         batch_slots=2, max_len=64, cache_layout="paged", page_size=4,
-        n_pages=6))                              # capacity 5
+        n_pages=6, kv_bits=kv_bits))             # capacity 5
     out = _drive(eng, _requests(cfg, lens, max_news))
     assert eng.counters["completed"] == n
     assert all(r.out is not None and len(r.out) == 8 for r in out)
     assert eng.counters["preemptions"] >= 1      # it really was overload
     assert eng.alloc.live == 0 and len(eng.sched.waiting) == 0
+
+
+def test_kv4_spill_restore_mechanics(folded_cfg):
+    """kv_bits=4 under the forced mid-decode spill: the packed pool runs
+    the identical grow/spill/registry/replay machinery (a page id names
+    the packed payload AND its per-page scales, so nothing extra moves).
+
+    Token identity against a kv4-unlimited run is deliberately NOT
+    asserted: a replayed partial page is re-quantized with a whole-page
+    prefill scale while the original run froze the scale at the page's
+    first decode row — kv4 is a quality A/B contract, identity stays
+    int8-only.  What must hold: full completion, balanced counters, an
+    empty pool at drain, and every request receiving its full budget."""
+    cfg, folded = folded_cfg
+    lens, max_news = [4, 4], [12, 12]            # worst 4 pages each
+    eng = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged", page_size=4,
+        n_pages=6, kv_bits=4))                   # capacity 5 < 4+4
+    out = _drive(eng, _requests(cfg, lens, max_news))
+    c = eng.counters
+    assert c["completed"] == 2
+    assert all(len(r.out) == 12 for r in out)
+    assert c["preemptions"] >= 1 and c["restores"] == c["preemptions"]
+    assert c["spilled_rows"] > 0
+    assert eng.alloc.live == 0
+    # packed pages really are half-width (plus two fp32 scales)
+    eng8 = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged", page_size=4,
+        n_pages=6))
+    assert eng.alloc.bytes_per_page < eng8.alloc.bytes_per_page * 0.6
 
 
 def test_full_reservation_policy_never_preempts(folded_cfg):
