@@ -31,6 +31,14 @@ Workloads (``--workload``):
     greedy outputs diverge from the unlimited pool's, or if the sized
     pool failed to force at least one spill.
 
+``--spec-k K`` runs the speculative-decoding A/B instead: plain greedy
+decode vs draft-then-verify (prompt-lookup proposals, up to K per slot per
+tick) on the same paged engine over a lookup-friendly cycle-prompt
+workload (artifact BENCH_SPEC.json).  Greedy acceptance is exact argmax
+matching, so outputs must be bit-identical off-pallas (gated), and the
+deterministic decode-forward reduction must reach 1.2x (gated); wall
+tok/s and accepted-tokens/forward are reported.
+
 ``--tp N`` (any workload flag ignored; Poisson shape) runs the
 tensor-parallel A/B instead: the paged engine unsharded vs sharded over an
 N-way model mesh (KV-head-sharded page pool, replicated block tables).
@@ -634,6 +642,127 @@ def bench_kv4(args, cfg, folded, Request):
     return 0
 
 
+def build_cycle_requests(Request, rng, work, vocab, period=3):
+    """Prompt-lookup-friendly variant of ``build_requests``: each prompt is
+    a short random token cycle tiled to the workload's prompt length, so
+    the draft source's suffix n-gram always reoccurs earlier in the
+    context (the repetitive-text regime prompt-lookup decoding exists
+    for — code, copied spans, templated output)."""
+    reqs = []
+    for w in work:
+        pat = rng.integers(0, vocab, (period,)).astype(np.int32)
+        prompt = np.tile(pat, w["prompt_len"] // period + 1)[:w["prompt_len"]]
+        reqs.append(Request(prompt=prompt, max_new_tokens=w["max_new"]))
+    return reqs
+
+
+def bench_spec(args, cfg, folded, Request):
+    """--spec-k K: speculative decoding A/B — plain greedy decode vs
+    draft-then-verify with the prompt-lookup draft source, same paged
+    engine, same Poisson workload over cycle prompts.
+
+    Two gates, one report:
+
+    * IDENTITY (hard, off-pallas): greedy spec outputs must be
+      bit-identical to plain decode — acceptance is exact argmax matching,
+      so any divergence is an engine bug, never noise.  Exits non-zero.
+    * DECODE-FORWARD REDUCTION (hard, deterministic): plain decode
+      forwards / spec forwards must be >= 1.2x.  Every forward streams the
+      same weights + KV once regardless of how many verify rows ride it
+      (decode is memory-bound — the roofline the repo's cost model
+      prices), so forwards saved IS the decode speed ratio on serving
+      hardware; gating the deterministic counter instead of wall clock
+      keeps the CI lane meaningful on shared CPU runners where the
+      interpret backend's per-row cost is nothing like an accelerator's.
+
+    Wall tok/s for both runs is reported and regression-gated against the
+    committed baseline, not asserted inline."""
+    from repro.serve.engine import Engine, EngineConfig
+
+    r_arrival, _, _ = _rng_streams(args.seed)
+    lengths = [int(x) for x in args.lengths.split(",")]
+    work = make_workload(r_arrival, args.requests, lengths, args.rate,
+                         (args.max_new_lo, args.max_new_hi))
+    max_len = max(lengths) + args.max_new_hi + 1
+
+    def fresh():
+        _, r_prompt, _ = _rng_streams(args.seed)
+        return build_cycle_requests(Request, r_prompt, work, cfg.vocab_size)
+
+    n_tok = sum(w["max_new"] for w in work)
+    rows, outs, steps = [], {}, {}
+    artifact = dict(
+        bench="serve_spec", workload="poisson-cycle", arch=cfg.name,
+        spec_k=args.spec_k, slots=args.slots, requests=args.requests,
+        lengths=lengths, page_size=args.page_size, seed=args.seed)
+
+    for name, kw in [("plain", {}), ("spec", dict(spec_k=args.spec_k))]:
+        eng = Engine(cfg, folded, EngineConfig(
+            batch_slots=args.slots, max_len=max_len, cache_layout="paged",
+            page_size=args.page_size, **kw))
+        lat = {}
+        out, secs = _timed(run_continuous, eng, fresh, work, lat=lat)
+        outs[name] = [r.out.tolist() for r in out]
+        c = dict(eng.counters)
+        steps[name] = c["decode_steps"]
+        tps = n_tok / secs
+        rows.append((f"serve/{name}_tok_per_s", tps, f"wall={secs:.2f}s"))
+        rows.append((f"serve/{name}_decode_steps", c["decode_steps"],
+                     f"decode_tokens={c['decode_tokens']}"))
+        artifact[name] = dict(tok_per_s=round(tps, 2),
+                              **latency_summary(work, lat),
+                              engine_counters=c)
+
+    sc = artifact["spec"]["engine_counters"]
+    fwd_ratio = steps["plain"] / steps["spec"]
+    acc_rate = sc["accepted"] / max(sc["drafted"], 1)
+    acc_per_fwd = sc["accepted"] / max(steps["spec"], 1)
+    match = outs["spec"] == outs["plain"]
+    div = [_first_divergence(a, b)
+           for a, b in zip(outs["spec"], outs["plain"])]
+    rows.append(("serve/spec_decode_fwd_reduction", fwd_ratio,
+                 f"{steps['plain']} -> {steps['spec']} forwards"))
+    rows.append(("serve/spec_accept_rate", acc_rate,
+                 f"drafted={sc['drafted']}_accepted={sc['accepted']}"))
+    rows.append(("serve/spec_accepted_per_forward", acc_per_fwd,
+                 f"hist={sc['accept_len_hist']}"))
+    rows.append(("serve/outputs_match", float(match), "plain+spec"))
+    artifact.update(outputs_match=bool(match),
+                    first_divergence_token=div,
+                    decode_fwd_reduction=round(fwd_ratio, 3),
+                    accept_rate=round(acc_rate, 3),
+                    accepted_per_forward=round(acc_per_fwd, 3))
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
+
+    from repro.kernels import ops
+    if not match and ops.backend() != "pallas":
+        bad = [i for i, d in enumerate(div) if d >= 0]
+        print(f"ERROR: speculative greedy outputs diverged from plain "
+              f"decode (requests {bad}, first token "
+              f"{min(d for d in div if d >= 0)}) — greedy acceptance must "
+              "be bit-identical", file=sys.stderr)
+        return 1
+    if not match:
+        print("note: output mismatch tolerated on the pallas backend "
+              "(prefill kernels are not bit-identical there)",
+              file=sys.stderr)
+    if sc["drafted"] < 1:
+        print("ERROR: the draft source never proposed — the workload is "
+              "not exercising speculative decoding", file=sys.stderr)
+        return 1
+    if fwd_ratio < 1.2:
+        print(f"ERROR: speculative decoding cut decode forwards only "
+              f"{fwd_ratio:.2f}x (< 1.2x) on the lookup-friendly "
+              "workload", file=sys.stderr)
+        return 1
+    return 0
+
+
 def run_serve(router, requests, work, info=None):
     """Virtual-time driver for the ReplicaRouter (same event-driven core
     the asyncio server polls): submit each request at its arrival tick,
@@ -877,6 +1006,8 @@ def bench(args):
         return bench_tp(args, cfg, folded, Request)
     if args.kv_bits == 4:
         return bench_kv4(args, cfg, folded, Request)
+    if args.spec_k:
+        return bench_spec(args, cfg, folded, Request)
     if args.serve or args.workload == "bursty":
         return bench_serve(args, cfg, folded, Request)
     if args.workload == "longprompt":
@@ -1043,6 +1174,12 @@ def main():
                          "pool byte budget (plain + prefix workloads; "
                          "quality divergence reported, page headroom "
                          "gated at 1.5x)")
+    ap.add_argument("--spec-k", type=int, default=0, dest="spec_k",
+                    help="run the speculative-decoding A/B: plain greedy "
+                         "vs draft-then-verify with up to K prompt-lookup "
+                         "proposals per slot per tick (cycle-prompt "
+                         "workload; identity + >=1.2x decode-forward "
+                         "reduction gated)")
     ap.add_argument("--rate", type=float, default=0.25,
                     help="Poisson arrival rate (requests per engine tick)")
     ap.add_argument("--max-new-lo", type=int, default=8)
@@ -1086,6 +1223,11 @@ def main():
             # see real concurrency or nothing gets preempted
             args.rate = max(args.rate, 1.0)
             args.max_new_lo, args.max_new_hi = 8, 16
+        if args.spec_k:
+            # decode-heavy budgets: prompt-lookup needs enough decode
+            # ticks for the greedy cycles it feeds on to establish
+            args.rate = max(args.rate, 1.0)
+            args.max_new_lo, args.max_new_hi = 12, 20
         if args.serve or args.workload == "bursty":
             # the SLO phase must actually overload the router: more
             # requests than the trimmed default, tight slots, fast bursts

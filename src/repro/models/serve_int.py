@@ -110,10 +110,11 @@ def _pos_vector(pos, b):
 
 def _attn_rows_q8(qc, kc, vc, aq, cfg, mask):
     """Materialized row attention through the decode-identical integer
-    datapath (q8 LUT softmax + M_pv requant).  ``mask`` (S,S) bool or None.
-    Row r is bit-identical to a decode step at pos r over the same KV, which
-    is what makes one-shot cached prefill + continuous decode reproduce
-    lockstep replay token-for-token."""
+    datapath (q8 LUT softmax + M_pv requant).  ``mask`` is bool or None:
+    (S,Skv) shared across the batch, or (B,S,Skv) per-slot (the verify
+    forward's ragged causal frontiers).  Row r is bit-identical to a decode
+    step at pos r over the same KV, which is what makes one-shot cached
+    prefill + continuous decode reproduce lockstep replay token-for-token."""
     group = cfg.n_heads // cfg.n_kv_heads
     kg = jnp.repeat(kc, group, axis=2)
     vg = jnp.repeat(vc, group, axis=2)
@@ -122,7 +123,8 @@ def _attn_rows_q8(qc, kc, vc, aq, cfg, mask):
         (((3,), (2,)), ((0, 1), (0, 1))),
         preferred_element_type=jnp.int32)                 # (B,H,S,S)
     if mask is not None:
-        scores = jnp.where(mask[None, None], scores, scores - MASK_OFFSET)
+        m = mask[:, None] if mask.ndim == 3 else mask[None, None]
+        scores = jnp.where(m, scores, scores - MASK_OFFSET)
     probs = ops.softmax_q(scores, aq["M_idx"], aq["sh_idx"], _lut_q8())
     pv = jax.lax.dot_general(
         probs.astype(jnp.int8), vg.transpose(0, 2, 1, 3),
@@ -529,6 +531,90 @@ def _paged_prefill_write(cache, kc, vc, block_tables, kc_full=None,
             "v": cache["v"].at[block_tables].set(vr)}
 
 
+def _attn_verify_paged(x_i8, f, cfg, cache, pos_vec, block_tables, n_rows,
+                       row_exact, tp_axis=None):
+    """Speculative verify step: score S = k+1 candidate rows per slot in ONE
+    forward — row 0 is the slot's committed last token, rows 1..k its draft
+    proposals.  ``pos_vec`` (B,) is each slot's decode cursor (the absolute
+    position of row 0); ``n_rows`` (B,) is each slot's REAL row count (1 +
+    its ragged proposal length) — columns at or past it are padding.
+
+    This is the chunk-prefill datapath driven decode-style: K/V rows
+    scatter per (page, row) through the block table exactly like
+    ``_attn_decode_paged`` (positions here are NOT page-aligned, so the
+    whole-page prefill scatter does not apply), and attention reads the
+    slot's whole mapped chain with per-slot causal frontiers.  Row i is
+    bit-identical to a plain decode step at position ``pos_vec[b] + i``
+    over the same KV prefix (row-exact backends), which is the property
+    the greedy acceptance rule leans on: accepted tokens are exactly the
+    tokens plain decode would have produced.
+
+    Padding columns redirect their scatter to trash page 0; real columns
+    past a slot's eventual accepted prefix leave garbage K/V rows ABOVE
+    the slot's rolled-back cursor — positions the causal length masks hide
+    until the cursor re-crosses them, at which point the owner rewrites
+    them (same argument as chunk-prefill pad rows).  The allocator is
+    untouched: pages were grown through ``Scheduler.grow`` before the
+    forward and stay owned through rollback.
+
+    Under tensor parallelism the same head-slice / all-gather scheme as
+    ``_attn_decode_paged`` applies (replicated block tables and positions,
+    rank-local Hkv slice, contexts reassembled before the output
+    projection), so sharded verify stays bit-identical to unsharded."""
+    b, s, d = x_i8.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    psize = cache["k"].shape[1]
+    nkv_loc = cache["k"].shape[2]                         # Hkv / tp
+    assert not _is_kv4(cache), \
+        "speculative verify serves the int8 pool (spec x kv4: ROADMAP)"
+    assert cfg.mrope_sections is None, \
+        "speculative verify does not serve mrope archs yet"
+    positions = pos_vec[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    qc, kc, vc = _qkv_rope(x_i8, f, cfg, positions)
+    aq = f["attn_q"]
+    if tp_axis is not None:
+        nh_loc = (nh // nkv) * nkv_loc
+        qc = _tp_slice(qc, tp_axis, nh_loc, 2)
+        kc = _tp_slice(kc, tp_axis, nkv_loc, 2)
+        vc = _tp_slice(vc, tp_axis, nkv_loc, 2)
+    else:
+        assert nkv_loc == nkv, (nkv_loc, nkv)
+    # decode-style per-row scatter, vectorized over the S columns; padding
+    # columns land in the trash page (the block table would already map
+    # beyond-chain positions there, but padding must not touch the last
+    # real page's rows either)
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < n_rows[:, None]
+    pg = jnp.take_along_axis(block_tables, positions // psize, axis=1)
+    pg = jnp.where(valid, pg, 0)
+    row = jnp.where(valid, positions % psize, 0)
+    ncache = {"k": cache["k"].at[pg, row].set(kc),
+              "v": cache["v"].at[pg, row].set(vc)}
+    if row_exact:
+        # gathered chain view + per-slot causal frontier: row i of slot b
+        # attends rows [0, pos_vec[b] + i] — bit-identical to the decode
+        # step at that position (see _attn_rows_q8)
+        kv_shape = (b, -1, nkv_loc, hd)
+        k_view = jnp.take(ncache["k"], block_tables, axis=0).reshape(kv_shape)
+        v_view = jnp.take(ncache["v"], block_tables, axis=0).reshape(kv_shape)
+        rows = k_view.shape[1]
+        kpos = jnp.arange(rows, dtype=jnp.int32)[None, None, :]
+        ctx = _attn_rows_q8(qc, k_view, v_view, aq, cfg,
+                            kpos <= positions[:, :, None])
+    else:
+        # the paged prefill kernel IS the verifier: per-slot pos0 rides the
+        # scalar-prefetch argument (its frontier math never needed a
+        # page-aligned start), blocks past a chain are causally dead
+        ctx = ops.paged_prefill_attention_q(
+            qc.transpose(0, 2, 1, 3), ncache["k"], ncache["v"],
+            block_tables, pos_vec, aq["M_idx"], aq["sh_idx"], _lut_q7(),
+            aq["inv_s_logit"], aq["out_scale"])           # (B,H,S,hd) int8
+    if tp_axis is not None:
+        ctx = jax.lax.all_gather(ctx, tp_axis, axis=1, tiled=True)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    out = _lin(ctx, f["wo"], cfg.quant.w_bits)
+    return out, ncache
+
+
 # --- ffn slots ----------------------------------------------------------------
 
 def _mlp_int(x_i8, f, cfg):
@@ -783,8 +869,9 @@ def serve_forward(
     *,
     cache: Optional[Dict] = None,
     pos_offset: jax.Array | int = 0,
-    mode: str = "prefill",            # prefill | decode
+    mode: str = "prefill",            # prefill | decode | verify
     block_tables: Optional[jax.Array] = None,
+    verify_rows: Optional[jax.Array] = None,
     extra_embeds_i8: Optional[jax.Array] = None,
     pos3: Optional[jax.Array] = None,
     tp_axis: Optional[str] = None,
@@ -800,6 +887,14 @@ def serve_forward(
     chunk or decode continues bit-exactly.  decode: tokens (B,1) + cache ->
     (logits, new_cache); ``pos_offset`` is a scalar or a per-slot (B,)
     vector.
+
+    verify (paged layouts only): tokens (B, k+1) holds each slot's last
+    committed token followed by its draft proposals; ``pos_offset`` is the
+    per-slot (B,) decode cursor and ``verify_rows`` (B,) each slot's real
+    row count (ragged proposals ride one padded shape).  Every row's logits
+    come back (B, k+1, vocab), each bit-identical (row-exact backends) to
+    the decode step plain decode would have run at that position — the
+    verifier half of speculative decoding (see ``_attn_verify_paged``).
 
     ``block_tables`` (B, max_blocks) int32 switches the cache layout to the
     paged pool (``init_paged_cache``): both the prefill scatter and the
@@ -817,6 +912,10 @@ def serve_forward(
     kinds = slot_kinds(cfg)
     assert tp_axis is None or block_tables is not None, \
         "tensor parallelism serves the paged cache layout only"
+    assert mode != "verify" or (cache is not None
+                                and block_tables is not None
+                                and verify_rows is not None), \
+        "verify mode needs a paged cache, block tables, and verify_rows"
     x = _embed_int(cfg, folded, tokens)
     if extra_embeds_i8 is not None:
         x = jnp.concatenate([extra_embeds_i8, x], axis=1)
@@ -824,16 +923,20 @@ def serve_forward(
     # prefill at a nonzero pos_offset continues an existing chain (the paged
     # suffix prefill after a prefix-cache hit); pos0 stays a traced scalar
     pos0 = jnp.asarray(pos_offset, jnp.int32).reshape(-1)[0]
+    vpos = (_pos_vector(pos_offset, b) if mode == "verify" else None)  # (B,)
     if cfg.learned_pos:
         if mode == "decode":
             posrow = jnp.take(folded["embed"]["pos_i8"],
                               _pos_vector(pos_offset, b), axis=0)[:, None]
+        elif mode == "verify":
+            grid = vpos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            posrow = jnp.take(folded["embed"]["pos_i8"], grid, axis=0)
         else:
             posrow = jax.lax.dynamic_slice_in_dim(
                 folded["embed"]["pos_i8"], pos0, s, axis=0)[None]
         x = jnp.clip(x.astype(jnp.int32) + posrow.astype(jnp.int32),
                      -127, 127).astype(jnp.int8)
-    if mode == "decode":
+    if mode in ("decode", "verify"):
         pos = None
     else:
         pos = jnp.broadcast_to(pos0 + jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -854,6 +957,10 @@ def serve_forward(
                                                      tp_axis=tp_axis)
                     else:
                         out, nc = _attn_decode(x_i8, f, cfg, cslot, pos_offset)
+                elif mode == "verify":
+                    out, nc = _attn_verify_paged(
+                        x_i8, f, cfg, cslot, vpos, block_tables, verify_rows,
+                        row_exact=ops.backend() != "pallas", tp_axis=tp_axis)
                 else:
                     # cached prefill matches the decode datapath per backend:
                     # row-exact q8 softmax mirrors the jnp decode (bit-exact

@@ -1,0 +1,139 @@
+"""Draft sources for speculative decoding (draft-then-verify).
+
+The continuous engine's decode loop is one token per tick per slot — a
+sequential chain of memory-bound GEMVs.  The chunk-prefill forward
+already scores many positions in one pass, which is exactly the verifier
+a draft-then-verify scheme needs.  A :class:`DraftSource` proposes up to
+``k`` candidate next tokens per decode slot per tick; the engine runs ONE
+multi-row verify forward over ``[last_token, d_1, ..., d_n]`` per slot and
+greedily accepts the longest prefix whose proposals match the argmax
+chain.  Because acceptance is exact argmax matching, speculative decoding
+is bit-identical to plain greedy decode — the repo's entire identity test
+matrix doubles as a speculative correctness oracle.
+
+Sources
+-------
+
+* :class:`PromptLookupDraft` — model-free prompt-lookup decoding (n-gram
+  continuation): find the longest suffix of the context that reoccurs
+  earlier in the context, propose the tokens that followed the earlier
+  occurrence.  Free to evaluate, surprisingly effective on repetitive
+  text (code, summaries with copied spans, greedy cycles).
+* :class:`SequenceDraft` — replay proposals from known full sequences
+  (prompt + continuation).  A controllable oracle: tests use it to force
+  full acceptance across page boundaries / preemption, and to measure
+  verifier mechanics at a pinned acceptance rate.
+
+A smaller folded integer model from the config zoo slots in here later:
+it only has to implement ``propose`` (see ROADMAP).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+class DraftSource:
+    """Interface: propose up to ``k`` next tokens for one slot's context.
+
+    ``context`` is the slot's full token history (prompt + emitted so
+    far) as a 1-D int array; the return value is a list of 0..k proposed
+    next tokens.  Returning fewer than ``k`` (including none) is always
+    legal — the engine verifies whatever is proposed and falls back to
+    plain decode for slots with no proposals.
+
+    ``propose`` must be a pure function of ``context`` — the engine may
+    call it speculatively and discard the result (e.g. when a slot is
+    preempted before its verify forward runs).
+    """
+
+    def propose(self, context: np.ndarray, k: int) -> List[int]:
+        raise NotImplementedError
+
+
+class PromptLookupDraft(DraftSource):
+    """Prompt-lookup decoding: n-gram continuation from the context.
+
+    Searches for the longest suffix n-gram of the context (lengths
+    ``max_ngram`` down to ``min_ngram``) that also occurs earlier in the
+    context; proposes up to ``k`` tokens following the most recent
+    earlier occurrence.  No model, no state — pure array search.
+    """
+
+    def __init__(self, min_ngram: int = 1, max_ngram: int = 3):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got "
+                f"{min_ngram}..{max_ngram}")
+        self.min_ngram = min_ngram
+        self.max_ngram = max_ngram
+
+    def propose(self, context: np.ndarray, k: int) -> List[int]:
+        ctx = np.asarray(context).ravel()
+        n = len(ctx)
+        if k <= 0 or n < self.min_ngram + 1:
+            return []
+        for ng in range(min(self.max_ngram, n - 1), self.min_ngram - 1, -1):
+            suffix = ctx[n - ng:]
+            # candidate start positions of earlier occurrences (windows
+            # strictly before the suffix itself), most recent first
+            starts = np.flatnonzero(ctx[:n - ng] == suffix[0])
+            for s in starts[::-1]:
+                if np.array_equal(ctx[s:s + ng], suffix):
+                    cont = ctx[s + ng:s + ng + k]
+                    if len(cont):
+                        return [int(t) for t in cont]
+        return []
+
+
+class SequenceDraft(DraftSource):
+    """Oracle/replay draft: propose the continuation of a known sequence.
+
+    Holds full token sequences (prompt + continuation).  ``propose``
+    finds a sequence whose prefix equals the context and returns its next
+    ``k`` tokens.  With truth sequences from a plain-decode run this
+    yields 100% acceptance — the controlled setting for exercising commit
+    paths (page-boundary growth, preemption mid-verify) and for measuring
+    verify-forward throughput independent of draft quality.
+    """
+
+    def __init__(self, sequences: Sequence[Sequence[int]] = ()):
+        self._seqs = [np.asarray(s, dtype=np.int64).ravel()
+                      for s in sequences]
+
+    def add(self, sequence: Sequence[int]):
+        self._seqs.append(np.asarray(sequence, dtype=np.int64).ravel())
+
+    def propose(self, context: np.ndarray, k: int) -> List[int]:
+        ctx = np.asarray(context, dtype=np.int64).ravel()
+        n = len(ctx)
+        if k <= 0:
+            return []
+        for seq in self._seqs:
+            if len(seq) > n and np.array_equal(seq[:n], ctx):
+                return [int(t) for t in seq[n:n + k]]
+        return []
+
+
+_NAMED = {
+    "prompt_lookup": PromptLookupDraft,
+}
+
+
+def make_draft_source(spec) -> DraftSource:
+    """Resolve an ``EngineConfig.draft`` value: a :class:`DraftSource`
+    instance passes through; a registered name ("prompt_lookup")
+    constructs the default instance."""
+    if isinstance(spec, DraftSource):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return _NAMED[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown draft source {spec!r}; known: "
+                f"{sorted(_NAMED)} or a DraftSource instance") from None
+    raise TypeError(
+        f"draft must be a DraftSource or one of {sorted(_NAMED)}, "
+        f"got {type(spec).__name__}")

@@ -76,8 +76,23 @@ Requests carry an explicit lifecycle (``RequestStatus``: WAITING →
 PREFILL → DECODE → FINISHED, with CANCELLED and FAILED exits) and a
 ``result()`` accessor; ``cancel()`` flows through this state machine and
 frees a seated request's pages via the ordinary eviction path.
-Construction takes a typed ``EngineConfig``; legacy keyword arguments
-keep working for one release behind a DeprecationWarning.
+Construction takes a typed ``EngineConfig`` (the PR-6 legacy ``**kwargs``
+surface is gone; keyword options raise a TypeError naming the fix).
+
+Speculative decoding (``EngineConfig(spec_k=K)``, paged int8 layout):
+each tick a pluggable :class:`~repro.serve.draft.DraftSource` proposes up
+to K tokens per greedy decode slot; ONE verify forward (``mode="verify"``
+— the chunk-prefill datapath at per-slot ragged positions) scores every
+slot's ``[last_token, drafts...]`` rows at once, and the engine accepts
+the longest prefix whose drafts match the argmax chain plus one bonus
+token.  Accepted rows' K/V are already committed through the block table
+(pages grown up front via ``Scheduler.grow``); a rejected tail just
+leaves the write cursor behind the garbage rows, which the causal length
+masks hide until the owner rewrites them — allocator state never moves.
+Because acceptance is exact argmax matching, speculative greedy outputs
+are bit-identical to plain decode (``spec_k=0``) on the row-exact
+backends; the counters ``drafted`` / ``accepted`` / ``rejected`` /
+``accept_len_hist`` report the win rate.
 
 ``LockstepEngine`` — the original batch demo (kept as the benchmark baseline
 and for SSM/audio archs): lockstep decoding with one shared position scalar,
@@ -207,6 +222,8 @@ class EngineConfig:
     kv_bits: int = 8                      # 8 (identity default) | 4 (packed)
     tp: int = 1
     mesh: object = None
+    spec_k: int = 0                       # max draft tokens/slot/tick (0=off)
+    draft: object = "prompt_lookup"       # DraftSource instance or name
 
     @classmethod
     def from_kwargs(cls, **kw) -> "EngineConfig":
@@ -271,6 +288,17 @@ class EngineConfig:
                 self.cache_layout == "contiguous":
             bad("tensor parallelism shards the paged KV pool; "
                 "cache_layout='contiguous' has no TP path")
+        if self.spec_k < 0:
+            bad(f"spec_k must be >= 0 (got {self.spec_k})")
+        if self.spec_k > 0 and self.cache_layout == "contiguous":
+            bad("speculative decoding (spec_k > 0) verifies through the "
+                "paged prefill path; cache_layout='contiguous' has no "
+                "verify forward")
+        if self.spec_k > 0 and self.kv_bits != 8:
+            bad("spec_k > 0 with kv_bits=4 is not supported: a verify "
+                "forward's multi-row write + rollback would re-derive "
+                "page scales decode already froze (spec x kv4 interaction "
+                "is a tracked ROADMAP follow-up)")
         return self
 
 
@@ -280,25 +308,21 @@ _DEFAULT_CONFIG = EngineConfig()
 _CONTINUOUS_ONLY_FIELDS = ("prefill_bucket", "cache_layout", "page_size",
                            "n_pages", "max_batched_tokens",
                            "max_prefill_chunk", "reserve_policy", "kv_bits",
-                           "tp", "mesh")
+                           "tp", "mesh", "spec_k", "draft")
 
 
-def _resolve_config(config: Optional[EngineConfig], kw: dict,
-                    caller: str) -> EngineConfig:
-    """Deprecation shim shared by Engine / LockstepEngine / make_engine:
-    legacy keyword options build an EngineConfig behind a
-    DeprecationWarning (one release); unknown names raise TypeError."""
+def _config_only(config: Optional[EngineConfig], kw: dict,
+                 caller: str) -> EngineConfig:
+    """Engines construct from an EngineConfig ONLY.  The PR-6 one-release
+    ``**kwargs`` DeprecationWarning shim is gone; the old keyword surface
+    now fails fast with a TypeError that names the replacement instead of
+    python's generic unexpected-keyword message."""
     if kw:
-        if config is not None:
-            raise TypeError(
-                f"{caller}: pass either an EngineConfig or legacy keyword "
-                f"options, not both")
-        warnings.warn(
-            f"{caller}(cfg, folded, batch_slots=..., ...) keyword options "
-            f"are deprecated and will be removed next release; pass "
-            f"{caller}(cfg, folded, EngineConfig(...))",
-            DeprecationWarning, stacklevel=3)
-        config = EngineConfig.from_kwargs(**kw)
+        raise TypeError(
+            f"{caller}(cfg, folded, {next(iter(kw))}=..., ...) keyword "
+            f"options were removed (deprecated one release ago); pass "
+            f"{caller}(cfg, folded, EngineConfig(...)) — valid fields: "
+            f"{', '.join(f.name for f in dataclasses.fields(EngineConfig))}")
     return (config if config is not None else EngineConfig()).validate()
 
 
@@ -314,7 +338,7 @@ def make_engine(cfg: ModelConfig, folded,
     baseline (same generate() surface).  Continuous-only EngineConfig
     fields set to non-default values for a lockstep arch are reset with a
     warning — not silently."""
-    config = _resolve_config(config, kw, "make_engine")
+    config = _config_only(config, kw, "make_engine")
     if supports_continuous(cfg):
         return Engine(cfg, folded, config)
     dropped = sorted(f for f in _CONTINUOUS_ONLY_FIELDS
@@ -333,7 +357,7 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, folded,
                  config: Optional[EngineConfig] = None, **kw):
-        config = _resolve_config(config, kw, "Engine")
+        config = _config_only(config, kw, "Engine")
         if not supports_continuous(cfg):
             raise EngineConfigError(
                 f"continuous engine serves token-LM archs; arch "
@@ -401,6 +425,19 @@ class Engine:
                 f"but cache_layout resolved to {self.layout!r} for arch "
                 f"{cfg.name!r}; falling back to kv_bits=8", stacklevel=2)
             self.kv_bits = 8
+        # speculative decoding: validate() rejects explicit bad combos;
+        # this guards 'auto' resolving to a layout the verifier can't serve
+        self.spec_k = config.spec_k
+        self.draft = None
+        if self.spec_k:
+            if self.layout != "paged" or self.kv_bits != 8:
+                raise EngineConfigError(
+                    f"speculative decoding (spec_k={self.spec_k}) requires "
+                    f"the int8 paged cache layout, but arch {cfg.name!r} "
+                    f"resolved to layout={self.layout!r} "
+                    f"kv_bits={self.kv_bits}")
+            from repro.serve.draft import make_draft_source
+            self.draft = make_draft_source(config.draft)
         if self.layout == "paged":
             self.max_blocks = pages_needed(self.smax, page_size)
             # +1: page 0 is the reserved trash page (inactive-slot writes)
@@ -447,6 +484,12 @@ class Engine:
                                        pos_offset=pos0, mode="prefill",
                                        block_tables=btab, tp_axis=tp_axis)
 
+            def verify(folded_, cache, toks, pos, btab, nrows):
+                return S.serve_forward(cfg, folded_, toks, cache=cache,
+                                       pos_offset=pos, mode="verify",
+                                       block_tables=btab, verify_rows=nrows,
+                                       tp_axis=tp_axis)
+
             if self.mesh is not None:
                 # one shard_map around the whole forward: the pool enters
                 # as the rank-local Hkv slice; tokens, positions, and the
@@ -466,12 +509,20 @@ class Engine:
                     prefill, self.mesh,
                     in_specs=(rep, pool, rep, rep, rep),
                     out_specs=(rep, pool))
+                verify = Pt.shard_map_compat(
+                    verify, self.mesh,
+                    in_specs=(rep, pool, rep, rep, rep, rep),
+                    out_specs=(rep, pool))
             self._decode = jax.jit(decode_step, donate_argnums=(1,))
             # the chunk forward: writes straight through the block table
             # into the (donated) pool at page-aligned ``pos0`` and attends
             # over the slot's whole mapped chain; one compiled shape per
             # chunk size (retraces per distinct padded length)
             self._prefill = jax.jit(prefill, donate_argnums=(1,))
+            # the speculative verify forward: (B, spec_k+1) tokens at
+            # per-slot ragged positions; one compiled shape total (ragged
+            # proposal lengths pad to spec_k+1, verify_rows masks the rest)
+            self._verify = jax.jit(verify, donate_argnums=(1,))
         else:
             def decode_step(folded_, cache, tok, pos):
                 return S.serve_forward(cfg, folded_, tok, cache=cache,
@@ -501,7 +552,9 @@ class Engine:
         # built FROM the frozen schema: adding a counter means adding it to
         # repro.serve.stats.COUNTERS (with a description) first — the dict
         # and the schema cannot drift apart
-        return {k: 0 for k in stats_schema.COUNTERS}
+        c: Dict = {k: 0 for k in stats_schema.COUNTERS}
+        c["accept_len_hist"] = {}    # the one non-scalar: {accept_len: n}
+        return c
 
     def _init_state(self, seed: int):
         self.requests: Dict[int, Request] = {}
@@ -570,6 +623,7 @@ class Engine:
             prefill_tokens_pending=sum(pending),
             prefill_chunks_pending=sum(
                 -(-p // chunk) if chunk else 1 for p in pending),
+            spec_k=self.spec_k,
         )
         if self.layout == "paged":
             al = self.alloc
@@ -833,6 +887,28 @@ class Engine:
                       else "preempted_decode"] += 1
         self.counters["spilled_rows"] += st.spilled_rows
 
+    def _grow_rows(self, b: int, st: SlotState, rows: int):
+        """Grow slot ``b``'s page chain to cover ``rows`` cache rows,
+        preempting victims while the pool is dry.  ``submit`` caps every
+        request's worst-case pages at pool capacity (speculative rows
+        included: the per-slot draft budget keeps the furthest verify row
+        at plain decode's worst case), so once every other slot is spilled
+        the allocation cannot fail — the RuntimeError is a genuine
+        invariant breach, not an operating condition."""
+        while True:
+            got = self.sched.grow(st, rows)
+            if got is not None:
+                self.counters["grown_pages"] += got
+                break
+            v = self.sched.pick_victim(exclude=frozenset({b}))
+            if v is None:
+                raise RuntimeError(
+                    "page pool exhausted with no preemption victim; "
+                    "submit() sizing makes this unreachable")
+            self._preempt(v)
+        if got:                         # chain unchanged -> row already set
+            self._set_table_row(b, st.pages)
+
     def _grow_decode_pages(self):
         """On-demand mode, run between the tick's prefill chunks and its
         decode forward: make sure every decoding slot owns the page its
@@ -840,29 +916,14 @@ class Engine:
         pool comes up empty the scheduler names a victim (last-admitted
         prefilling slot, else longest-remaining decoder — never the oldest
         seated request while another candidate exists) which is spilled and
-        the allocation retried.  ``submit`` caps every request's worst-case
-        pages at pool capacity, so once every other slot is spilled the
-        grower's allocation cannot fail — the RuntimeError is a genuine
-        invariant breach, not an operating condition."""
+        the allocation retried."""
         order = sorted(self.sched.decoding,
                        key=lambda b: self.sched.slots[b].rid)
         for b in order:
             st = self.sched.slots[b]
             if st is None:              # preempted by an earlier grower
                 continue
-            while True:
-                got = self.sched.grow(st, st.pos + 1)
-                if got is not None:
-                    self.counters["grown_pages"] += got
-                    break
-                v = self.sched.pick_victim(exclude=frozenset({b}))
-                if v is None:
-                    raise RuntimeError(
-                        "page pool exhausted with no preemption victim; "
-                        "submit() sizing makes this unreachable")
-                self._preempt(v)
-            if got:                     # chain unchanged -> row already set
-                self._set_table_row(b, st.pages)
+            self._grow_rows(b, st, st.pos + 1)
 
     def _done(self, st: SlotState) -> bool:
         req = st.request
@@ -870,6 +931,139 @@ class Engine:
             return True
         return req.eos_token is not None and st.emitted and \
             st.emitted[-1] == req.eos_token
+
+    # --- speculative decode (draft-then-verify) --------------------------
+
+    def _spec_tick(self) -> Optional[List[TokenEvent]]:
+        """One speculative decode tick: draft, verify, greedy-accept.
+
+        Replaces the plain (B, 1) decode forward with a single (B,
+        ``spec_k``+1) verify forward when at least one slot has draft
+        proposals.  Per slot the verify rows are ``[last_token, d_1, ...,
+        d_n]`` at cache positions ``pos .. pos+n``; row ``j``'s logits are
+        what plain decode would have produced after committing the first
+        ``j`` proposals, so greedily accepting while ``d_j == argmax(row
+        j-1)`` is bit-identical to running plain decode ``n_acc+1`` times
+        (the final row's argmax is the free "bonus" token).  The write
+        cursor (``st.pos`` / ``self.pos``) advances only over committed
+        tokens — rejected tail rows hold garbage K/V *past* the cursor,
+        which the next forward overwrites write-before-read, so rollback
+        is a no-op on the allocator.
+
+        Phases:
+
+        1. propose — ask the draft source for up to ``k_b`` tokens per
+           greedy decoding slot, where ``k_b`` caps at the slot's
+           remaining ``max_new_tokens`` budget minus the bonus token
+           (keeps the furthest verify row at plain decode's worst case,
+           so ``submit``'s page-cap invariant is untouched).  Sampling
+           slots (temperature > 0) are never drafted for: acceptance is
+           exact argmax matching.  No proposals anywhere -> return None
+           and let the plain decode graph run.
+        2. grow (on-demand reservation only) — extend each proposing
+           slot's page chain to cover its verify rows, in rid order,
+           preempting victims like :meth:`_grow_decode_pages`.  A slot
+           preempted by an earlier grower drops its proposals.
+        3. verify — ONE forward at the fixed compiled shape (B,
+           ``spec_k``+1); non-proposing slots ride along with one real
+           row (their plain decode step), padding rows scatter to the
+           trash page.
+        4. accept — per slot, walk rows while proposals match the argmax
+           chain; emit accepted tokens + the first divergent/bonus token,
+           truncated by ``max_new_tokens``/EOS exactly as plain decode
+           would be.  Counters: ``drafted``/``accepted``/``rejected`` and
+           ``accept_len_hist`` (accepted-prefix length -> slot-tick
+           count); the forward charges one ``decode_steps``.
+        """
+        active = self.sched.decoding
+        props: Dict[int, List[int]] = {}
+        for b in active:
+            st = self.sched.slots[b]
+            req = st.request
+            if req.temperature > 0:
+                continue                    # greedy acceptance only
+            k_b = min(self.spec_k,
+                      req.max_new_tokens - len(st.emitted) - 1)
+            if k_b <= 0:
+                continue
+            ctx = np.concatenate(
+                [np.asarray(req.prompt, np.int64).reshape(-1),
+                 np.asarray(st.emitted, np.int64)])
+            p = [int(t) for t in self.draft.propose(ctx, k_b)[:k_b]]
+            if p:
+                props[b] = p
+        if not props:
+            return None                     # plain decode graph this tick
+        if self.reserve_policy == "ondemand":
+            for b in sorted(props, key=lambda i: self.sched.slots[i].rid
+                            if self.sched.slots[i] is not None else -1):
+                st = self.sched.slots[b]
+                if st is None:              # preempted by an earlier grower
+                    continue
+                self._grow_rows(b, st, st.pos + 1 + len(props[b]))
+        active = self.sched.decoding        # growth may have preempted
+        live = set(active)
+        props = {b: p for b, p in props.items() if b in live}
+        if not props:
+            return None
+        toks = np.zeros((self.batch, self.spec_k + 1), np.int32)
+        nrows = np.ones((self.batch,), np.int32)
+        for b in active:
+            toks[b, 0] = self.sched.slots[b].last_token
+        for b, p in props.items():
+            toks[b, 1:1 + len(p)] = p
+            nrows[b] = 1 + len(p)
+        logits, self.cache = self._verify(
+            self.folded, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.pos), jnp.asarray(self.block_tables),
+            jnp.asarray(nrows))
+        rows = np.asarray(logits)           # (B, spec_k+1, V)
+        events: List[TokenEvent] = []
+        n_emitted = 0
+        for b in active:
+            st = self.sched.slots[b]
+            req = st.request
+            p = props.get(b, [])
+            n_prop = len(p)
+            emit: List[int] = []
+            j = 0
+            while True:
+                tok = self._pick_token(rows[b, j], req)
+                emit.append(tok)
+                if len(st.emitted) + len(emit) >= req.max_new_tokens or (
+                        req.eos_token is not None and tok == req.eos_token):
+                    break                   # request finishes on this token
+                if j < n_prop and p[j] == tok:
+                    j += 1                  # proposal matched: next row
+                    continue
+                break                       # divergence: tok is the repair
+            if n_prop:
+                # accepted prefix length (the loop only advances on
+                # matches, so matching positions form a prefix of emit)
+                n_acc = sum(1 for i in range(min(len(emit), n_prop))
+                            if p[i] == emit[i])
+                self.counters["drafted"] += n_prop
+                self.counters["accepted"] += n_acc
+                self.counters["rejected"] += n_prop - n_acc
+                h = self.counters["accept_len_hist"]
+                h[n_acc] = h.get(n_acc, 0) + 1
+            for tok in emit:
+                st.last_token = tok
+                st.emitted.append(tok)
+                self.pos[b] += 1
+                st.pos += 1
+                done = self._done(st)
+                if done:
+                    self._finish(b)
+                events.append(TokenEvent(st.rid, tok, len(st.emitted) - 1,
+                                         req.status.terminal,
+                                         req.finish_reason))
+                if done:
+                    break
+            n_emitted += len(emit)
+        self.counters["decode_steps"] += 1
+        self.counters["decode_tokens"] += n_emitted
+        return events
 
     # --- the engine loop ------------------------------------------------
 
@@ -890,6 +1084,9 @@ class Engine:
            victim when the pool runs dry,
         4. decode one token for every slot whose prompt is fully cached
            (slots that handed off in step 2 join the same tick's batch).
+           With ``spec_k > 0`` and at least one slot holding draft
+           proposals, step 4 instead runs one multi-row verify forward
+           (:meth:`_spec_tick`) that can commit several tokens per slot.
 
         Returns this tick's :class:`TokenEvent` stream, in emission order.
         Every request's stream ends with exactly one ``final`` event; a
@@ -932,6 +1129,13 @@ class Engine:
             self.counters["cache_pages_peak"] = self.alloc.peak_live
         if not active:
             return events
+        if self.spec_k and self.draft is not None:
+            spec = self._spec_tick()
+            if spec is not None:            # verify forward ran this tick
+                events.extend(spec)
+                self.counters["cache_pages_peak"] = self.alloc.peak_live
+                return events
+            # no proposals anywhere: fall through to plain decode
         toks = np.zeros((self.batch, 1), np.int32)
         for b in active:
             toks[b, 0] = self.sched.slots[b].last_token
@@ -997,7 +1201,7 @@ class LockstepEngine:
 
     def __init__(self, cfg: ModelConfig, folded,
                  config: Optional[EngineConfig] = None, **kw):
-        config = _resolve_config(config, kw, "LockstepEngine")
+        config = _config_only(config, kw, "LockstepEngine")
         self.cfg = cfg
         self.folded = folded
         self.config = config

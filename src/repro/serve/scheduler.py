@@ -455,10 +455,15 @@ class Scheduler:
     def grow(self, st: SlotState, rows: int) -> Optional[int]:
         """Extend ``st``'s page chain to cover ``rows`` cache rows (the
         on-demand decode path calls this just before the write cursor
-        enters a page it doesn't own).  Returns the number of pages newly
-        allocated (0 when the chain already covers ``rows``), or None when
-        the pool came up empty — the engine then preempts a victim and
-        retries; the chain is never partially grown."""
+        enters a page it doesn't own; the speculative verify path calls
+        it with a multi-row budget — cursor + 1 + k proposals — so one
+        tick's accepted tokens all land in owned pages).  Returns the
+        number of pages newly allocated (0 when the chain already covers
+        ``rows``), or None when the pool came up empty — the engine then
+        preempts a victim and retries; the chain is never partially
+        grown.  A speculative over-reservation (proposals rejected) is
+        harmless: the extra pages sit past the cursor inside the slot's
+        max_len ceiling and the next real token reuses them."""
         al = self.allocator
         need = pages_needed(rows, al.page_size) - len(st.pages)
         if need <= 0:

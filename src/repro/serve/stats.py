@@ -21,12 +21,16 @@ added, removed, or its meaning changes.  Payloads carry the version under
 artifacts, the regression gate) must check it rather than guessing from
 key shape.  Version 1 is the first frozen schema (the PR-5 payload plus
 the request-lifecycle counters ``cancelled`` / ``shed_deadline``).
+Version 2 adds the speculative-decoding keys: the ``spec_k`` gauge and
+the ``drafted`` / ``accepted`` / ``rejected`` / ``accept_len_hist``
+counters (the histogram is the one non-scalar counter — a dict mapping
+per-tick accepted-proposal length to tick count).
 """
 from __future__ import annotations
 
 from typing import Dict, Mapping
 
-STATS_SCHEMA_VERSION = 1
+STATS_SCHEMA_VERSION = 2
 
 # --- Engine.stats() gauges (every layout) --------------------------------
 GAUGES: Dict[str, str] = {
@@ -37,6 +41,7 @@ GAUGES: Dict[str, str] = {
     "free_slots": "unoccupied slots",
     "prefill_tokens_pending": "prompt rows still to prefill across slots",
     "prefill_chunks_pending": "prefill chunk forwards still to run",
+    "spec_k": "configured max draft proposals per slot per tick (0 = off)",
 }
 
 # --- extra gauges present iff cache_layout == "paged" --------------------
@@ -73,6 +78,10 @@ COUNTERS: Dict[str, str] = {
     "pool_wait_ticks": "ticks a request waited on pages with a slot free",
     "cancelled": "requests cancelled via Engine.cancel()",
     "shed_deadline": "waiting requests shed at their deadline_tick",
+    "drafted": "draft tokens proposed across all verify forwards",
+    "accepted": "draft tokens accepted (argmax-matched) and committed",
+    "rejected": "draft tokens rejected (cursor rolled back over them)",
+    "accept_len_hist": "dict: accepted-prefix length -> slot-tick count",
 }
 
 # --- ReplicaRouter.stats() gauges + counters -----------------------------

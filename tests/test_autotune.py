@@ -83,6 +83,51 @@ def test_kv4_halves_tile_bytes():
     assert len(keys) == 2
 
 
+def test_measure_mode_decode_bkv(monkeypatch):
+    """REPRO_AUTOTUNE=measure races the live decode kernel: the pick is a
+    legal candidate-derived divisor, cached per shape (second call runs no
+    kernels — asserted by poisoning the cache), and env pins still win."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "measure")
+    got = autotune.decode_bkv(128, batch_slots=2, hkv=2, hd=64)
+    assert 128 % got == 0 and got >= 1
+    key = ("measure", "decode_bkv", 2, 2, 64, 128, 8)
+    assert autotune._cache[key] == got
+    autotune._cache[key] = 64            # poison: cache hit must win
+    assert autotune.decode_bkv(128, batch_slots=2, hkv=2, hd=64) == 64
+    monkeypatch.setenv("REPRO_DECODE_BKV", "32")
+    assert autotune.decode_bkv(128, batch_slots=2, hkv=2, hd=64) == 32
+
+
+def test_measure_mode_prefill_bq(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "measure")
+    got = autotune.prefill_bq(16, batch_slots=2, page_size=8, hkv=2, hd=64,
+                              n_blocks=4, n_heads=2)
+    assert 16 % got == 0 and got >= 1
+    key = ("measure", "prefill_bq", 2, 8, 2, 64, 16, 8, 4, 2)
+    assert autotune._cache[key] == got
+
+
+def test_measure_mode_falls_back_without_kernel(monkeypatch):
+    """An int4 contiguous decode has no kernel to race: measured mode must
+    fall back to the roofline pick instead of crashing."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "measure")
+    got = autotune.decode_bkv(256, batch_slots=2, hkv=2, hd=64, kv_bits=4)
+    assert 256 % got == 0 and got >= 1
+    assert not any(k[0] == "measure" for k in autotune._cache)
+
+
+def test_small_bq_candidates_stay_priced_out():
+    """The 8/16 candidates added for speculative verify shapes must not
+    leak into ordinary long-chain chunk tuning (KV restream dominates)."""
+    big = autotune.prefill_bq(256, batch_slots=8, page_size=16, hkv=8,
+                              hd=128, n_blocks=128, n_heads=32)
+    assert big >= 128
+    # tiny verify-shaped sq: every candidate divisor-fits to sq
+    small = autotune.prefill_bq(4, batch_slots=8, page_size=16, hkv=8,
+                                hd=128, n_blocks=8, n_heads=32)
+    assert small in (1, 2, 4)
+
+
 def test_measure_best_caches_argmin():
     times = {32: 3.0, 64: 1.0, 128: 2.0}
     calls = []

@@ -249,19 +249,24 @@ def test_make_engine_passes_config_to_continuous():
     assert eng.config.page_size == 8
 
 
-def test_legacy_kwargs_shim_deprecated_but_working():
-    """One-release shim: old **kwargs still construct engines behind a
-    DeprecationWarning; unknown names and config+kwargs are errors."""
+def test_legacy_kwargs_form_removed():
+    """The PR-6 one-release **kwargs shim is gone: any keyword option is a
+    TypeError whose message names the EngineConfig replacement (not
+    python's generic unexpected-keyword error), with or without a config
+    positionally present."""
     cfg = smoke_config("yi-6b")
     folded = _folded(cfg)
-    with pytest.warns(DeprecationWarning, match="EngineConfig"):
-        eng = make_engine(cfg, folded, batch_slots=2, max_len=64,
-                          cache_layout="paged", page_size=8)
+    for ctor in (make_engine, Engine):
+        with pytest.raises(TypeError, match="EngineConfig"):
+            ctor(cfg, folded, batch_slots=2, max_len=64)
+        with pytest.raises(TypeError, match="EngineConfig"):
+            ctor(cfg, folded, btach_slots=2)      # typo: same clear error
+        with pytest.raises(TypeError, match="EngineConfig"):
+            ctor(cfg, folded, EngineConfig(), batch_slots=2)
+    # the plain config form still constructs engines, no warning involved
+    eng = make_engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="paged", page_size=8))
     assert isinstance(eng, Engine) and eng.page_size == 8
-    with pytest.raises(TypeError, match="btach_slots"):
-        make_engine(cfg, folded, btach_slots=2)   # typo -> error, not warn
-    with pytest.raises(TypeError, match="not both"):
-        make_engine(cfg, folded, EngineConfig(), batch_slots=2)
 
 
 def test_engine_config_validation_errors():

@@ -1,0 +1,257 @@
+"""Speculative decoding (draft-then-verify on the paged verify forward):
+greedy spec outputs must be bit-identical to plain decode on every
+workload shape — that IS the acceptance rule (accept while draft ==
+argmax), so these tests drive the identity matrix with draft sources
+pinned at both extremes (oracle: 100% acceptance, anti-oracle: 0%) plus
+the shipping prompt-lookup proposer, and assert the counters tell the
+true story (``drafted == accepted + rejected``, histogram mass equals
+proposal ticks)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import fold as F
+from repro.models import transformer as T
+from repro.serve.draft import (DraftSource, PromptLookupDraft,
+                               SequenceDraft, make_draft_source)
+from repro.serve.engine import (Engine, EngineConfig, EngineConfigError,
+                                Request)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def folded_cfg():
+    cfg = smoke_config("yi-6b")
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    calib = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    _, obs, _ = T.forward(cfg, params, amax, calib)
+    return cfg, F.fold_params(cfg, params, obs)
+
+
+def _cycle_requests(cfg, lens, max_news, seed=7, period=3):
+    """Prompt-lookup-friendly prompts: each is a tiled short cycle, so the
+    suffix n-gram always reoccurs earlier in the context."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for ln, mn in zip(lens, max_news):
+        pat = rng.integers(0, cfg.vocab_size, (period,)).astype(np.int32)
+        reqs.append(Request(prompt=np.tile(pat, ln // period + 1)[:ln],
+                            max_new_tokens=mn))
+    return reqs
+
+
+def _outs(eng, reqs):
+    return [r.out.tolist() for r in eng.generate(reqs)]
+
+
+def _truth(cfg, folded, mkreqs, **kw):
+    """Plain-decode reference outputs + the truth sequences (prompt +
+    continuation) the oracle/anti-oracle drafts are built from."""
+    eng = Engine(cfg, folded, EngineConfig(**kw))
+    reqs = mkreqs()
+    outs = _outs(eng, reqs)
+    seqs = [list(np.asarray(r.prompt).ravel()) + o
+            for r, o in zip(reqs, outs)]
+    return outs, seqs
+
+
+class AntiDraft(SequenceDraft):
+    """Anti-oracle: proposes (truth_token + 1) % vocab, guaranteeing every
+    proposal diverges from the argmax chain — forces full-rejection ticks
+    deterministically (no reliance on what a random model happens to
+    emit)."""
+
+    def __init__(self, vocab, sequences=()):
+        super().__init__(sequences)
+        self.vocab = vocab
+
+    def propose(self, context, k):
+        p = super().propose(context, k)
+        return [(t + 1) % self.vocab for t in p]
+
+
+BASE = dict(batch_slots=2, max_len=64, prefill_bucket=4,
+            cache_layout="paged", page_size=4)
+LENS = [3, 11, 6, 17, 5]
+MAX_NEWS = [6, 8, 5, 4, 7]
+
+
+def test_spec_k0_is_plain_decode(folded_cfg):
+    """spec_k=0 must not even build a draft source — it IS plain decode
+    (same engine object graph, no verify dispatch)."""
+    cfg, folded = folded_cfg
+    eng = Engine(cfg, folded, EngineConfig(**BASE))
+    assert eng.spec_k == 0 and eng.draft is None
+    assert eng.stats(check=True)["spec_k"] == 0
+
+
+def test_spec_no_proposals_falls_back_to_plain(folded_cfg):
+    """A draft source that never proposes leaves every tick on the plain
+    decode graph: outputs identical, zero spec counters."""
+    cfg, folded = folded_cfg
+
+    class Mute(DraftSource):
+        def propose(self, context, k):
+            return []
+
+    mk = lambda: _cycle_requests(cfg, LENS, MAX_NEWS)
+    truth, _ = _truth(cfg, folded, mk, **BASE)
+    eng = Engine(cfg, folded, EngineConfig(spec_k=3, draft=Mute(), **BASE))
+    assert _outs(eng, mk()) == truth
+    assert eng.counters["drafted"] == 0
+    assert eng.counters["accept_len_hist"] == {}
+
+
+def test_spec_prompt_lookup_identical(folded_cfg):
+    """The shipping prompt-lookup proposer on a lookup-friendly workload:
+    bit-identical outputs, real acceptances, counters consistent."""
+    cfg, folded = folded_cfg
+    mk = lambda: _cycle_requests(cfg, LENS, MAX_NEWS)
+    truth, _ = _truth(cfg, folded, mk, **BASE)
+    eng = Engine(cfg, folded, EngineConfig(spec_k=3, **BASE))
+    assert _outs(eng, mk()) == truth
+    c = eng.counters
+    assert c["drafted"] == c["accepted"] + c["rejected"]
+    assert c["drafted"] > 0
+    assert sum(c["accept_len_hist"].values()) > 0
+    assert all(0 <= k <= 3 for k in c["accept_len_hist"])
+    assert eng.stats(check=True)["spec_k"] == 3
+
+
+def test_spec_full_rejection_ticks_identical(folded_cfg):
+    """Anti-oracle draft: every proposal diverges, every tick rolls the
+    whole tail back — outputs still bit-identical, accepted == 0, and the
+    histogram is all mass at length 0."""
+    cfg, folded = folded_cfg
+    mk = lambda: _cycle_requests(cfg, LENS, MAX_NEWS)
+    truth, seqs = _truth(cfg, folded, mk, **BASE)
+    eng = Engine(cfg, folded, EngineConfig(
+        spec_k=3, draft=AntiDraft(cfg.vocab_size, seqs), **BASE))
+    assert _outs(eng, mk()) == truth
+    c = eng.counters
+    assert c["drafted"] > 0 and c["accepted"] == 0
+    assert c["rejected"] == c["drafted"]
+    assert set(c["accept_len_hist"]) == {0}
+
+
+def test_spec_oracle_accepts_across_page_boundary(folded_cfg):
+    """Oracle draft (100% acceptance): with page_size=4 and spec_k=3 a
+    fully-accepted tick commits 4 rows — every verify crosses a page
+    boundary, exercising grow-mid-verify on the on-demand policy.  Outputs
+    bit-identical, zero rejections, decode forwards cut by ~spec_k+1."""
+    cfg, folded = folded_cfg
+    mk = lambda: _cycle_requests(cfg, LENS, MAX_NEWS)
+    truth, seqs = _truth(cfg, folded, mk, **BASE)
+    plain_steps = Engine(cfg, folded, EngineConfig(**BASE))
+    _outs(plain_steps, mk())
+    eng = Engine(cfg, folded, EngineConfig(
+        spec_k=3, draft=SequenceDraft(seqs), **BASE))
+    assert _outs(eng, mk()) == truth
+    c = eng.counters
+    assert c["rejected"] == 0 and c["accepted"] == c["drafted"] > 0
+    assert c["grown_pages"] > 0          # chains extended mid-verify
+    assert c["decode_steps"] < plain_steps.counters["decode_steps"]
+
+
+def test_spec_preemption_mid_verify_identical(folded_cfg):
+    """Tight pool + oracle draft growing several rows per tick: growth
+    preempts victims between proposal and verify; restored slots replay
+    and stay token-identical."""
+    cfg, folded = folded_cfg
+    kw = dict(BASE, n_pages=8)
+    mk = lambda: _cycle_requests(cfg, LENS, MAX_NEWS)
+    truth, seqs = _truth(cfg, folded, mk, **kw)
+    eng = Engine(cfg, folded, EngineConfig(
+        spec_k=3, draft=SequenceDraft(seqs), **kw))
+    assert _outs(eng, mk()) == truth
+    assert eng.counters["preemptions"] > 0
+    assert eng.counters["restores"] > 0
+    assert eng.alloc.live == 0           # allocator invariants intact
+
+
+def test_spec_sampling_slots_ride_along(folded_cfg):
+    """temperature > 0 slots are never drafted for (greedy acceptance
+    only) but share verify batches with greedy slots; the greedy outputs
+    stay bit-identical and the sampler emits its full budget."""
+    cfg, folded = folded_cfg
+
+    def mk():
+        reqs = _cycle_requests(cfg, LENS, MAX_NEWS)
+        reqs[2] = Request(prompt=reqs[2].prompt, max_new_tokens=MAX_NEWS[2],
+                          temperature=0.8)
+        return reqs
+
+    truth, seqs = _truth(cfg, folded, mk, **BASE)
+    eng = Engine(cfg, folded, EngineConfig(
+        spec_k=3, draft=SequenceDraft(seqs), **BASE))
+    got = _outs(eng, mk())
+    for i, (g, t) in enumerate(zip(got, truth)):
+        if i == 2:
+            assert len(g) == MAX_NEWS[2]   # sampled: length-deterministic
+        else:
+            assert g == t
+
+
+def test_spec_k_budget_clamps_at_max_new(folded_cfg):
+    """Proposals never extend past max_new_tokens - 1 (the bonus token
+    fills the budget): a huge spec_k is safe and still identical."""
+    cfg, folded = folded_cfg
+    kw = dict(BASE, max_len=96)
+    mk = lambda: _cycle_requests(cfg, [3, 5], [2, 24], seed=11)
+    truth, seqs = _truth(cfg, folded, mk, **kw)
+    eng = Engine(cfg, folded, EngineConfig(
+        spec_k=8, draft=SequenceDraft(seqs), **kw))
+    assert _outs(eng, mk()) == truth
+    c = eng.counters
+    assert c["drafted"] == c["accepted"] + c["rejected"]
+    assert all(0 <= k <= 8 for k in c["accept_len_hist"])
+
+
+def test_spec_config_validation():
+    with pytest.raises(EngineConfigError, match="spec_k"):
+        EngineConfig(spec_k=-1).validate()
+    with pytest.raises(EngineConfigError, match="paged"):
+        EngineConfig(spec_k=2, cache_layout="contiguous").validate()
+    with pytest.raises(EngineConfigError, match="kv_bits"):
+        EngineConfig(spec_k=2, cache_layout="paged", kv_bits=4).validate()
+
+
+# --- draft-source unit tests ---------------------------------------------
+
+
+def test_prompt_lookup_draft():
+    d = PromptLookupDraft(min_ngram=1, max_ngram=3)
+    # cycle: suffix [1,2,3] reoccurs at the start, continuation is [4,5]
+    assert d.propose(np.array([1, 2, 3, 4, 5, 1, 2, 3]), 2) == [4, 5]
+    # longest n-gram wins over a shorter, more recent match
+    assert d.propose(np.array([7, 2, 3, 9, 1, 2, 3]), 1) == [9]
+    # no earlier occurrence -> nothing
+    assert d.propose(np.array([1, 2, 3, 4]), 3) == []
+    assert d.propose(np.array([1, 2, 3, 1]), 0) == []
+    with pytest.raises(ValueError):
+        PromptLookupDraft(min_ngram=0)
+    with pytest.raises(ValueError):
+        PromptLookupDraft(min_ngram=3, max_ngram=2)
+
+
+def test_sequence_draft():
+    d = SequenceDraft([[1, 2, 3, 4, 5]])
+    assert d.propose(np.array([1, 2]), 2) == [3, 4]
+    assert d.propose(np.array([1, 2]), 9) == [3, 4, 5]
+    assert d.propose(np.array([2, 1]), 2) == []    # prefix mismatch
+    assert d.propose(np.array([1, 2, 3, 4, 5]), 2) == []  # exhausted
+    d.add([2, 1, 7])
+    assert d.propose(np.array([2, 1]), 2) == [7]
+
+
+def test_make_draft_source():
+    assert isinstance(make_draft_source("prompt_lookup"), PromptLookupDraft)
+    d = SequenceDraft()
+    assert make_draft_source(d) is d
+    with pytest.raises(ValueError, match="prompt_lookup"):
+        make_draft_source("no_such_draft")
+    with pytest.raises(TypeError):
+        make_draft_source(42)
