@@ -15,6 +15,14 @@ the two checks they don't make:
     artifact must match the frozen stats schema exactly (baselines are
     exempt: they may predate schema growth, but nothing fresh may drift).
 
+Artifacts whose top-level ``kind`` is ``analysis_report`` (ANALYSIS.json
+from ``python -m repro.analysis.analyze``) take a different gate: the
+frozen analysis schema must validate, a FRESH report must carry zero
+violations (the committed baseline is exempt from re-validation growth,
+but a clean tree can never ship a violating report), and the per-graph
+float-primitive set must not grow vs the committed baseline (the one-way
+"integer datapath regressed toward float" ratchet).
+
 Speedup-ratio and latency keys are deliberately NOT gated: on 2-core CI
 runners wall-clock percentiles are too noisy (they remain in the artifacts
 for the perf trajectory); aggregate tok/s over a whole smoke run is the
@@ -83,9 +91,47 @@ def counter_schema_errors(doc):
     return errs
 
 
+def check_analysis_artifact(cur_path: Path, cur: dict, baseline_dir: Path):
+    """Gate an ANALYSIS.json: schema-valid, zero violations when fresh,
+    float-primitive ratchet vs the committed baseline."""
+    from repro.analysis import report as AR
+    failures = []
+    try:
+        AR.validate_report(cur, what=cur_path.name)
+    except ValueError as e:
+        return [f"{cur_path.name}: analysis schema: {e}"]
+    n_viol = AR.count_violations(cur)
+    status = "ok" if n_viol == 0 else "VIOLATIONS"
+    print(f"{cur_path.name}: analysis report v{cur['schema_version']}, "
+          f"{len(cur['presets'])} preset(s), {n_viol} violation(s) "
+          f"[{status}]")
+    if n_viol:
+        failures.append(f"{cur_path.name}: fresh analysis report carries "
+                        f"{n_viol} violation(s)")
+    base_path = baseline_dir / cur_path.name
+    if not base_path.exists():
+        failures.append(
+            f"{cur_path.name}: no committed baseline at {base_path} — run "
+            f"`python -m repro.analysis.analyze --out` and commit its JSON "
+            f"there")
+        return failures
+    base = json.loads(base_path.read_text())
+    try:
+        ratchet = AR.compare_to_baseline(cur, base)
+    except ValueError as e:
+        return failures + [f"{cur_path.name}: baseline unreadable: {e}"]
+    for msg in ratchet:
+        failures.append(f"{cur_path.name}: {msg}")
+    if not ratchet:
+        print(f"{cur_path.name}: float-primitive ratchet vs baseline holds")
+    return failures
+
+
 def check_artifact(cur_path: Path, baseline_dir: Path, max_drop: float):
     failures = []
     cur = json.loads(cur_path.read_text())
+    if isinstance(cur, dict) and cur.get("kind") == "analysis_report":
+        return check_analysis_artifact(cur_path, cur, baseline_dir)
     for p, ok in sorted(divergence_flags(cur).items()):
         status = "ok" if ok else "DIVERGED"
         print(f"{cur_path.name}: flag {p} = {ok} [{status}]")

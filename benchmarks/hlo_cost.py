@@ -1,258 +1,24 @@
-"""Hierarchical cost extraction from post-optimization HLO text.
-
-XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
-under-reports scan-over-layers / grad-accumulation programs by the trip
-count.  This module parses the compiled HLO, builds the computation call
-graph, multiplies every computation's costs by the product of enclosing
-``known_trip_count`` values, and returns loop-aware totals:
-
-  * ``dot_flops``      — 2 * prod(output dims) * prod(contracting dims)
-  * ``hbm_bytes``      — sum of operand+result bytes of top-level ops per
-                         computation (post-fusion, so fusion internals do not
-                         double-count; a standard HBM-traffic model)
-  * ``collective_bytes`` / per-op-kind breakdown — result bytes of
-                         all-gather/all-reduce/reduce-scatter/all-to-all/
-                         collective-permute
-
-Everything is derived from the dry-run artifact itself (deliverable g), with
-the trip-count scaling auditable via ``loop_report``.
+"""Import shim: the loop-aware HLO cost parser moved to
+``repro.analysis.hlo_cost`` (PR 9) so the analysis subsystem can use it
+without path games.  Kept so existing ``from benchmarks import hlo_cost``
+callers and the CLI keep working.
 """
 from __future__ import annotations
 
-import json
-import re
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import sys
+from pathlib import Path
 
-_DT_BYTES = {"pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2,
-             "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
-             "s64": 8, "u64": 8, "f64": 8, "token": 0, "u1": 1}
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-# Ops whose names/metadata carry one of these markers move PACKED int4
-# payloads in u8 carriers (two nibbles per element — the kv4 pool and the
-# int4 weight path pack along the trailing axis), so their u8 buffers are
-# attributed at 0.5 byte/element.  True s4/u4 shapes are always 0.5.
-PACKED_U8_MARKERS = ("_q4", "kv4", "int4_pack", "pack_int4")
-
-_SHAPE_RE = re.compile(
-    r"(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
-
-_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-
-def _shape_bytes(s: str, u8_half: bool = False) -> float:
-    total = 0.0
-    for m in _SHAPE_RE.finditer(s):
-        dt, dims = m.groups()
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        per = 0.5 if (u8_half and dt == "u8") else _DT_BYTES[dt]
-        total += n * per
-    return total
-
-
-def _shape_dims(s: str) -> Optional[List[int]]:
-    m = _SHAPE_RE.search(s)
-    if not m:
-        return None
-    return [int(d) for d in m.group(2).split(",") if d]
-
-
-@dataclass
-class Comp:
-    name: str
-    lines: List[str] = field(default_factory=list)
-    shapes: Dict[str, str] = field(default_factory=dict)  # %value -> shape str
-
-
-def parse_computations(hlo: str) -> Tuple[Dict[str, Comp], str]:
-    comps: Dict[str, Comp] = {}
-    entry = None
-    cur: Optional[Comp] = None
-    header_re = re.compile(r"^(ENTRY )?%?([\w.\-]+)\s*\((.*?)\)\s*->")
-    for raw in hlo.splitlines():
-        line = raw.rstrip()
-        ls = line.strip()
-        if not line.startswith(" ") and header_re.match(ls) and ls.endswith("{"):
-            m = header_re.match(ls)
-            cur = Comp(m.group(2))
-            comps[cur.name] = cur
-            if m.group(1):
-                entry = cur.name
-            # parameter shapes from the signature
-            for pm in re.finditer(r"%?([\w.\-]+): ([^,)]+)", m.group(3) if False else ls):
-                cur.shapes[pm.group(1)] = pm.group(2)
-            continue
-        if ls == "}" or ls == "})":
-            cur = None
-            continue
-        if cur is None or not ls or ls.startswith("//"):
-            continue
-        cur.lines.append(ls)
-        dm = re.match(r"(?:ROOT )?%?([\w.\-]+) = (\(?[\w\[\],{}\s/]+?\)?) [a-z][\w\-]*\(", ls)
-        if dm:
-            cur.shapes[dm.group(1)] = dm.group(2)
-    return comps, entry
-
-
-_CALL_RE = re.compile(
-    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)%?([\w.\-]+)")
-_WHILE_RE = re.compile(
-    r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)(.*)$")
-_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
-
-
-def _op_kind(ls: str) -> Optional[str]:
-    m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (?:\(?[\w\[\],{}\s/]+?\)?) "
-                 r"([a-z][\w\-]*)\(", ls)
-    return m.group(1) if m else None
-
-
-def _operands(ls: str, comp: Comp) -> List[str]:
-    # operand list inside the first (...) after the op name
-    m = re.search(r"\((.*)\)", ls)
-    if not m:
-        return []
-    ops = []
-    for om in re.finditer(r"%([\w.\-]+)", m.group(1)):
-        if om.group(1) in comp.shapes:
-            ops.append(om.group(1))
-    return ops
-
-
-def analyze(hlo: str, packed_u8_markers=PACKED_U8_MARKERS) -> Dict:
-    comps, entry = parse_computations(hlo)
-    # multipliers via BFS from entry
-    mult: Dict[str, float] = defaultdict(float)
-    mult[entry] = 1.0
-    order = [entry]
-    seen = {entry}
-    loop_report = []
-    i = 0
-    while i < len(order):
-        cname = order[i]
-        i += 1
-        comp = comps.get(cname)
-        if comp is None:
-            continue
-        for ls in comp.lines:
-            wm = _WHILE_RE.search(ls)
-            if wm:
-                cond, body, rest = wm.groups()
-                tm = _TRIP_RE.search(rest)
-                trips = int(tm.group(1)) if tm else 1
-                loop_report.append({"body": body, "trips": trips,
-                                    "parent": cname})
-                for sub, f in ((body, trips), (cond, trips + 1)):
-                    mult[sub] += mult[cname] * f
-                    if sub not in seen:
-                        seen.add(sub)
-                        order.append(sub)
-                continue
-            for cm in _CALL_RE.finditer(ls):
-                sub = cm.group(1)
-                if sub in (cname,):
-                    continue
-                mult[sub] += mult[cname]
-                if sub not in seen:
-                    seen.add(sub)
-                    order.append(sub)
-
-    flops = 0.0
-    coll = {k: {"count": 0.0, "bytes": 0.0} for k in _COLL_KINDS}
-    hbm = 0.0
-    for cname, comp in comps.items():
-        f = mult.get(cname, 0.0)
-        if f == 0.0:
-            continue
-        fused = cname.startswith("fused_") or ".fused" in cname or \
-            "fused_computation" in cname
-        for ls in comp.lines:
-            kind = _op_kind(ls)
-            if kind is None:
-                continue
-            # packed-int4-in-u8 annotation: attribute this op's u8 buffers
-            # at half a byte per element (nibble-planar payloads)
-            half = any(m in ls for m in packed_u8_markers)
-            if kind == "dot":
-                out_dims = _shape_dims(ls.split(" dot(")[0]) or []
-                opnds = _operands(ls, comp)
-                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ls)
-                cdims = [int(x) for x in cm.group(1).split(",") if x] if cm else []
-                if opnds:
-                    lhs_shape = _shape_dims(comp.shapes.get(opnds[0], "")) or []
-                    cprod = 1
-                    for cd in cdims:
-                        if cd < len(lhs_shape):
-                            cprod *= lhs_shape[cd]
-                    import math as _m
-
-                    flops += f * 2.0 * cprod * _m.prod(out_dims) if out_dims \
-                        else 0.0
-            if kind in _COLL_KINDS and not ls.startswith("%" + cname):
-                shape_part = ls.split(f" {kind}(")[0]
-                b = _shape_bytes(shape_part, half)
-                coll[kind]["count"] += f
-                coll[kind]["bytes"] += f * b
-            if not fused and kind not in (
-                    "parameter", "constant", "tuple", "get-tuple-element",
-                    "bitcast", "while", "conditional", "call", "after-all",
-                    "iota", "partition-id", "replica-id") \
-                    and kind not in _COLL_KINDS:
-                # HBM traffic model: bytes actually touched per op kind.
-                # Fusions are classified by XLA's root-op naming so that a
-                # slice-fusion reading one layer from a loop-carried stacked
-                # tensor is charged the slice, not the whole stack.
-                res_b = _shape_bytes(ls.split(" " + kind + "(")[0], half)
-                name = ls.split(" = ")[0]
-
-                def opnds_b():
-                    return [_shape_bytes(comp.shapes.get(o, ""), half)
-                            for o in _operands(ls, comp)]
-
-                if kind == "dynamic-update-slice" or (
-                        kind == "fusion" and "dynamic-update-slice" in name):
-                    obs_ = opnds_b()
-                    upd = min(obs_) if obs_ else res_b
-                    hbm += f * 2 * upd          # read+write the slice only
-                elif kind in ("dynamic-slice", "gather", "broadcast",
-                              "reshape", "transpose", "copy", "convert",
-                              "slice", "pad", "reverse") or (
-                        kind == "fusion" and any(
-                            t in name for t in ("slice_fusion", "gather",
-                                                "broadcast_fusion"))):
-                    hbm += f * 2 * res_b        # touch ~result-sized data
-                elif kind == "dot" or (
-                        kind == "fusion" and "reduce" in name):
-                    hbm += f * (res_b + sum(opnds_b()))
-                elif kind in ("reduce", "reduce-window", "scatter", "sort",
-                              "concatenate", "select-and-scatter"):
-                    hbm += f * (res_b + sum(opnds_b()))
-                else:
-                    # elementwise-ish (incl. generic fusions): inputs are
-                    # broadcast-or-same-shape — cap each at 4x result size
-                    hbm += f * (res_b + sum(min(o, 4 * res_b)
-                                            for o in opnds_b()))
-    return {
-        "dot_flops": flops,
-        "hbm_bytes": hbm,
-        "collectives": {k: v for k, v in coll.items()},
-        "collective_bytes": sum(v["bytes"] for v in coll.values()),
-        "loop_report": loop_report,
-        "n_computations": len(comps),
-    }
-
-
-def analyze_file(path: str) -> Dict:
-    return analyze(open(path).read())
-
+from repro.analysis.hlo_cost import (  # noqa: E402,F401
+    PACKED_U8_MARKERS,
+    analyze,
+    analyze_file,
+    parse_computations,
+)
 
 if __name__ == "__main__":
-    import sys
+    import json
 
     out = analyze_file(sys.argv[1])
     out.pop("loop_report")

@@ -23,12 +23,11 @@ import json
 import sys
 from pathlib import Path
 
-PEAK_FLOPS = 197e12      # bf16/int8 per chip
-HBM_BW = 819e9           # B/s per chip
-ICI_BW = 50e9            # B/s per link
-ICI_LINKS = 4
-
 ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+# per-chip ceilings — single source of truth, drift-tested
+from repro.kernels.hw_constants import HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS  # noqa: E402
 RESULTS = ROOT / "results" / "dryrun"
 OUT = ROOT / "results" / "roofline"
 
@@ -78,7 +77,6 @@ def analyze_record(rec: dict, cfg, shape):
 
 
 def load_all(pattern="*.json"):
-    sys.path.insert(0, str(ROOT / "src"))
     from repro.configs.base import SHAPES, get_config
 
     rows = []

@@ -532,7 +532,7 @@ def _first_divergence(a, b):
     """Index of the first differing token between two per-request output
     lists, or -1 if identical (length difference counts at the shorter
     length)."""
-    for i, (x, y) in enumerate(zip(a, b)):
+    for i, (x, y) in enumerate(zip(a, b, strict=False)):
         if x != y:
             return i
     return -1 if len(a) == len(b) else min(len(a), len(b))
@@ -613,7 +613,7 @@ def bench_kv4(args, cfg, folded, Request):
         headroom = eng4.alloc.capacity / eng8.alloc.capacity
         worst_headroom = min(worst_headroom, headroom)
         div = [_first_divergence(a, b)
-               for a, b in zip(outs["kv4"], outs["kv8"])]
+               for a, b in zip(outs["kv4"], outs["kv8"], strict=True)]
         diverged = [d for d in div if d >= 0]
         wrec.update(
             pages_headroom=round(headroom, 3),
@@ -719,7 +719,7 @@ def bench_spec(args, cfg, folded, Request):
     acc_per_fwd = sc["accepted"] / max(steps["spec"], 1)
     match = outs["spec"] == outs["plain"]
     div = [_first_divergence(a, b)
-           for a, b in zip(outs["spec"], outs["plain"])]
+           for a, b in zip(outs["spec"], outs["plain"], strict=True)]
     rows.append(("serve/spec_decode_fwd_reduction", fwd_ratio,
                  f"{steps['plain']} -> {steps['spec']} forwards"))
     rows.append(("serve/spec_accept_rate", acc_rate,
@@ -883,7 +883,7 @@ def bench_serve(args, cfg, folded, Request):
         return router, reqs, info, secs
 
     def identity(reqs, info):
-        for i, (r, rec) in enumerate(zip(reqs, info)):
+        for i, (r, rec) in enumerate(zip(reqs, info, strict=True)):
             if rec["status"] == "rejected":
                 continue
             out = [] if r.out is None else r.out.tolist()

@@ -1,0 +1,14 @@
+"""Static analysis of the integer serving datapath.
+
+Submodules (import them directly; this package namespace stays empty so
+``boundary`` can be imported from kernel modules without cycles):
+
+* ``boundary``    — registry of named kernel-equivalent scopes.
+* ``jaxpr_audit`` — walks hot-graph jaxprs enforcing integer-datapath rules.
+* ``pallas_lint`` — static checks over the Pallas kernels' BlockSpecs.
+* ``hlo_cost``    — loop-aware HLO FLOP/byte accounting (moved from
+  ``benchmarks/``; a shim re-exports it there).
+* ``report``      — frozen versioned ANALYSIS.json schema + baseline diff.
+* ``fixtures``    — intentionally-broken graphs the auditor must flag.
+* ``analyze``     — CLI: ``python -m repro.analysis.analyze``.
+"""

@@ -1,0 +1,179 @@
+"""CI-gated static-analysis driver: ``python -m repro.analysis.analyze``.
+
+Builds one folded smoke model, then for every EngineConfig preset on the
+audit matrix (kv_bits 8/4 x tp 1/4 x spec_k 0/3, minus the combinations
+``EngineConfig.validate`` rejects) boots a live paged engine, audits every
+compiled hot graph (decode, prefill chunk, verify) with
+``repro.analysis.jaxpr_audit``, runs the Pallas kernel lint, and emits one
+versioned ANALYSIS.json (``repro.analysis.report`` schema).
+
+Exit is non-zero on ANY violation, on a float-primitive ratchet failure
+vs ``--baseline``, or — under ``--self-test`` — if any intentionally
+broken fixture fails to raise its expected rule id.  Presets needing more
+devices than the host has (tp=4 without
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) are recorded
+under ``skipped``, never silently dropped.
+
+    python -m repro.analysis.analyze --out ANALYSIS.json
+    python -m repro.analysis.analyze --baseline benchmarks/baselines/ANALYSIS.json
+    python -m repro.analysis.analyze --self-test
+    python -m repro.analysis.analyze --hlo          # + bytes-by-dtype (slow)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+# (kv_bits, tp, spec_k) — every combination EngineConfig accepts
+PRESETS: Tuple[Tuple[int, int, int], ...] = (
+    (8, 1, 0), (8, 1, 3), (8, 4, 0), (8, 4, 3), (4, 1, 0), (4, 4, 0),
+)
+
+
+def preset_name(kv_bits: int, tp: int, spec_k: int) -> str:
+    return f"kv{kv_bits}_tp{tp}_spec{spec_k}"
+
+
+def _build_folded():
+    import jax
+    from repro.configs import smoke_config
+    from repro.models import fold as F
+    from repro.models import transformer as T
+    cfg = smoke_config("yi-6b")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    amax = T.init_amax(cfg)
+    calib = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    _, obs, _ = T.forward(cfg, params, amax, calib)
+    return cfg, F.fold_params(cfg, params, obs)
+
+
+def run_audits(*, with_hlo: bool = False,
+               presets=PRESETS) -> Tuple[Dict, List[Dict]]:
+    """(presets payload for ``report.build_report``, skipped list)."""
+    import jax
+    from repro.analysis import hlo_cost, jaxpr_audit
+    from repro.serve.engine import Engine, EngineConfig
+
+    cfg, folded = _build_folded()
+    n_dev = jax.device_count()
+    out: Dict = {}
+    skipped: List[Dict] = []
+    for kv_bits, tp, spec_k in presets:
+        name = preset_name(kv_bits, tp, spec_k)
+        if tp > n_dev:
+            skipped.append({
+                "preset": name,
+                "reason": f"needs {tp} devices, host exposes {n_dev} (set "
+                          "XLA_FLAGS=--xla_force_host_platform_device_count"
+                          f"={tp})"})
+            print(f"[analyze] {name}: SKIP ({skipped[-1]['reason']})")
+            continue
+        eng = Engine(cfg, folded, EngineConfig(
+            batch_slots=4, max_len=64, cache_layout="paged", page_size=8,
+            kv_bits=kv_bits, tp=tp, spec_k=spec_k))
+        results = jaxpr_audit.audit_engine(eng)
+        hbm: Dict[str, Dict] = {}
+        if with_hlo:
+            for gname, (fn, args) in eng.hot_graphs().items():
+                text = jaxpr_audit.lowered_hlo(fn, args)
+                hbm[gname] = hlo_cost.analyze(text)["hbm_bytes_by_dtype"]
+        nv = sum(len(r.violations) for r in results.values())
+        print(f"[analyze] {name}: {len(results)} graph(s), "
+              f"{sum(r.n_eqns for r in results.values())} eqns, "
+              f"{nv} violation(s)")
+        out[name] = ({"kv_bits": kv_bits, "tp": tp, "spec_k": spec_k},
+                     results, hbm)
+    return out, skipped
+
+
+def self_test() -> int:
+    from repro.analysis import fixtures
+    res = fixtures.run_self_test()
+    for name, fr in res["fixtures"].items():
+        want = fr["expected_rule"] or "(clean)"
+        status = "ok" if fr["ok"] else "FAILED"
+        print(f"[self-test] {name}: expected {want}, "
+              f"flagged {fr['flagged_rules']} [{status}]")
+    if not res["ok"]:
+        print("[self-test] FAILED: a broken fixture was not flagged with "
+              "its rule id (or a negative control was) — the analyzers "
+              "cannot be trusted", file=sys.stderr)
+        return 1
+    print(f"[self-test] all {len(res['fixtures'])} fixtures behaved")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.analyze",
+        description="integer-datapath jaxpr audit + pallas kernel lint")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write the versioned JSON report here")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="committed ANALYSIS.json to ratchet float "
+                         "primitives against")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also compile each hot graph and record HLO "
+                         "bytes-by-dtype (slower)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the intentionally-broken fixtures instead of "
+                         "auditing the tree")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+
+    import jax
+    from repro.analysis import pallas_lint, report
+
+    presets, skipped = run_audits(with_hlo=args.hlo)
+    pallas = pallas_lint.run_all()
+    doc = report.build_report(presets=presets, skipped=skipped,
+                              pallas=pallas, jax_version=jax.__version__)
+    if args.out:
+        args.out.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        print(f"[analyze] wrote {args.out}")
+
+    rc = 0
+    total = doc["violations_total"]
+    if total:
+        print(f"\nANALYSIS FAILED: {total} violation(s):", file=sys.stderr)
+        for p in doc["presets"].values():
+            for g in p["graphs"].values():
+                for v in g["violations"]:
+                    print(f"  - [{v['rule']}] {v['graph']}{v['scope']}: "
+                          f"{v['detail']}", file=sys.stderr)
+        for v in doc["pallas_lint"]["violations"]:
+            print(f"  - [{v['rule']}] {v['graph']}: {v['detail']}",
+                  file=sys.stderr)
+        rc = 1
+    else:
+        n_graphs = sum(len(p["graphs"]) for p in doc["presets"].values())
+        print(f"[analyze] zero violations across {len(doc['presets'])} "
+              f"preset(s) / {n_graphs} graph(s) + pallas lint"
+              + (f" ({len(skipped)} preset(s) skipped)" if skipped else ""))
+
+    if args.baseline:
+        if not args.baseline.exists():
+            print(f"[analyze] baseline {args.baseline} missing — commit one "
+                  "(run with --out and check it in)", file=sys.stderr)
+            rc = rc or 1
+        else:
+            base = json.loads(args.baseline.read_text())
+            failures = report.compare_to_baseline(doc, base)
+            for f in failures:
+                print(f"[baseline] {f}", file=sys.stderr)
+            if failures:
+                rc = rc or 1
+            else:
+                print(f"[analyze] float-primitive ratchet vs "
+                      f"{args.baseline} holds")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

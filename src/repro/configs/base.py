@@ -99,10 +99,7 @@ class ModelConfig:
         """Rough dense-equivalent parameter count (for roofline MODEL_FLOPS)."""
         d, ff, hd = self.d_model, self.d_ff, self.hd
         attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads + hd * self.n_heads * d
-        if self.act == "swiglu":
-            mlp_dense = 3 * d * ff
-        else:
-            mlp_dense = 2 * d * ff
+        mlp_dense = (3 if self.act == "swiglu" else 2) * d * ff
         total = 0
         for i in range(self.n_layers):
             blk = self.pattern[i % len(self.pattern)]

@@ -18,6 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.boundary import kernel_boundary
+
 
 def pack_int4(codes: jax.Array, axis: int = -1) -> jax.Array:
     """Pack signed int4 codes (stored in int8, range [-8,7]) two per uint8.
@@ -133,11 +135,14 @@ def dequantize_kv_page(packed_u8: jax.Array, scale: jax.Array,
     return dequant_int4_codes(unpack_int4_planar(packed_u8, axis=axis), scale)
 
 
+@kernel_boundary(why="whole-pool int4 dequant for the bit-exact jnp "
+                     "oracles; the Pallas kernels do this per tile in VMEM")
 def dequantize_kv_pool(packed_pool_u8: jax.Array,
                        page_scales: jax.Array) -> jax.Array:
     """Whole-pool dequant: (n_pages, P, Hkv, hd//2) uint8 + (n_pages,) fp32
     -> (n_pages, P, Hkv, hd) int8.  Used by the jnp fallback paths and the
     kernel oracles — NOT by the Pallas kernels, which dequantize per tile
-    in VMEM and never materialize this view."""
+    in VMEM and never materialize this view.  Registered as a kernel
+    boundary: the pool-scale float cast inside is the audited exemption."""
     c4 = unpack_int4_planar(packed_pool_u8, axis=-1)
     return dequant_int4_codes(c4, page_scales[:, None, None, None])

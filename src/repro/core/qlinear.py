@@ -55,10 +55,9 @@ def qat_linear(
         a_obs = jax.lax.stop_gradient(q.per_tensor_max(x))
         a_m = jnp.where(a_max > 0, a_max, a_obs)
         x = q.fake_quant(x, a_m, policy.a_bits)
-        if policy.per_channel_w:
-            w_m = jax.lax.stop_gradient(q.per_channel_max(w, axis=-1))
-        else:
-            w_m = jax.lax.stop_gradient(q.per_tensor_max(w))
+        w_m = jax.lax.stop_gradient(
+            q.per_channel_max(w, axis=-1) if policy.per_channel_w
+            else q.per_tensor_max(w))
         w = q.fake_quant(w, w_m, policy.w_bits)
     y = x @ w
     if b is not None:
@@ -118,10 +117,8 @@ def integer_linear_ref(x_i: jax.Array, f: FoldedLinear) -> jax.Array:
 
     x_i: int8 codes (..., K).  Returns int8 codes (..., N) on the s_y grid.
     """
-    if f.w_bits == 4:
-        w_codes = packing.unpack_int4_planar(f.w_packed, axis=0)  # int8 (K, N)
-    else:
-        w_codes = f.w_packed
+    w_codes = (packing.unpack_int4_planar(f.w_packed, axis=0)  # int8 (K,N)
+               if f.w_bits == 4 else f.w_packed)
     acc = jax.lax.dot_general(
         x_i.astype(jnp.int8),
         w_codes.astype(jnp.int8),

@@ -42,13 +42,15 @@ from __future__ import annotations
 
 import os
 
-# v4-lite ceilings — keep in sync with benchmarks/roofline.py (that module
-# sits outside the package, so the constants are mirrored, not imported).
-PEAK_INT8_FLOPS = 197e12     # int8 MXU ops/s
-HBM_BW = 819e9               # bytes/s
-VMEM_BUDGET = 16 * 2**20     # bytes/core
-VMEM_FILL = 0.5              # leave headroom for double-buffering + scratch
-STEP_OVERHEAD_S = 2e-6       # DMA issue + grid step bookkeeping
+# v4-lite ceilings — shared with benchmarks/roofline.py and the analysis
+# lane's VMEM lint via kernels/hw_constants (drift-tested).
+from repro.kernels.hw_constants import (  # noqa: F401  (re-exported names)
+    HBM_BW,
+    PEAK_INT8_FLOPS,
+    STEP_OVERHEAD_S,
+    VMEM_BUDGET,
+    VMEM_FILL,
+)
 
 DECODE_BKV_CANDIDATES = (128, 256, 512, 1024)
 # 8/16 exist for the small ragged batches the speculative verify forward

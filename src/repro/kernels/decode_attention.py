@@ -40,9 +40,35 @@ from repro.kernels.quant_softmax import lut_lookup
 NEG_INIT = -(1 << 30)
 
 
-def _kv_load_i8(k_ref, v_ref, b_i, k_i):
+def _kv_load_i8(k_ref, v_ref, _b_i, _k_i):
     """Default KV tile loader: the pool already holds int8 codes."""
     return k_ref[0, :, 0], v_ref[0, :, 0]
+
+
+def decode_kv_index_map(bkv):
+    """KV BlockSpec index map for the CONTIGUOUS decode kernel.
+
+    Clamps dead KV blocks onto the slot's last live block: the dead grid
+    step re-addresses the block already resident in VMEM, so the pipeliner
+    issues no DMA.  Module-level (not a closure inside the wrapper) so
+    ``repro.analysis.pallas_lint`` can evaluate its bounds over the grid."""
+    def kv_map(bb, h, k, lens):
+        last_live = jnp.maximum((lens[bb] - 1) // bkv, 0)
+        return (bb, jnp.minimum(k, last_live), h, 0)
+    return kv_map
+
+
+def paged_kv_index_map(psize):
+    """KV BlockSpec index map shared by BOTH paged decode kernels (int8 and
+    int4-packed): clamp the dead logical block to the last live one, THEN
+    translate through the slot's scalar-prefetched block-table row.  One
+    factory — not two copies — so the int8/q4 agreement is structural and
+    ``pallas_lint`` can prove the returned page index stays inside the
+    pool for every grid point."""
+    def kv_map(bb, h, k, lens, btab):
+        last_live = jnp.maximum((lens[bb] - 1) // psize, 0)
+        return (btab[bb, jnp.minimum(k, last_live)], 0, h, 0)
+    return kv_map
 
 
 def dequant_kv_tile(w_u8, scale):
@@ -138,12 +164,7 @@ def decode_qattention(
     bkv = divisor_tile(bkv, smax)
     grid = (b, hkv, smax // bkv)
     kernel = functools.partial(_decode_kernel, g, bkv)
-
-    def kv_map(bb, h, k, lens):
-        # clamp dead blocks onto the slot's last live block: same address as
-        # the previous grid step -> the pipeliner skips the DMA entirely
-        last_live = jnp.maximum((lens[bb] - 1) // bkv, 0)
-        return (bb, jnp.minimum(k, last_live), h, 0)
+    kv_map = decode_kv_index_map(bkv)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                    # lengths
@@ -182,7 +203,7 @@ def decode_qattention(
       jnp.asarray(out_scale, jnp.float32).reshape(1))
 
 
-def _paged_decode_kernel(g, psize, len_ref, btab_ref, *rest):
+def _paged_decode_kernel(g, psize, len_ref, _btab_ref, *rest):
     # the block table feeds only the BlockSpec index maps (which pool page
     # backs this slot's k-th logical KV block); the body is exactly the
     # contiguous kernel with block size = page size
@@ -213,12 +234,7 @@ def paged_decode_qattention(
     nb = block_tables.shape[1]
     grid = (b, hkv, nb)
     kernel = functools.partial(_paged_decode_kernel, g, psize)
-
-    def kv_map(bb, h, k, lens, btab):
-        # clamp dead logical blocks to the last live one, THEN translate
-        # through the block table: dead steps re-address a resident page
-        last_live = jnp.maximum((lens[bb] - 1) // psize, 0)
-        return (btab[bb, jnp.minimum(k, last_live)], 0, h, 0)
+    kv_map = paged_kv_index_map(psize)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                    # lengths, block_tables
@@ -302,10 +318,7 @@ def paged_decode_qattention_q4(
     nb = block_tables.shape[1]
     grid = (b, hkv, nb)
     kernel = functools.partial(_paged_decode_q4_kernel, g, psize)
-
-    def kv_map(bb, h, k, lens, btab):
-        last_live = jnp.maximum((lens[bb] - 1) // psize, 0)
-        return (btab[bb, jnp.minimum(k, last_live)], 0, h, 0)
+    kv_map = paged_kv_index_map(psize)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                    # lengths, block_tables

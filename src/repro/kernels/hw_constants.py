@@ -1,0 +1,22 @@
+"""Single source of truth for the v4-lite roofline ceilings.
+
+``kernels/autotune.py`` (tile selection), ``benchmarks/roofline.py``
+(artifact pricing) and ``repro/analysis/pallas_lint.py`` (VMEM budget
+lint) all reason about the same machine; before this module each kept a
+hand-mirrored copy of the constants, which is exactly the drift class the
+analysis lane exists to catch.  Import from here — never re-declare.
+
+Values are TPU v5e-class per-chip ceilings; the drift test
+(``tests/test_autotune.py``) pins every consumer to these objects.
+"""
+from __future__ import annotations
+
+PEAK_INT8_FLOPS = 197e12     # int8 MXU ops/s per chip
+PEAK_FLOPS = PEAK_INT8_FLOPS  # bf16/int8 alias used by roofline pricing
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per ICI link
+ICI_LINKS = 4                # links per chip
+
+VMEM_BUDGET = 16 * 2**20     # bytes/core
+VMEM_FILL = 0.5              # headroom for double-buffering + scratch
+STEP_OVERHEAD_S = 2e-6       # DMA issue + grid step bookkeeping

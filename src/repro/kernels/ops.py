@@ -52,10 +52,9 @@ def linear_w4a8(x_i8: jax.Array, f: FoldedLinear, *, impl: Optional[str] = None)
     x2 = x_i8.reshape(-1, k)
     b = backend(impl)
     if b == "ref" or f.w_bits != 4:
-        if f.w_bits == 4:
-            y = _ref.int4_matmul_ref(x2, f.w_packed, f.bias_i, f.M, f.shift)
-        else:
-            y = _ref.int8_bitsplit_matmul_ref(x2, f.w_packed, f.bias_i, f.M, f.shift)
+        ref_mm = (_ref.int4_matmul_ref if f.w_bits == 4 else
+                  _ref.int8_bitsplit_matmul_ref)
+        y = ref_mm(x2, f.w_packed, f.bias_i, f.M, f.shift)
         return y.reshape(*lead, -1)
     x2p, m = _pad_rows(x2, 8)
     y = _mm.int4_matmul(x2p, f.w_packed, f.bias_i, f.M, f.shift,

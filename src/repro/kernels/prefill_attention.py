@@ -46,9 +46,23 @@ from repro.kernels.quant_softmax import lut_lookup
 NEG_INIT = -(1 << 30)
 
 
-def _kv_load_i8(k_ref, v_ref, b_i, k_i):
+def _kv_load_i8(k_ref, v_ref, _b_i, _k_i):
     """Default int8 page load: the pool tile IS the code tile."""
     return k_ref[0, :, 0], v_ref[0, :, 0]
+
+
+def prefill_kv_index_map(bq, psize, group):
+    """KV BlockSpec index map shared by BOTH paged prefill kernels (int8
+    and int4-packed): clamp dead logical blocks onto the q block's causal
+    frontier, THEN translate through the block table — dead grid steps
+    re-address a page already resident in VMEM, so the pipeliner skips the
+    DMA.  Module-level so ``repro.analysis.pallas_lint`` can prove the
+    returned page index stays inside the pool for every grid point (under
+    the kernel's contract ``pos0 + sq <= nb * psize``)."""
+    def kv_map(bb, hh, qi, ki, pos0s, btab):
+        frontier = (pos0s[bb] + (qi + 1) * bq - 1) // psize
+        return (btab[bb, jnp.minimum(ki, frontier)], 0, hh // group, 0)
+    return kv_map
 
 
 def _prefill_body(bq, psize, kv_load, pos0_ref, q_ref, k_ref, v_ref,
@@ -105,7 +119,7 @@ def _prefill_body(bq, psize, kv_load, pos0_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = jnp.clip(jnp.round(o), -127, 127).astype(jnp.int8)
 
 
-def _paged_prefill_kernel(bq, psize, pos0_ref, btab_ref, *rest):
+def _paged_prefill_kernel(bq, psize, pos0_ref, _btab_ref, *rest):
     # int8 pool: the block table is consumed only by the index map
     _prefill_body(bq, psize, _kv_load_i8, pos0_ref, *rest)
 
@@ -133,13 +147,7 @@ def paged_prefill_qattention(
     bq = divisor_tile(bq, sq)
     grid = (b, h, sq // bq, nb)
     kernel = functools.partial(_paged_prefill_kernel, bq, psize)
-
-    def kv_map(bb, hh, qi, ki, pos0s, btab):
-        # clamp dead logical blocks onto the q block's causal frontier,
-        # THEN translate through the block table: dead grid steps re-address
-        # a page that is already resident, so the pipeliner skips the DMA
-        frontier = (pos0s[bb] + (qi + 1) * bq - 1) // psize
-        return (btab[bb, jnp.minimum(ki, frontier)], 0, hh // group, 0)
+    kv_map = prefill_kv_index_map(bq, psize, group)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                    # pos0, block_tables
@@ -229,10 +237,7 @@ def paged_prefill_qattention_q4(
     bq = divisor_tile(bq, sq)
     grid = (b, h, sq // bq, nb)
     kernel = functools.partial(_paged_prefill_q4_kernel, bq, psize)
-
-    def kv_map(bb, hh, qi, ki, pos0s, btab):
-        frontier = (pos0s[bb] + (qi + 1) * bq - 1) // psize
-        return (btab[bb, jnp.minimum(ki, frontier)], 0, hh // group, 0)
+    kv_map = prefill_kv_index_map(bq, psize, group)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                    # pos0, block_tables

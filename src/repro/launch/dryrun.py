@@ -164,12 +164,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=True,
            "chips": n_chips, "fsdp": fsdp, "tag": tag}
     try:
         Pt.set_mesh_ctx(mesh)
-        if shape.kind == "train":
-            lowered = lower_train(cfg, shape, mesh, fsdp=fsdp,
-                                  accum_steps=int(os.environ.get(
-                                      "REPRO_ACCUM", "4")))
-        else:
-            lowered = lower_serve(cfg, shape, mesh)
+        lowered = (lower_train(cfg, shape, mesh, fsdp=fsdp,
+                               accum_steps=int(os.environ.get(
+                                   "REPRO_ACCUM", "4")))
+                   if shape.kind == "train"
+                   else lower_serve(cfg, shape, mesh))
         rec["lower_s"] = round(time.time() - t0, 1)
         t1 = time.time()
         compiled = lowered.compile()
@@ -192,8 +191,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=True,
         rec["collectives"] = collective_stats(hlo)
         # loop-aware (trip-count-scaled) costs — the roofline's real inputs
         try:
-            sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
-            from benchmarks import hlo_cost
+            from repro.analysis import hlo_cost
             hc = hlo_cost.analyze(hlo)
             hc.pop("loop_report", None)
             rec["hlo_cost"] = hc

@@ -38,10 +38,7 @@ def main():
     ap.add_argument("--production-mesh", action="store_true")
     args = ap.parse_args()
 
-    if args.smoke:
-        cfg = smoke_config(args.arch)
-    else:
-        cfg = get_config(args.arch)
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.grad_compress:
         import dataclasses
         cfg = dataclasses.replace(

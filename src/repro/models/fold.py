@@ -53,10 +53,8 @@ def fold_linear_t(w, b, s_a, s_y, policy: QuantPolicy) -> Dict:
                   policy)
     codes = jnp.clip(jnp.round(w * s_w), -q.qmax(policy.w_bits),
                      q.qmax(policy.w_bits)).astype(jnp.int8)
-    if policy.w_bits == 8:
-        w_packed = codes
-    else:
-        w_packed = packing.pack_int4_planar(codes, axis=0)
+    w_packed = (codes if policy.w_bits == 8 else
+                packing.pack_int4_planar(codes, axis=0))
     bias = jnp.zeros((w.shape[1],), jnp.float32) if b is None else b.astype(jnp.float32)
     bias_i = jnp.clip(jnp.round(bias * (s_a * s_w)), -(2.0**31 - 1), 2.0**31 - 1
                       ).astype(jnp.int32)
@@ -76,17 +74,16 @@ def fold_linear_weightonly(w, b, policy: QuantPolicy) -> Dict:
     return out
 
 
-def fold_norm_t(p_norm, s_y, norm_type: str) -> Dict:
+def fold_norm_t(p_norm, s_y, _norm_type: str) -> Dict:
     gamma = p_norm["gamma"].astype(jnp.float32)
     beta = p_norm.get("beta")
     s_g = q.qmax(8) / jnp.maximum(q.per_tensor_max(gamma), 1e-8)
     gamma_i = jnp.clip(jnp.round(gamma * s_g), -127, 127).astype(jnp.int8)
     acc_scale = float(1 << 14) * s_g
-    if beta is not None:
-        beta_aligned = jnp.clip(jnp.round(beta.astype(jnp.float32) * acc_scale),
-                                -(2.0**30), 2.0**30).astype(jnp.int32)
-    else:
-        beta_aligned = jnp.zeros_like(gamma_i, dtype=jnp.int32)
+    beta_aligned = (
+        jnp.clip(jnp.round(beta.astype(jnp.float32) * acc_scale),
+                 -(2.0**30), 2.0**30).astype(jnp.int32)
+        if beta is not None else jnp.zeros_like(gamma_i, dtype=jnp.int32))
     M, sh = fxp.quantize_multiplier_array(s_y / acc_scale)
     # subtract_mean is cfg-static (norm_type), NOT stored here: bools can't
     # ride through the vmapped fold.

@@ -76,10 +76,8 @@ def _causal_conv(x, w, state=None):
     """Depthwise causal conv1d.  x (B, S, d); w (K, d).  Returns y and the
     last K-1 inputs (decode state)."""
     k = w.shape[0]
-    if state is None:
-        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
-    else:
-        pad = state
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state)
     xp = jnp.concatenate([pad, x], 1)
     y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
     return y, xp[:, -(k - 1):]

@@ -20,6 +20,7 @@ from repro.core import fixedpoint as fxp
 from repro.core.qlayernorm import QLNParams
 from repro.core.qlinear import FoldedLinear
 from repro.core.qsoftmax import MASK_OFFSET, make_exp_lut
+from repro.analysis.boundary import kernel_boundary
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.kernels.flash_qattention import flash_qattention_jax
@@ -192,10 +193,9 @@ def _decode_qkv(x_i8, f, cfg, pos_vec):
     """Decode-step front half: per-slot (B,) positions broadcast to the
     single query row, then the shared LN/qkv/RoPE path."""
     b, s, _ = x_i8.shape
-    if cfg.mrope_sections is not None:
-        pos = jnp.broadcast_to(pos_vec[:, None, None], (b, s, 3))
-    else:
-        pos = jnp.broadcast_to(pos_vec[:, None], (b, s))
+    pos = (jnp.broadcast_to(pos_vec[:, None, None], (b, s, 3))
+           if cfg.mrope_sections is not None
+           else jnp.broadcast_to(pos_vec[:, None], (b, s)))
     return _qkv_rope(x_i8, f, cfg, pos)
 
 
@@ -252,10 +252,8 @@ def _attn_decode(x_i8, f, cfg, cache, pos_offset):
     v_cache = upd(cache["v"], vc, widx)
     group = nh // nkv
     assert s == 1
-    if cfg.sliding_window:
-        lengths = jnp.minimum(pos_vec + 1, smax)          # valid ring prefix
-    else:
-        lengths = pos_vec + 1
+    lengths = (jnp.minimum(pos_vec + 1, smax)    # valid ring prefix
+               if cfg.sliding_window else pos_vec + 1)
     qg = qc.reshape(b, nkv, group, hd)                    # (B,kv,g,hd) int8
     if ops.backend() == "pallas":
         # TPU fast path: cache-native layout straight into the kernel (no
@@ -288,11 +286,15 @@ def _is_kv4(cslot) -> bool:
     return isinstance(cslot, dict) and "ks" in cslot
 
 
+@kernel_boundary(why="gathered-view int4 dequant on the jnp fallback path; "
+                     "the Pallas kernels do this per tile in VMEM",
+                 static_argnums=(3, 4))
 def _dequant_paged_view(pool_u8, scales, block_tables, nkv_loc, hd):
     """Gather a slot-major contiguous KV view out of the PACKED pool and
     dequantize it (jnp fallback path only — the Pallas kernels dequantize
     per tile in VMEM and never build this).  (B, max_blocks*P, Hkv_loc, hd)
-    int8."""
+    int8.  Registered kernel boundary: the pool-scale float cast inside is
+    the audited exemption on the ref backend."""
     from repro.core import packing
     b = block_tables.shape[0]
     pg = jnp.take(pool_u8, block_tables, axis=0)      # (B,nb,P,Hkv,hd/2) u8
@@ -951,12 +953,11 @@ def serve_forward(
             cslot = None if cache_rep is None else cache_rep[f"slot{i}"]
             if mixer == "attn":
                 if mode == "decode":
-                    if block_tables is not None:
-                        out, nc = _attn_decode_paged(x_i8, f, cfg, cslot,
-                                                     pos_offset, block_tables,
-                                                     tp_axis=tp_axis)
-                    else:
-                        out, nc = _attn_decode(x_i8, f, cfg, cslot, pos_offset)
+                    out, nc = (
+                        _attn_decode_paged(x_i8, f, cfg, cslot, pos_offset,
+                                           block_tables, tp_axis=tp_axis)
+                        if block_tables is not None
+                        else _attn_decode(x_i8, f, cfg, cslot, pos_offset))
                 elif mode == "verify":
                     out, nc = _attn_verify_paged(
                         x_i8, f, cfg, cslot, vpos, block_tables, verify_rows,
@@ -976,14 +977,12 @@ def serve_forward(
                     else:
                         out, kc, vc = _attn_prefill(x_i8, f, cfg, pos,
                                                     row_exact=row_exact)
-                        if cslot is not None:
-                            # one-shot prefill into the contiguous stripe
-                            nc = {"k": jax.lax.dynamic_update_slice(
-                                      cslot["k"], kc, (0, 0, 0, 0)),
-                                  "v": jax.lax.dynamic_update_slice(
-                                      cslot["v"], vc, (0, 0, 0, 0))}
-                        else:
-                            nc = cslot
+                        # one-shot prefill into the contiguous stripe
+                        nc = (None if cslot is None else
+                              {"k": jax.lax.dynamic_update_slice(
+                                        cslot["k"], kc, (0, 0, 0, 0)),
+                               "v": jax.lax.dynamic_update_slice(
+                                        cslot["v"], vc, (0, 0, 0, 0))})
             elif mixer == "mamba":
                 out, nc = _mamba_int(x_i8, f, cfg,
                                      cslot if mode == "decode" else None)
@@ -1021,17 +1020,14 @@ def serve_forward(
 
     def head_apply(hw):
         from repro.core import packing
-        if cfg.quant.w_bits == 8:
-            w = hw["w"].astype(jnp.int8)
-        else:
-            w = packing.unpack_int4_planar(hw["w"], axis=0).astype(jnp.int8)
+        w = (hw["w"] if cfg.quant.w_bits == 8 else
+             packing.unpack_int4_planar(hw["w"], axis=0)).astype(jnp.int8)
         acc = jax.lax.dot_general(x, w, (((2,), (0,)), ((), ())),
                                   preferred_element_type=jnp.int32)
         return acc.astype(jnp.float32) * hw["inv_acc"]
 
-    if cfg.n_lm_heads > 1 and not cfg.tied_embeddings:
-        logits = jnp.stack([head_apply(jax.tree.map(lambda t: t[i], head))
-                            for i in range(cfg.n_lm_heads)], axis=1)
-    else:
-        logits = head_apply(head)
+    logits = (jnp.stack([head_apply(jax.tree.map(lambda t: t[i], head))
+                         for i in range(cfg.n_lm_heads)], axis=1)
+              if cfg.n_lm_heads > 1 and not cfg.tied_embeddings
+              else head_apply(head))
     return logits, new_cache

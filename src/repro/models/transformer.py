@@ -127,7 +127,7 @@ def init_slot_params(cfg: ModelConfig, mixer: str, ffn: str, key) -> Dict:
     if ffn != "none":
         p["norm2"] = _norm_params(cfg)
     if ffn == "dense":
-        if cfg.act == "swiglu":
+        if cfg.act == "swiglu":  # noqa: SIM108 - parallel dict literals
             p["mlp"] = {
                 "wg": _dense(next(ks), d, cfg.d_ff, cfg),
                 "wu": _dense(next(ks), d, cfg.d_ff, cfg),
@@ -368,9 +368,7 @@ def forward(
         logits = x @ w
     else:
         w = params["lm_head"]
-        if cfg.n_lm_heads > 1:
-            logits = jnp.einsum("bsd,kdv->bksv", x, w)
-        else:
-            logits = x @ w
+        logits = (jnp.einsum("bsd,kdv->bksv", x, w)
+                  if cfg.n_lm_heads > 1 else x @ w)
     obs = {"blocks": obs_blocks, "embed_out": obs_embed, "head_in": obs_head}
     return logits.astype(jnp.float32), obs, aux_total

@@ -637,6 +637,43 @@ class Engine:
         g["counters"] = dict(self.counters)
         return stats_schema.validate_stats(g, paged=self.layout == "paged")
 
+    def hot_graphs(self) -> Dict[str, tuple]:
+        """``name -> (jitted_fn, example_args)`` for every compiled hot
+        graph of this engine, with representative arguments built from the
+        live state (the real donated cache pytree, zero tokens, the current
+        block tables).
+
+        This is the introspection surface ``repro.analysis.jaxpr_audit``
+        walks: ``jax.make_jaxpr(fn)(*args)`` / ``fn.lower(*args)`` only
+        *trace* the graphs, so the donated cache is never consumed and the
+        engine keeps serving afterwards.  Paged engines expose ``decode``,
+        ``prefill_chunk`` (one padded chunk at batch 1, the shape
+        ``_run_chunk`` compiles) and — when speculation is on — ``verify``;
+        the contiguous layout exposes ``decode`` only (its prefill builds a
+        private non-donated cache per request)."""
+        tok = jnp.zeros((self.batch, 1), jnp.int32)
+        pos = jnp.asarray(self.pos)
+        if self.layout != "paged":
+            return {"decode": (self._decode,
+                               (self.folded, self.cache, tok, pos))}
+        btab = jnp.asarray(self.block_tables)
+        graphs: Dict[str, tuple] = {
+            "decode": (self._decode,
+                       (self.folded, self.cache, tok, pos, btab)),
+        }
+        chunk = self.max_prefill_chunk or 2 * self.page_size
+        chunk = pages_needed(min(chunk, self.smax),
+                             self.page_size) * self.page_size
+        graphs["prefill_chunk"] = (self._prefill, (
+            self.folded, self.cache, jnp.zeros((1, chunk), jnp.int32),
+            btab[:1], jnp.int32(0)))
+        if self.spec_k:
+            graphs["verify"] = (self._verify, (
+                self.folded, self.cache,
+                jnp.zeros((self.batch, self.spec_k + 1), jnp.int32),
+                pos, btab, jnp.ones((self.batch,), jnp.int32)))
+        return graphs
+
     # --- contiguous-layout helpers ---------------------------------------
 
     def _bucket_len(self, ln: int) -> int:
@@ -663,11 +700,11 @@ class Engine:
                 f"request needs a non-empty prompt and max_new_tokens >= 1 "
                 f"(got prompt len {ln}, max_new_tokens "
                 f"{request.max_new_tokens})")
-        if not self.cfg.sliding_window:
-            if ln + request.max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"request needs {ln + request.max_new_tokens} cache rows, "
-                    f"engine max_len={self.max_len}")
+        if (not self.cfg.sliding_window
+                and ln + request.max_new_tokens > self.max_len):
+            raise ValueError(
+                f"request needs {ln + request.max_new_tokens} cache rows, "
+                f"engine max_len={self.max_len}")
         if self.layout == "paged":
             worst = pages_needed(ln + request.max_new_tokens - 1,
                                  self.page_size)
@@ -1139,14 +1176,11 @@ class Engine:
         toks = np.zeros((self.batch, 1), np.int32)
         for b in active:
             toks[b, 0] = self.sched.slots[b].last_token
-        if self.layout == "paged":
-            logits, self.cache = self._decode(
-                self.folded, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.pos), jnp.asarray(self.block_tables))
-        else:
-            logits, self.cache = self._decode(self.folded, self.cache,
-                                              jnp.asarray(toks),
-                                              jnp.asarray(self.pos))
+        extra = ((jnp.asarray(self.block_tables),)
+                 if self.layout == "paged" else ())
+        logits, self.cache = self._decode(
+            self.folded, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.pos), *extra)
         rows = np.asarray(logits[:, -1])          # (B, V)
         for b in active:
             st = self.sched.slots[b]
@@ -1256,7 +1290,7 @@ class LockstepEngine:
             for i in range(len(requests)):
                 if len(outs[i]) < requests[i].max_new_tokens:
                     outs[i].append(int(cur[i]))
-        for r, o in zip(requests, outs):
+        for r, o in zip(requests, outs, strict=True):
             r.out = np.asarray(o, np.int32)
             r.status = RequestStatus.FINISHED
             r.finish_reason = "length"

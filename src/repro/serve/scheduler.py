@@ -191,7 +191,8 @@ class BlockAllocator:
         the page the first write lands in must stay exclusive (COW
         discipline without ever copying)."""
         n = min((len(tokens) - 1) // self.page_size, len(pages))
-        for (key, seg), p in zip(self._walk_keys(tokens, n), pages):
+        for (key, seg), p in zip(self._walk_keys(tokens, n), pages,
+                                 strict=False):
             if key in self._cached or p in self._key_of:
                 continue       # identical content already published
             self._cached[key] = (p, seg)
@@ -395,10 +396,8 @@ class Scheduler:
         prompt = [int(t) for t in st.prompt_tokens()]
         shared = al.match_prefix(prompt, (len(prompt) - 1) // ps)
         shared_rows = len(shared) * ps
-        if self.reserve == "ondemand":
-            rows = len(prompt)
-        else:
-            rows = self.rows_fn(st.request, shared_rows)
+        rows = (len(prompt) if self.reserve == "ondemand" else
+                self.rows_fn(st.request, shared_rows))
         need = max(0, pages_needed(rows, ps) - len(shared))
         excl = al.alloc(need)
         if excl is None:

@@ -29,6 +29,7 @@ No external dependencies: plain ``asyncio`` from the standard library.
 from __future__ import annotations
 
 import asyncio
+import contextlib
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -138,7 +139,7 @@ class AsyncServer:
         yielding to the loop between ticks so submitters and consumers
         interleave; sleeps when idle.  Run as a background task; cancel
         the task (or ``stop()``) to shut down."""
-        try:
+        with contextlib.suppress(asyncio.CancelledError):
             while not self._stopped:
                 if self.core.has_work:
                     for ev in self.core.poll():
@@ -151,8 +152,6 @@ class AsyncServer:
                     await asyncio.sleep(0)
                 else:
                     await asyncio.sleep(self.idle_sleep)
-        except asyncio.CancelledError:
-            pass
 
     def stop(self):
         self._stopped = True

@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # Paths are relative; leading 'blocks/slotN/' has a stacked (n_reps) dim 0
 # which is always unsharded (scan axis).
 
-def _qat_rules(dp, fs):
+def _qat_rules(_dp, fs):
     return [
         (r"embed/tokens$",      P("model", fs)),
         (r"embed/pos$",         P(None, None)),
@@ -75,7 +75,7 @@ def _qat_rules(dp, fs):
     ]
 
 
-def _serve_rules(dp):
+def _serve_rules(_dp):
     """Folded-int serving: no FSDP; packed dim0 = K//2 follows K's spec."""
     return [
         (r"embed/tokens_i8$",    P("model", None)),
@@ -142,7 +142,7 @@ def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
     return P(*parts[:len(shape)])
 
 
-def _tree_paths_specs(tree, rules):
+def _tree_paths_specs(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
 
     def path_str(kp):
@@ -166,7 +166,7 @@ def make_param_shardings(mesh: Mesh, tree, *, mode: str = "qat",
     fs = ("pod", "data") if ("pod" in mesh.axis_names and fsdp) else (
         "data" if fsdp else None)
     rules = _qat_rules(dp, fs) if mode == "qat" else _serve_rules(dp)
-    leaves = _tree_paths_specs(tree, rules)
+    leaves = _tree_paths_specs(tree)
     specs = []
     for p, v in leaves:
         # quantized-moment NamedTuples flatten to <param>/codes (shaped like
@@ -213,7 +213,7 @@ def cache_sharding(mesh: Mesh, tree):
             sp = P()
         return _fit_spec(sp, v.shape, mesh)
 
-    leaves = _tree_paths_specs(tree, [])
+    leaves = _tree_paths_specs(tree)
     specs = [spec(p, v) for p, v in leaves]
     treedef = jax.tree_util.tree_structure(tree)
     return jax.tree_util.tree_unflatten(
@@ -238,7 +238,7 @@ def paged_pool_shardings(mesh: Mesh, tree):
     divide (Hkv % tp != 0) are dropped by ``_fit_spec`` — callers that
     require a real shard must assert divisibility themselves (the serving
     engine does)."""
-    leaves = _tree_paths_specs(tree, [])
+    leaves = _tree_paths_specs(tree)
     specs = [_fit_spec(kv_pool_pspec(), v.shape, mesh) for _, v in leaves]
     treedef = jax.tree_util.tree_structure(tree)
     return jax.tree_util.tree_unflatten(

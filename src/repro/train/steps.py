@@ -184,10 +184,8 @@ def jit_train_step(cfg, mesh, opt_cfg, batch_example, *, fsdp: bool = True,
                    donate: bool = True, bert: bool = False,
                    accum_steps: int = 1):
     """Build the sharded, jitted train step + the state shardings."""
-    if bert:
-        step_fn = make_bert_train_step(cfg, opt_cfg)
-    else:
-        step_fn = make_train_step(cfg, opt_cfg, accum_steps=accum_steps)
+    step_fn = (make_bert_train_step(cfg, opt_cfg) if bert else
+               make_train_step(cfg, opt_cfg, accum_steps=accum_steps))
     init = (init_bert_train_state if bert else init_train_state)
     state_shape = jax.eval_shape(
         lambda k: init(cfg, k, opt_cfg), jax.random.PRNGKey(0))

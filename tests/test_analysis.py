@@ -1,0 +1,231 @@
+"""Static-analysis subsystem: jaxpr auditor, pallas lint, fixtures,
+report schema, and the regression-gate integration.
+
+Two directions, both load-bearing: the CURRENT tree must audit clean
+(zero violations across the hot graphs of every preset this host can
+build), and every intentionally-broken fixture must be flagged with its
+stable rule id — a checker that can't fire is indistinguishable from a
+clean tree.
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.analysis import fixtures, jaxpr_audit, pallas_lint, report
+from repro.configs import smoke_config
+from repro.models import fold as F
+from repro.models import transformer as T
+from repro.serve.engine import Engine, EngineConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def folded_cfg():
+    cfg = smoke_config("yi-6b")
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    calib = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    _, obs, _ = T.forward(cfg, params, amax, calib)
+    return cfg, F.fold_params(cfg, params, obs)
+
+
+def _engine(folded_cfg, **kw):
+    cfg, folded = folded_cfg
+    return Engine(cfg, folded, EngineConfig(
+        batch_slots=4, max_len=64, cache_layout="paged", page_size=8, **kw))
+
+
+# --- the current tree audits clean --------------------------------------
+
+def test_serve_graphs_audit_clean_kv8_spec3(folded_cfg):
+    """decode + prefill chunk + verify of the int8 spec-decode engine:
+    zero violations, and the auditor actually walked nontrivial graphs."""
+    eng = _engine(folded_cfg, kv_bits=8, spec_k=3)
+    results = jaxpr_audit.audit_engine(eng)
+    assert set(results) == {"decode", "prefill_chunk", "verify"}
+    for name, res in results.items():
+        assert res.violations == [], f"{name}: {res.violations}"
+        assert res.n_eqns > 100
+        # the serve path keeps float work off the MXU: any float output
+        # must come from elementwise/softmax-carry islands, never a dot
+        assert "dot_general" not in res.float_prims, name
+
+
+def test_serve_graphs_audit_clean_kv4(folded_cfg):
+    eng = _engine(folded_cfg, kv_bits=4)
+    results = jaxpr_audit.audit_engine(eng)
+    assert set(results) == {"decode", "prefill_chunk"}
+    for name, res in results.items():
+        assert res.violations == [], f"{name}: {res.violations}"
+        assert "dot_general" not in res.float_prims, name
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="tp=4 needs 4 host devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=4); the CI analyze lane covers it")
+def test_serve_graphs_audit_clean_tp4(folded_cfg):
+    eng = _engine(folded_cfg, kv_bits=8, tp=4, spec_k=3)
+    for name, res in jaxpr_audit.audit_engine(eng).items():
+        assert res.violations == [], f"{name}: {res.violations}"
+
+
+def test_hbm_bytes_by_dtype_on_decode(folded_cfg):
+    """hlo_cost's per-dtype HBM split on a real compiled decode graph:
+    integer pool traffic must dominate float activation traffic."""
+    from repro.analysis import hlo_cost
+    eng = _engine(folded_cfg, kv_bits=8)
+    fn, args = eng.hot_graphs()["decode"]
+    rep = hlo_cost.analyze(jaxpr_audit.lowered_hlo(fn, args))
+    by_dt = rep["hbm_bytes_by_dtype"]
+    assert by_dt and all(isinstance(v, (int, float)) for v in by_dt.values())
+    int_bytes = sum(v for k, v in by_dt.items() if k.startswith(("s8", "u8")))
+    f32_bytes = by_dt.get("f32", 0)
+    assert int_bytes > f32_bytes > 0
+
+
+def test_pallas_lint_clean_on_tree():
+    res = pallas_lint.run_all()
+    assert res["violations"] == []
+    assert {c["check"] for c in res["checks"]} == {
+        "idxmap_decode", "idxmap_paged_decode", "idxmap_prefill",
+        "vmem_budget", "scalar_prefetch", "shared_body"}
+    assert all(c["ok"] for c in res["checks"])
+
+
+# --- every broken fixture is flagged with its rule id -------------------
+
+def test_fixtures_flag_expected_rules():
+    res = fixtures.run_self_test()
+    assert res["ok"], {n: r for n, r in res["fixtures"].items()
+                       if not r["ok"]}
+    # every jaxpr rule and both index-map rules are exercised by name
+    exercised = {r["expected_rule"] for r in res["fixtures"].values()}
+    assert exercised >= {"INT-DOT-FLOAT", "INT-DOT-ACC", "POOL-FLOAT-CAST",
+                         "DONATION", "DONATION-ALIAS", "IDXMAP-RANGE",
+                         "IDXMAP-CLAMP"}
+    # violations carry a graph location, not just a rule id
+    for name, fr in res["fixtures"].items():
+        for v in fr["violations"]:
+            assert v["rule"] and v["graph"], (name, v)
+
+
+def test_boundary_registry_covers_blessed_dequants():
+    from repro.analysis import boundary
+    assert {"dequantize_kv_pool", "_dequant_paged_view"} <= set(
+        boundary.REGISTRY)
+
+
+# --- report schema + baseline ratchet -----------------------------------
+
+def _tiny_report(float_prims=("exp",), skipped=(), preset="kv8_tp1_spec0"):
+    res = jaxpr_audit.AuditResult(graph="decode", n_eqns=3)
+    res.float_prims = set(float_prims)
+    res.op_histogram = {"float32": {p: 1 for p in float_prims}}
+    return report.build_report(
+        presets={preset: ({"kv_bits": 8, "tp": 1, "spec_k": 0},
+                          {"decode": res}, {})},
+        skipped=list(skipped),
+        pallas={"checks": [], "violations": []},
+        jax_version=jax.__version__)
+
+
+def test_report_schema_round_trip_and_rejections():
+    doc = _tiny_report()
+    report.validate_report(doc)
+    assert doc["violations_total"] == 0
+
+    stale = dict(doc, schema_version=report.ANALYSIS_SCHEMA_VERSION + 1)
+    with pytest.raises(report.AnalysisSchemaError, match="schema_version"):
+        report.validate_report(stale)
+    with pytest.raises(report.AnalysisSchemaError, match="kind"):
+        report.validate_report(dict(doc, kind="bench"))
+    missing = {k: v for k, v in doc.items() if k != "pallas_lint"}
+    with pytest.raises(report.AnalysisSchemaError, match="missing"):
+        report.validate_report(missing)
+    with pytest.raises(report.AnalysisSchemaError, match="unknown"):
+        report.validate_report(dict(doc, surprise=1))
+
+
+def test_float_prim_ratchet():
+    base = _tiny_report(float_prims=("exp",))
+    same = _tiny_report(float_prims=("exp",))
+    assert report.compare_to_baseline(same, base) == []
+    # dropping a float prim is fine (ratchet is one-way)...
+    fewer = _tiny_report(float_prims=())
+    assert report.compare_to_baseline(fewer, base) == []
+    # ...growing one is the gated regression
+    grown = _tiny_report(float_prims=("exp", "dot_general"))
+    fails = report.compare_to_baseline(grown, base)
+    assert len(fails) == 1 and "dot_general" in fails[0]
+    # a vanished preset must be explicitly skipped, never silent
+    gone = _tiny_report(preset="other")
+    fails = report.compare_to_baseline(gone, base)
+    assert fails and "neither audited nor skipped" in fails[0]
+    excused = _tiny_report(
+        preset="other",
+        skipped=[{"preset": "kv8_tp1_spec0", "reason": "1 device"}])
+    assert report.compare_to_baseline(excused, base) == []
+
+
+# --- regression-gate integration ----------------------------------------
+
+def _load_check_regression():
+    path = (Path(__file__).resolve().parents[1] / "benchmarks"
+            / "check_regression.py")
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_regression_gates_analysis_artifacts(tmp_path):
+    cr = _load_check_regression()
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    clean = _tiny_report()
+    (baselines / "ANALYSIS.json").write_text(json.dumps(clean))
+    cur = tmp_path / "ANALYSIS.json"
+
+    cur.write_text(json.dumps(_tiny_report()))
+    assert cr.check_artifact(cur, baselines, 0.25) == []
+
+    # fresh violations fail even though the schema is valid
+    bad = _tiny_report()
+    g = bad["presets"]["kv8_tp1_spec0"]["graphs"]["decode"]
+    g["violations"].append({"rule": "INT-DOT-FLOAT", "graph": "decode",
+                            "scope": "", "detail": "seeded"})
+    bad["violations_total"] = 1
+    cur.write_text(json.dumps(bad))
+    fails = cr.check_artifact(cur, baselines, 0.25)
+    assert any("violation" in f for f in fails)
+
+    # new float primitive trips the ratchet
+    grown = _tiny_report(float_prims=("exp", "dot_general"))
+    cur.write_text(json.dumps(grown))
+    fails = cr.check_artifact(cur, baselines, 0.25)
+    assert any("dot_general" in f for f in fails)
+
+    # schema drift is an error, not a silent pass
+    cur.write_text(json.dumps(dict(_tiny_report(), surprise=1)))
+    fails = cr.check_artifact(cur, baselines, 0.25)
+    assert any("analysis schema" in f for f in fails)
+
+    # a missing committed baseline is an error
+    (baselines / "ANALYSIS.json").unlink()
+    cur.write_text(json.dumps(_tiny_report()))
+    fails = cr.check_artifact(cur, baselines, 0.25)
+    assert any("no committed baseline" in f for f in fails)
+
+
+def test_committed_baseline_is_schema_valid():
+    path = (Path(__file__).resolve().parents[1] / "benchmarks"
+            / "baselines" / "ANALYSIS.json")
+    doc = json.loads(path.read_text())
+    report.validate_report(doc)
+    assert report.count_violations(doc) == 0
+    assert doc["presets"], "baseline must audit at least one preset"

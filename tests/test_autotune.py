@@ -140,3 +140,31 @@ def test_measure_best_caches_argmin():
     assert got == 64
     assert autotune.measure_best((32, 64, 128), timer, key=("m", 1)) == 64
     assert len(calls) == 3            # second call served from cache
+
+
+def test_hw_constants_single_source_no_drift():
+    """Satellite of the analysis PR: the roofline constants live ONCE in
+    kernels/hw_constants.py; both consumers (the tuner and the
+    benchmarks/roofline.py model) must resolve to the very same objects —
+    a re-declared copy in either file is exactly the drift this pins."""
+    import importlib.util
+    from pathlib import Path
+
+    from repro.kernels import hw_constants as HW
+
+    assert autotune.VMEM_BUDGET is HW.VMEM_BUDGET
+    assert autotune.VMEM_FILL is HW.VMEM_FILL
+    assert autotune.HBM_BW is HW.HBM_BW
+    assert autotune.PEAK_INT8_FLOPS is HW.PEAK_INT8_FLOPS
+    assert autotune.STEP_OVERHEAD_S is HW.STEP_OVERHEAD_S
+
+    roofline_py = (Path(__file__).resolve().parents[1] / "benchmarks"
+                   / "roofline.py")
+    spec = importlib.util.spec_from_file_location("roofline", roofline_py)
+    roofline = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(roofline)
+    assert roofline.PEAK_FLOPS is HW.PEAK_FLOPS
+    assert roofline.HBM_BW is HW.HBM_BW
+    assert roofline.ICI_BW is HW.ICI_BW
+    assert roofline.ICI_LINKS is HW.ICI_LINKS
+    assert HW.PEAK_FLOPS is HW.PEAK_INT8_FLOPS

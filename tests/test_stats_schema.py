@@ -1,0 +1,88 @@
+"""serve/stats.py validators as pure unit tests — no engine required.
+
+The engine-integration side (a live ``Engine.stats()`` payload passing
+validation) lives in test_serve_api.py; this file pins the validator
+MECHANICS: version rejection (a persisted v1 payload must be refused by
+the v2 build, not half-read), and the full missing/unknown-key matrices
+for the router counter validator that the regression gate leans on.
+"""
+import pytest
+
+from repro.serve import stats as SS
+
+
+def _gauges(**over):
+    s = {k: 0 for k in SS.GAUGES}
+    s["schema_version"] = SS.STATS_SCHEMA_VERSION
+    s["counters"] = {k: 0 for k in SS.COUNTERS}
+    s.update(over)
+    return s
+
+
+def test_v1_payload_rejected_by_v2_build():
+    """A payload persisted before the spec-decode keys existed (schema v1:
+    no spec_k gauge, no drafted/accepted/rejected/accept_len_hist
+    counters, version stamp 1) must be rejected outright — first on the
+    version stamp, and even with a forged stamp on its key set."""
+    assert SS.STATS_SCHEMA_VERSION == 2
+    v1_gauges = {k: 0 for k in SS.GAUGES if k != "spec_k"}
+    v1_gauges["schema_version"] = 1
+    v1_counters = {k: 0 for k in SS.COUNTERS
+                   if k not in ("drafted", "accepted", "rejected",
+                                "accept_len_hist")}
+    v1 = dict(v1_gauges, counters=v1_counters)
+    # the key-set check fires first: the v1 payload is missing spec_k
+    with pytest.raises(SS.StatsSchemaError, match="missing.*spec_k"):
+        SS.validate_stats(v1, paged=False)
+    # even a payload with a forward-ported key set must carry the current
+    # version stamp — a stale stamp alone is refused
+    stamped_v1 = _gauges(schema_version=1)
+    with pytest.raises(SS.StatsSchemaError, match="schema_version=1"):
+        SS.validate_stats(stamped_v1, paged=False)
+    with pytest.raises(SS.StatsSchemaError, match="drafted"):
+        SS.validate_counters(v1_counters)
+
+
+def test_validate_stats_paged_flag():
+    SS.validate_stats(_gauges(), paged=False)
+    paged = _gauges(**{k: 0 for k in SS.PAGED_GAUGES})
+    SS.validate_stats(paged, paged=True)
+    # paged payload against the contiguous expectation: every paged gauge
+    # reported unknown; contiguous payload against paged: all missing
+    with pytest.raises(SS.StatsSchemaError) as ei:
+        SS.validate_stats(paged, paged=False)
+    assert all(k in str(ei.value) for k in SS.PAGED_GAUGES)
+    with pytest.raises(SS.StatsSchemaError) as ei:
+        SS.validate_stats(_gauges(), paged=True)
+    assert all(k in str(ei.value) for k in SS.PAGED_GAUGES)
+
+
+@pytest.mark.parametrize("drop", sorted(SS.ROUTER_COUNTERS))
+def test_router_counters_each_missing_key_named(drop):
+    counters = {k: 0 for k in SS.ROUTER_COUNTERS if k != drop}
+    with pytest.raises(SS.StatsSchemaError) as ei:
+        SS.validate_router_counters(counters)
+    msg = str(ei.value)
+    assert f"missing=['{drop}']" in msg and "unknown=[]" in msg
+
+
+@pytest.mark.parametrize("extra", ["bogus", "tok_per_s", "spec_k"])
+def test_router_counters_each_unknown_key_named(extra):
+    counters = {k: 0 for k in SS.ROUTER_COUNTERS}
+    counters[extra] = 1
+    with pytest.raises(SS.StatsSchemaError) as ei:
+        SS.validate_router_counters(counters)
+    msg = str(ei.value)
+    assert f"unknown=['{extra}']" in msg and "missing=[]" in msg
+
+
+def test_router_counters_mixed_and_custom_what():
+    counters = {k: 0 for k in SS.ROUTER_COUNTERS if k != "ticks"}
+    counters["surprise"] = 1
+    with pytest.raises(SS.StatsSchemaError,
+                       match=r"my router.*missing=\['ticks'\].*"
+                             r"unknown=\['surprise'\]"):
+        SS.validate_router_counters(counters, what="my router")
+    # the validator returns its argument so callers can chain it
+    ok = {k: 0 for k in SS.ROUTER_COUNTERS}
+    assert SS.validate_router_counters(ok) is ok

@@ -126,7 +126,7 @@ def test_partition_rules_fit_and_cover():
     sh = Pt.make_param_shardings(mesh, ps, fsdp=True)
     # every leaf got a sharding; specs never violate divisibility
     for (path, leaf), (_, s) in zip(
-            Pt._tree_paths_specs(ps, []), Pt._tree_paths_specs(sh, [])):
+            Pt._tree_paths_specs(ps), Pt._tree_paths_specs(sh)):
         fitted = Pt._fit_spec(s.spec, leaf.shape, mesh)
         assert tuple(fitted) == tuple(s.spec), path
 
