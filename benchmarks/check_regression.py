@@ -4,10 +4,10 @@ against the committed baselines in ``benchmarks/baselines/``.
 The bench scripts already exit non-zero on token divergence; this gate adds
 the two checks they don't make:
 
-  * every ``outputs_match`` / ``slo_ok`` flag anywhere in the current
-    artifact must be truthy (a bench that tolerated a mismatch — e.g. on
-    the pallas backend — still fails the gate, which only ever runs on the
-    CPU lanes where bit-identity is the contract);
+  * every ``outputs_match`` / ``slo_ok`` / ``affinity_ok`` flag anywhere
+    in the current artifact must be truthy (a bench that tolerated a
+    mismatch — e.g. on the pallas backend — still fails the gate, which
+    only ever runs on the CPU lanes where bit-identity is the contract);
   * every throughput metric (keys named ``tok_per_s`` / ``*_tok_per_s``,
     at any nesting depth) present in BOTH the current artifact and its
     baseline must not drop more than ``--max-drop`` (default 25%);
@@ -46,7 +46,7 @@ from pathlib import Path
 BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-GATED_FLAGS = ("outputs_match", "slo_ok")
+GATED_FLAGS = ("outputs_match", "slo_ok", "affinity_ok")
 
 
 def walk_metrics(obj, path=""):

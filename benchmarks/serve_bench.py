@@ -39,6 +39,16 @@ matching, so outputs must be bit-identical off-pallas (gated), and the
 deterministic decode-forward reduction must reach 1.2x (gated); wall
 tok/s and accepted-tokens/forward are reported.
 
+``--affinity`` runs the prefix-affinity + shared-prefix-tier A/B instead:
+a 2-replica router with ``affinity=False, shared_tier=False`` vs
+``affinity=True, shared_tier=True`` over a multi-conversation chat
+workload (artifact BENCH_AFFINITY.json).  Placement must never change
+greedy tokens (gated off-pallas), and the on-run's total prefill work —
+``prefill_tokens`` summed over replicas, a deterministic scheduling
+counter — must be strictly below the off-run's (gated): conversations
+stick to the replica holding their prefix chain, and replicas adopt
+published chains from the shared host tier instead of re-prefilling.
+
 ``--tp N`` (any workload flag ignored; Poisson shape) runs the
 tensor-parallel A/B instead: the paged engine unsharded vs sharded over an
 N-way model mesh (KV-head-sharded page pool, replicated block tables).
@@ -163,6 +173,30 @@ def make_bursty_workload(rng, n_requests, lengths, rate, max_new_range, *,
                 chat=chat,
                 cancel_after=cancel_after,
             ))
+    return work
+
+
+def make_affinity_workload(rng, n_convs, turns, lengths, rate,
+                           max_new_range):
+    """Multi-conversation chat for the prefix-affinity A/B: ``n_convs``
+    conversations, ``turns`` turns each, every turn sharing its
+    conversation's system prompt and adding a unique suffix.  Turn order
+    is a fresh shuffle per round, so conversations interleave irregularly
+    — the shape where affinity-less least-loaded placement scatters one
+    conversation's turns across replicas and each replica re-prefills the
+    shared prefix the others already paid for."""
+    order = []
+    for _ in range(turns):
+        order.extend(int(c) for c in rng.permutation(n_convs))
+    t = 0.0
+    work = []
+    for c in order:
+        t += rng.exponential(1.0 / rate)
+        work.append(dict(
+            arrival=t, conv=c,
+            suffix_len=int(rng.choice(lengths)),
+            max_new=int(rng.integers(*max_new_range)),
+            cls="chat", cancel_after=None))
     return work
 
 
@@ -991,6 +1025,148 @@ def bench_serve(args, cfg, folded, Request):
     return 0
 
 
+def bench_affinity(args, cfg, folded, Request):
+    """--affinity: prefix-affinity routing + shared-prefix-tier A/B over
+    the multi-conversation chat workload, 2+ replicas, one seeded trace.
+
+    Three phases:
+
+      1. ``truth`` — single Engine ``generate()``: the identity reference.
+      2. ``off``   — ReplicaRouter with ``affinity=False, shared_tier=
+         False``: pure least-loaded placement scatters conversations, so
+         replicas re-prefill prefixes their peers already hold.
+      3. ``on``    — ``affinity=True, shared_tier=True``: turns stick to
+         the replica holding their conversation's chain, and replicas
+         adopt published chains instead of re-prefilling them.
+
+    Two gates (both deterministic scheduling counters — wall-clock tok/s
+    is deliberately absent from this artifact, so the CI gate cannot flake
+    on runner noise):
+
+      * IDENTITY (``outputs_match``): both routed runs must be
+        bit-identical to truth off-pallas — affinity and adoption change
+        placement and work, never tokens.
+      * WORK (``affinity_ok``): the on-run's total prefill work
+        (``prefill_tokens`` summed over replicas) must be STRICTLY below
+        the off-run's, and at least one chain must flow through the tier
+        (``published_pages`` > 0) — otherwise the A/B measured nothing.
+
+    Per-replica ``suffix_prefills`` / ``shared_rows`` / ``prefix_hits``
+    land in the artifact for the trajectory."""
+    from repro.serve import stats as stats_schema
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.router import ReplicaRouter, RouterConfig
+
+    r_arrival, _, r_prefix = _rng_streams(args.seed)
+    lengths = [int(x) for x in args.lengths.split(",")]
+    work = make_affinity_workload(
+        r_arrival, args.convs, args.turns, lengths, args.rate,
+        (args.max_new_lo, args.max_new_hi))
+    prefixes = [r_prefix.integers(0, cfg.vocab_size,
+                                  (args.prefix_len,)).astype(np.int32)
+                for _ in range(args.convs)]
+    max_len = args.prefix_len + max(lengths) + args.max_new_hi + 1
+
+    def fresh():
+        _, r_prompt, _ = _rng_streams(args.seed)
+        return [Request(
+            prompt=np.concatenate([
+                prefixes[w["conv"]],
+                r_prompt.integers(0, cfg.vocab_size,
+                                  (w["suffix_len"],)).astype(np.int32)]),
+            max_new_tokens=w["max_new"]) for w in work]
+
+    ecfg = EngineConfig(batch_slots=args.slots, max_len=max_len,
+                        cache_layout="paged", page_size=args.page_size)
+    truth = [r.out.tolist() for r in Engine(cfg, folded, ecfg)
+             .generate(fresh())]
+
+    WORK_KEYS = ("prefill_tokens", "prefill_chunks", "suffix_prefills",
+                 "prefix_hits", "shared_rows", "published_pages",
+                 "adopted_pages")
+
+    def phase(affinity, shared_tier):
+        replicas = [Engine(cfg, folded, ecfg)
+                    for _ in range(args.replicas)]
+        router = ReplicaRouter(replicas, RouterConfig(
+            max_queue=len(work) + 1, affinity=affinity,
+            shared_tier=shared_tier))
+        reqs = fresh()
+        run_serve(router, reqs, work)
+        s = stats_schema.validate_router_stats(router.stats())
+        match = [r.out.tolist() for r in reqs] == truth
+        totals = {k: sum(rep.counters[k] for rep in replicas)
+                  for k in WORK_KEYS}
+        return dict(
+            outputs_match=bool(match),
+            totals=totals,
+            shared_tier_pages=s["shared_tier_pages"],
+            router_counters=dict(router.counters),
+            replicas=[dict(engine_counters=dict(rep.counters))
+                      for rep in replicas])
+
+    off = phase(affinity=False, shared_tier=False)
+    on = phase(affinity=True, shared_tier=True)
+
+    p_off = off["totals"]["prefill_tokens"]
+    p_on = on["totals"]["prefill_tokens"]
+    saved = 1.0 - p_on / max(p_off, 1)
+    match = bool(off["outputs_match"] and on["outputs_match"])
+    affinity_ok = bool(p_on < p_off
+                       and on["totals"]["published_pages"] > 0)
+    rows = [
+        ("serve/affinity_off_prefill_tokens", p_off,
+         f"suffix_prefills={off['totals']['suffix_prefills']}"),
+        ("serve/affinity_on_prefill_tokens", p_on,
+         f"suffix_prefills={on['totals']['suffix_prefills']}"),
+        ("serve/affinity_prefill_saved_frac", saved,
+         f"{p_off} -> {p_on} prompt rows"),
+        ("serve/affinity_on_published_pages",
+         on["totals"]["published_pages"],
+         f"tier_pages={on['shared_tier_pages']}"),
+        ("serve/affinity_on_adopted_pages", on["totals"]["adopted_pages"],
+         f"prefix_hits={on['totals']['prefix_hits']}"),
+        ("serve/affinity_hits", on["router_counters"]["affinity_hits"],
+         f"misses={on['router_counters']['affinity_misses']}"),
+        ("serve/outputs_match", float(match), "truth+off+on"),
+        ("serve/affinity_ok", float(affinity_ok),
+         "on_prefill<off_prefill & published>0"),
+    ]
+    artifact = dict(
+        bench="serve_affinity", workload="multi-conv-chat", arch=cfg.name,
+        replicas=args.replicas, slots=args.slots, convs=args.convs,
+        turns=args.turns, lengths=lengths, prefix_len=args.prefix_len,
+        page_size=args.page_size, seed=args.seed,
+        stats_schema_version=stats_schema.STATS_SCHEMA_VERSION,
+        outputs_match=match, affinity_ok=affinity_ok,
+        prefill_tokens_off=p_off, prefill_tokens_on=p_on,
+        prefill_saved_frac=round(saved, 3), off=off, on=on)
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
+
+    from repro.kernels import ops
+    if not match and ops.backend() != "pallas":
+        print("ERROR: routed outputs diverged from the single-engine "
+              "truth — affinity/tier placement changed tokens",
+              file=sys.stderr)
+        return 1
+    if not match:
+        print("note: output mismatch tolerated on the pallas backend "
+              "(prefill kernels are not bit-identical there)",
+              file=sys.stderr)
+    if not affinity_ok:
+        print(f"ERROR: affinity A/B failed its contract: prefill_tokens "
+              f"on={p_on} vs off={p_off} (need strictly lower), "
+              f"published_pages={on['totals']['published_pages']} "
+              f"(need > 0)", file=sys.stderr)
+        return 1
+    return 0
+
+
 def bench(args):
     from repro.configs import smoke_config
     from repro.launch.serve import calibrated_folded
@@ -1008,6 +1184,8 @@ def bench(args):
         return bench_kv4(args, cfg, folded, Request)
     if args.spec_k:
         return bench_spec(args, cfg, folded, Request)
+    if args.affinity:
+        return bench_affinity(args, cfg, folded, Request)
     if args.serve or args.workload == "bursty":
         return bench_serve(args, cfg, folded, Request)
     if args.workload == "longprompt":
@@ -1157,6 +1335,15 @@ def main():
     ap.add_argument("--cancel-frac", type=float, default=0.25,
                     help="fraction of requests client-cancelled mid-stream "
                          "(bursty workload)")
+    ap.add_argument("--affinity", action="store_true",
+                    help="prefix-affinity + shared-tier A/B: router with "
+                         "affinity/tier off vs on over the multi-"
+                         "conversation chat workload (identity + strict "
+                         "prefill-work reduction gated)")
+    ap.add_argument("--convs", type=int, default=3,
+                    help="conversations in the affinity workload")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="turns per conversation (affinity workload)")
     ap.add_argument("--slo-ticks", type=int, default=24,
                     help="deadline_tick window after arrival for the SLO "
                          "phase (--serve)")
@@ -1235,6 +1422,13 @@ def main():
             args.slots = min(args.slots, 2)
             args.rate = max(args.rate, 1.0)
             args.prefix_len = min(args.prefix_len, 16)
+        if args.affinity:
+            # prefixes must dominate the prompt (that's the work the A/B
+            # measures) and bursts must interleave conversations
+            args.slots = min(args.slots, 2)
+            args.rate = max(args.rate, 1.0)
+            args.convs = min(args.convs, 3)
+            args.turns = min(args.turns, 3)
     raise SystemExit(bench(args))
 
 

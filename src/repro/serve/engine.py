@@ -469,6 +469,9 @@ class Engine:
                     "(each rank owns a whole slice of KV heads)")
         else:
             self.tp = 1
+        # cross-replica shared prefix tier (attach_prefix_tier): survives
+        # reset() — attachment is construction-level wiring, like the mesh
+        self.prefix_tier = None
         self._init_state(config.seed)
 
         if self.layout == "paged":
@@ -591,6 +594,118 @@ class Engine:
     def reset(self, seed: int = 0):
         """Clear all serving state; keeps the compiled graphs."""
         self._init_state(seed)
+
+    # --- cross-replica prefix sharing ------------------------------------
+
+    @property
+    def prefix_store(self):
+        """The engine's local :class:`~repro.serve.prefix.PrefixStore`
+        (the allocator-owned registry), or None for the contiguous
+        layout.  Read-only consumers — the router's affinity probe, the
+        adoption path — program against this; reference-counted access
+        stays behind ``BlockAllocator.match_prefix``."""
+        return self.alloc.prefix if self.layout == "paged" else None
+
+    def attach_prefix_tier(self, tier):
+        """Wire a :class:`~repro.serve.prefix.SharedPrefixTier` into this
+        engine: prefill handoffs publish their sealed chains, and waiting
+        prompts adopt matching chains before admission (installed through
+        the restore path: payload bytes land in freshly allocated pages
+        that are registered and parked, so the subsequent admission sees
+        an ordinary prefix hit).  Requires the paged int pool on a single
+        rank — under TP each rank holds only its Hkv slice of a page, so
+        publish/adopt needs per-rank payload slices (a tracked ROADMAP
+        follow-up)."""
+        if self.layout != "paged":
+            raise EngineConfigError(
+                "a shared prefix tier needs the paged cache layout; this "
+                f"engine resolved to {self.layout!r}")
+        if self.mesh is not None:
+            raise EngineConfigError(
+                "shared prefix tier under TP needs per-rank publish "
+                "slices (ROADMAP follow-up); detach TP or the tier")
+        if tier.page_size != self.page_size:
+            raise EngineConfigError(
+                f"tier page_size={tier.page_size} != engine "
+                f"page_size={self.page_size}")
+        self.prefix_tier = tier
+
+    def _pool_leaves(self):
+        """The paged pool as ``[(leaf_name, array)]`` with a stable
+        path-derived name per leaf — the key space SealedChain payloads
+        use.  Every leaf (int8/int4 payload and kv4 per-page scales) has
+        the pool page axis at axis 1, so page gather/scatter is uniform."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.cache)
+        return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+    def _publish_prefix(self, prompt: List[int]):
+        """Export the just-registered chain's pages the tier doesn't hold
+        yet (device->host gather per cache leaf)."""
+        from repro.serve.prefix import SealedChain
+        tier = self.prefix_tier
+        chain = self.alloc.prefix.seal(
+            prompt, (len(prompt) - 1) // self.page_size)
+        if chain.n_pages == 0:
+            return
+        held = tier.match(chain.tokens(), chain.n_pages).n_pages
+        if held >= chain.n_pages:
+            return
+        idx = np.asarray(chain.pages[held:], np.int32)
+        payload = {name: np.asarray(leaf[:, idx])
+                   for name, leaf in self._pool_leaves()}
+        sealed = SealedChain(self.page_size, chain.keys[held:],
+                             chain.segs[held:], payload)
+        self.counters["published_pages"] += tier.publish(sealed)
+
+    def _install_pages(self, sealed, pages: List[int]):
+        """Scatter a sealed chain's payload bytes into this pool at
+        ``pages`` (host->device, one ``.at[].set`` per leaf).  The bytes
+        are exact copies of pages an identical engine computed for the
+        identical prefix, so everything downstream — suffix prefill,
+        decode reads — is bit-identical to having prefilled them here."""
+        idx = np.asarray(pages, np.int32)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
+        leaves = []
+        for path, leaf in flat:
+            pay = sealed.payload[jax.tree_util.keystr(path)]
+            assert pay.shape[1] == len(pages) and \
+                pay.shape[2:] == leaf.shape[2:], (pay.shape, leaf.shape)
+            leaves.append(leaf.at[:, idx].set(pay))
+        self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _adopt_from_tier(self):
+        """Pre-admission adoption: for each waiting prompt whose local
+        registry match is shorter than what the shared tier holds, install
+        the missing pages and register the chain — the allocator's
+        registry-version bump then makes admission / ``refresh_prefix``
+        see an ordinary prefix hit.  Never preempts: under pool pressure
+        (alloc returns None) adoption is skipped and the prompt recomputes
+        as if the tier did not exist."""
+        al = self.alloc
+        ps = self.page_size
+        for _rid, item in list(self.sched.waiting):
+            tokens = item.prompt_tokens() if isinstance(item, SlotState) \
+                else item.prompt
+            prompt = [int(t) for t in np.asarray(tokens).reshape(-1)]
+            want = (len(prompt) - 1) // ps
+            if want <= 0 or al.prefix.match(prompt, want).n_pages >= want:
+                continue
+            sealed = self.prefix_tier.adopt(prompt, want)
+            if sealed is None:
+                continue
+            held = al.match_prefix(prompt, want)     # refs pin the head
+            if sealed.n_pages <= len(held):
+                al.free_pages(held[::-1])
+                continue
+            fresh = al.alloc(sealed.n_pages - len(held))
+            if fresh is None:                        # pool dry: recompute
+                al.free_pages(held[::-1])
+                continue
+            self._install_pages(sealed.slice(len(held), sealed.n_pages),
+                                fresh)
+            al.prefix.register(prompt[:sealed.n_pages * ps], held + fresh)
+            al.free_pages((held + fresh)[::-1])      # park on the LRU
+            self.counters["adopted_pages"] += len(fresh)
 
     # --- observability ---------------------------------------------------
 
@@ -869,7 +984,10 @@ class Engine:
             return []
         # --- handoff into decode (no extra forward) ---
         if self.layout == "paged":
-            self.alloc.register_prefix([int(t) for t in prompt], st.pages)
+            ptoks = [int(t) for t in prompt]
+            self.alloc.register_prefix(ptoks, st.pages)
+            if self.prefix_tier is not None:
+                self._publish_prefix(ptoks)
             self._set_table_row(b, st.pages)
         # the replay snapshot is spent: decode appends to ``emitted`` from
         # here, so keeping it would silently desync prompt_tokens(); the
@@ -1132,6 +1250,9 @@ class Engine:
         self._shed_expired()
         events = self._events            # cancel/shed events queued so far
         self._events = []
+        if self.prefix_tier is not None and self.sched.waiting:
+            self._adopt_from_tier()      # before admission: adopted pages
+            #                              surface as ordinary prefix hits
         placed = self.sched.admit()
         for _b, st in placed:
             st.request.status = RequestStatus.PREFILL

@@ -11,11 +11,22 @@ admission decision per queued request per tick:
 * **dispatch** when some replica is *admissible* — its ``stats()`` gauges
   show queue depth at or under ``max_replica_waiting``, prefill backlog
   at or under ``max_replica_chunks``, and (paged) at least
-  ``min_free_pages`` pages free.  Among admissible replicas the least
-  loaded wins, compared lexicographically on
-  ``(waiting, prefill_chunks_pending, -pages_free, index)`` — the index
-  tiebreak keeps placement deterministic, which is what makes a routed
-  run token-identical to a single-engine run on the same trace.
+  ``min_free_pages`` pages free.  With ``affinity`` on (the default) the
+  admissible set is first narrowed to the replicas whose prefix registry
+  holds the longest chain for the request's leading page-aligned prompt
+  chunk (the registry chain key is content-addressed, so the probe is an
+  exact pages-held count, read-only through each replica's
+  ``prefix_store``) — a conversation's turns stick to the replica that
+  already paid for their shared prefix instead of recomputing it
+  elsewhere.  Among the surviving candidates the least loaded wins,
+  compared lexicographically on ``(waiting, prefill_chunks_pending,
+  -pages_free, index)`` (:meth:`ReplicaRouter._least_loaded`) — the
+  explicit replica-index tiebreak keeps placement deterministic and
+  reproducible across runs, which is what makes a routed run
+  token-identical to a single-engine run on the same trace and the
+  affinity A/B compare like for like.  Placement never changes tokens
+  (greedy decoding is batch-independent), so affinity preserves the
+  identity contract while cutting redundant prefix prefills.
 * **queue** when no replica is admissible: the head request waits (FIFO
   is never reordered — later requests do not jump the line).
 * **shed** queued requests whose ``deadline_tick`` passes before
@@ -38,6 +49,7 @@ single-engine identity benches.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -50,22 +62,66 @@ class RouterBusy(RuntimeError):
     """Submission refused: the router's bounded queue is full."""
 
 
+class RouterConfigError(ValueError):
+    """A RouterConfig is invalid or incompatible with the replicas."""
+
+
 @dataclasses.dataclass(frozen=True)
 class RouterConfig:
-    """Admission knobs. The defaults dispatch eagerly (a replica with an
-    empty queue and any free pages is admissible) and bound only the
-    router queue; tighten them to shed earlier under overload."""
+    """Typed, frozen router construction options, validated at
+    construction like ``EngineConfig``.  The admissibility defaults
+    dispatch eagerly (a replica with an empty queue and any free pages is
+    admissible) and bound only the router queue; tighten them to shed
+    earlier under overload.  ``affinity`` steers requests to the replica
+    whose registry already holds their prefix chain (placement only —
+    greedy outputs are unchanged); ``shared_tier`` additionally builds a
+    :class:`~repro.serve.prefix.SharedPrefixTier` every paged tp=1
+    replica publishes sealed chains to and adopts pages from."""
     max_queue: int = 64            # router queue bound (submit -> RouterBusy)
     max_replica_waiting: int = 0   # dispatch only if replica waiting <= this
     max_replica_chunks: int = 8    # ... and prefill_chunks_pending <= this
     min_free_pages: int = 1        # ... and pages_free >= this (paged only)
+    affinity: bool = True          # prefix-affinity steering
+    max_affinity_pages: int = 8    # probe at most this many leading pages
+    shared_tier: bool = False      # cross-replica publish/adopt tier
+    shared_tier_pages: int = 256   # tier LRU capacity (page payloads)
+    shed_policy: str = "deadline"  # "deadline" sheds queued requests at
+    #                                their deadline_tick; "none" never
+    #                                sheds at the router (deadlines still
+    #                                apply inside the replicas)
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "RouterConfig":
+        """Build from keyword options; unknown names raise a TypeError
+        listing the valid fields."""
+        valid = [f.name for f in dataclasses.fields(cls)]
+        unknown = sorted(set(kw) - set(valid))
+        if unknown:
+            raise TypeError(
+                f"unknown router option(s) {', '.join(unknown)}; valid "
+                f"RouterConfig fields: {', '.join(valid)}")
+        return cls(**kw)
 
     def validate(self) -> "RouterConfig":
+        def bad(msg):
+            raise RouterConfigError(f"invalid RouterConfig: {msg}")
         if self.max_queue < 1:
-            raise ValueError("RouterConfig.max_queue must be >= 1")
+            bad(f"max_queue must be >= 1 (got {self.max_queue})")
         if self.max_replica_waiting < 0 or self.max_replica_chunks < 0 \
                 or self.min_free_pages < 0:
-            raise ValueError("RouterConfig thresholds must be >= 0")
+            bad("admissibility thresholds must be >= 0 (got "
+                f"max_replica_waiting={self.max_replica_waiting}, "
+                f"max_replica_chunks={self.max_replica_chunks}, "
+                f"min_free_pages={self.min_free_pages})")
+        if self.max_affinity_pages < 1:
+            bad(f"max_affinity_pages must be >= 1 "
+                f"(got {self.max_affinity_pages})")
+        if self.shared_tier_pages < 1:
+            bad(f"shared_tier_pages must be >= 1 "
+                f"(got {self.shared_tier_pages})")
+        if self.shed_policy not in ("deadline", "none"):
+            bad(f"shed_policy must be deadline|none "
+                f"(got {self.shed_policy!r})")
         return self
 
 
@@ -74,11 +130,26 @@ class ReplicaRouter:
     for the admission policy.  Request ids handed out by the router are
     global; per-replica engine rids are internal."""
 
-    def __init__(self, replicas: List, config: Optional[RouterConfig] = None):
+    def __init__(self, replicas: List, config: Optional[RouterConfig] = None,
+                 **kw):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
+        if kw:     # one-release deprecation shim for loose keywords
+            if config is not None:
+                raise TypeError(
+                    "pass RouterConfig fields either as a config or as "
+                    "keywords, not both")
+            warnings.warn(
+                "ReplicaRouter(replicas, max_queue=..., ...) keyword "
+                "options are deprecated; pass ReplicaRouter(replicas, "
+                "RouterConfig(...)) — this shim goes away next release",
+                DeprecationWarning, stacklevel=2)
+            config = RouterConfig.from_kwargs(**kw)
         self.replicas = list(replicas)
         self.config = (config or RouterConfig()).validate()
+        self.prefix_tier = None
+        if self.config.shared_tier:
+            self.prefix_tier = self._build_tier()
         self.queue: List[tuple] = []       # [(grid, Request)] FIFO
         self.requests: Dict[int, Request] = {}   # live (queued + inflight)
         # per-replica engine-rid -> global-rid translation
@@ -86,6 +157,30 @@ class ReplicaRouter:
         self._next_rid = 0
         self._events: List[TokenEvent] = []
         self.counters = {k: 0 for k in stats_schema.ROUTER_COUNTERS}
+
+    def _build_tier(self):
+        """Construct the shared tier and attach it to every eligible
+        replica (paged layout, single rank — TP per-rank publish slices
+        are a tracked follow-up).  At least one replica must be eligible,
+        else the tier could never hold a page."""
+        from repro.serve.prefix import SharedPrefixTier
+        eligible = [eng for eng in self.replicas
+                    if getattr(eng, "layout", None) == "paged"
+                    and getattr(eng, "mesh", None) is None]
+        if not eligible:
+            raise RouterConfigError(
+                "RouterConfig(shared_tier=True) needs at least one paged "
+                "tp=1 replica to publish/adopt prefix chains")
+        sizes = {eng.page_size for eng in eligible}
+        if len(sizes) > 1:
+            raise RouterConfigError(
+                f"shared_tier needs one page_size across replicas, "
+                f"got {sorted(sizes)}")
+        tier = SharedPrefixTier(page_size=sizes.pop(),
+                                max_pages=self.config.shared_tier_pages)
+        for eng in eligible:
+            eng.attach_prefix_tier(tier)
+        return tier
 
     # --- protocol: submit / cancel ---------------------------------------
 
@@ -148,6 +243,8 @@ class ReplicaRouter:
         return True
 
     def _shed_expired(self):
+        if self.config.shed_policy == "none":
+            return
         t = self.counters["ticks"]
         for grid, req in [q for q in self.queue]:
             if req.deadline_tick is None or t < req.deadline_tick:
@@ -157,19 +254,59 @@ class ReplicaRouter:
             self._terminate(req, RequestStatus.CANCELLED, "deadline")
             self.counters["shed_deadline"] += 1
 
+    def _affinity_pages(self, eng, prompt: List[int]) -> int:
+        """How many leading full pages of ``prompt`` the replica's prefix
+        registry already holds (0 for contiguous-layout replicas).  Probes
+        the replica's ``prefix_store`` read-only — no references are
+        taken, no LRU state moves — capped at ``max_affinity_pages`` so
+        hashing cost stays bounded on long prompts."""
+        store = getattr(eng, "prefix_store", None)
+        if store is None:
+            return 0
+        cap = min((len(prompt) - 1) // store.page_size,
+                  self.config.max_affinity_pages)
+        if cap <= 0:
+            return 0
+        return store.match(prompt, cap).n_pages
+
+    @staticmethod
+    def _least_loaded(snaps: List[Dict], cands: List[int]) -> int:
+        """The least-loaded replica among ``cands``, compared
+        lexicographically on ``(waiting, prefill_chunks_pending,
+        -pages_free, replica_index)``.  The replica INDEX is the explicit
+        final tiebreak: equally loaded replicas always resolve to the
+        lowest index, never to dict/iteration order, so dispatch traces
+        are reproducible run-to-run and the affinity A/B compares like
+        for like."""
+        return min(cands, key=lambda i: (
+            snaps[i]["waiting"], snaps[i]["prefill_chunks_pending"],
+            -snaps[i].get("pages_free", 0), i))
+
     def _dispatch(self):
         """Place queued requests head-first onto the least-loaded
-        admissible replica; stop at the first head that doesn't fit (FIFO:
-        nothing jumps the line)."""
+        admissible replica — narrowed first, when ``affinity`` is on, to
+        the replicas holding the longest registered chain for the head
+        request's leading page-aligned prompt chunk; stop at the first
+        head that doesn't fit (FIFO: nothing jumps the line)."""
         while self.queue:
             snaps = [eng.stats() for eng in self.replicas]
-            cands = [(s["waiting"], s["prefill_chunks_pending"],
-                      -s.get("pages_free", 0), i)
-                     for i, s in enumerate(snaps) if self._admissible(s)]
+            cands = [i for i, s in enumerate(snaps) if self._admissible(s)]
             if not cands:
                 return
-            i = min(cands)[3]
-            grid, req = self.queue.pop(0)
+            grid, req = self.queue[0]
+            if self.config.affinity:
+                prompt = [int(t) for t in
+                          np.asarray(req.prompt).reshape(-1)]
+                aff = {i: self._affinity_pages(self.replicas[i], prompt)
+                       for i in cands}
+                best = max(aff.values())
+                if best > 0:
+                    cands = [i for i in cands if aff[i] == best]
+                    self.counters["affinity_hits"] += 1
+                else:
+                    self.counters["affinity_misses"] += 1
+            i = self._least_loaded(snaps, cands)
+            self.queue.pop(0)
             try:
                 erid = self.replicas[i].submit(req)
             except ValueError as e:
@@ -227,6 +364,8 @@ class ReplicaRouter:
             "inflight": sum(len(rev) for rev in self._rev),
             "n_replicas": len(self.replicas),
             "replicas": [eng.stats() for eng in self.replicas],
+            "shared_tier_pages": (0 if self.prefix_tier is None
+                                  else self.prefix_tier.n_pages),
             "counters": dict(self.counters),
         }
         return stats_schema.validate_router_stats(s)

@@ -50,7 +50,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
+
+from repro.serve.prefix import RegistryPrefixStore
 
 TRASH_PAGE = 0   # inactive slots' block tables point here; never allocated
 
@@ -82,12 +84,14 @@ class BlockAllocator:
         self.bytes_per_page = bytes_per_page
         self.free: Deque[int] = collections.deque(range(1, n_pages))
         self.ref: List[int] = [0] * n_pages
-        # chained-prefix registry: key -> (page, that page's own tokens)
-        self.registry_version = 0     # bumped on register (refresh memo)
-        self._cached: Dict[int, Tuple[int, tuple]] = {}
-        self._key_of: Dict[int, int] = {}     # page -> its registry key
-        self._lru: "collections.OrderedDict[int, None]" = \
-            collections.OrderedDict()         # refcount-0 cached pages
+        # the chained-prefix registry, as a first-class PrefixStore (see
+        # repro.serve.prefix): the allocator owns refcounts and reclaim
+        # POLICY; the store owns key->page bindings and the LRU of
+        # refcount-0 registered pages.  Everything outside the allocator
+        # (scheduler refresh, router affinity probes, the shared tier's
+        # adoption path) programs against ``self.prefix``; the ref-taking
+        # wrappers below are the only way references move.
+        self.prefix = RegistryPrefixStore(page_size)
         self.live = 0                         # pages with refcount > 0
         self.peak_live = 0
 
@@ -107,7 +111,7 @@ class BlockAllocator:
         return self.capacity * self.bytes_per_page
 
     def available(self) -> int:
-        return len(self.free) + len(self._lru)
+        return len(self.free) + self.prefix.lru_count
 
     def can_alloc(self, n: int) -> bool:
         return n <= self.available()
@@ -125,8 +129,8 @@ class BlockAllocator:
             if self.free:
                 p = self.free.popleft()
             else:
-                p, _ = self._lru.popitem(last=False)     # oldest cached page
-                del self._cached[self._key_of.pop(p)]
+                p = self.prefix.pop_reclaim()  # oldest cached page
+                assert p is not None, "can_alloc said yes but pool is dry"
             self.ref[p] = 1
             pages.append(p)
         self._bump_live(n)
@@ -140,8 +144,8 @@ class BlockAllocator:
             self.ref[p] -= 1
             if self.ref[p] == 0:
                 self.live -= 1
-                if p in self._key_of:
-                    self._lru[p] = None
+                if self.prefix.is_registered(p):
+                    self.prefix.park(p)
                 else:
                     self.free.append(p)
 
@@ -150,36 +154,26 @@ class BlockAllocator:
         self.peak_live = max(self.peak_live, self.live)
 
     # --- prefix sharing -------------------------------------------------
+    # The chained-key content addressing and the registry itself live in
+    # ``self.prefix`` (repro.serve.prefix.RegistryPrefixStore).  The two
+    # wrappers below are the ref-counting boundary: ``match_prefix`` takes
+    # a reference per matched page, ``register_prefix`` applies the
+    # strictly-before-last-token trim.  Read-only probes (router affinity,
+    # the engine's adoption path) call ``self.prefix.match`` directly.
 
-    def _walk_keys(self, tokens: Sequence[int], n: int):
-        """Chained per-page registry keys: ``key_i = hash((key_{i-1},
-        page_i tokens))``.  K/V rows depend on every earlier token, so a
-        page's identity is its *cumulative* prefix — the chained hash gives
-        that in O(page_size) per page instead of re-hashing the whole
-        prefix (O(L^2) over a prompt).  Lookups verify the page's own
-        tokens against the stored segment, and the parent key is verified
-        inductively by the walk, so a false hit needs a 64-bit hash
-        collision AND an identical current segment."""
-        ps = self.page_size
-        key = 0
-        for i in range(n):
-            seg = tuple(tokens[i * ps:(i + 1) * ps])
-            key = hash((key, seg))
-            yield key, seg
+    @property
+    def registry_version(self) -> int:
+        """Bumped on every registration (the refresh_prefix memo key)."""
+        return self.prefix.version
 
     def match_prefix(self, tokens: Sequence[int], max_pages: int) -> List[int]:
         """Longest chain of registered pages covering full-page prefixes of
         ``tokens`` (at most ``max_pages``).  Matched pages get a reference;
         release with ``free_pages`` if the reservation is abandoned."""
-        pages = []
-        for key, seg in self._walk_keys(tokens, max_pages):
-            hit = self._cached.get(key)
-            if hit is None or hit[1] != seg:
-                break
-            pages.append(hit[0])
+        pages = list(self.prefix.match(tokens, max_pages).pages)
         for p in pages:
             if self.ref[p] == 0:           # revive a cached (LRU) page
-                self._lru.pop(p, None)
+                self.prefix.revive(p)
                 self._bump_live(1)
             self.ref[p] += 1
         return pages
@@ -191,13 +185,7 @@ class BlockAllocator:
         the page the first write lands in must stay exclusive (COW
         discipline without ever copying)."""
         n = min((len(tokens) - 1) // self.page_size, len(pages))
-        for (key, seg), p in zip(self._walk_keys(tokens, n), pages,
-                                 strict=False):
-            if key in self._cached or p in self._key_of:
-                continue       # identical content already published
-            self._cached[key] = (p, seg)
-            self._key_of[p] = key
-            self.registry_version += 1
+        self.prefix.register(tokens[:n * self.page_size], pages[:n])
 
     def ensure_exclusive(self, pages: List[int], idx: int
                          ) -> Tuple[int, Optional[int]]:
@@ -216,7 +204,7 @@ class BlockAllocator:
         exclusively, so today this is a no-op assert; the hook carries the
         semantics preemption/swap code inherits."""
         p = pages[idx]
-        if self.ref[p] == 1 and p not in self._key_of:
+        if self.ref[p] == 1 and not self.prefix.is_registered(p):
             return p, None
         fresh = self.alloc(1)
         if fresh is None:
@@ -226,7 +214,7 @@ class BlockAllocator:
 
     @property
     def cached_pages(self) -> int:
-        return len(self._cached)
+        return self.prefix.cached_count
 
     @property
     def free_list_pages(self) -> int:
@@ -236,7 +224,7 @@ class BlockAllocator:
     @property
     def lru_pages(self) -> int:
         """Refcount-0 registered pages parked on the LRU (reclaimable)."""
-        return len(self._lru)
+        return self.prefix.lru_count
 
     # --- debug ----------------------------------------------------------
 
@@ -250,15 +238,18 @@ class BlockAllocator:
         * refcounts are nonnegative and ``live`` counts exactly the pages
           with refcount > 0,
         * live + LRU + free partitions the allocatable pool,
-        * the registry and its page->key inverse agree, every LRU page is a
-          refcount-0 registered page, and no free-list page is registered.
+        * the PrefixStore boundary holds: the registry and its page->key
+          inverse agree (the store's own sweep), every registered page is
+          a valid pool page, every LRU page is a refcount-0 registered
+          page, and no free-list page is registered.
         """
+        self.prefix.check_invariants()     # registry-internal bijection
         free = set(self.free)
-        lru = set(self._lru)
+        lru = set(self.prefix.lru_pages)
         assert len(free) == len(self.free), "free list holds duplicates"
         assert TRASH_PAGE not in free and TRASH_PAGE not in lru and \
-            TRASH_PAGE not in self._key_of and self.ref[TRASH_PAGE] == 0, \
-            "trash page leaked into the pool"
+            not self.prefix.is_registered(TRASH_PAGE) and \
+            self.ref[TRASH_PAGE] == 0, "trash page leaked into the pool"
         assert not free & lru, f"pages on free AND lru: {free & lru}"
         assert all(r >= 0 for r in self.ref), f"negative refcount: {self.ref}"
         held = {p for p in range(self.n_pages) if self.ref[p] > 0}
@@ -267,14 +258,15 @@ class BlockAllocator:
             "referenced page on free list or LRU"
         assert self.live + len(lru) + len(free) == self.n_pages - 1, \
             (self.live, len(lru), len(free), self.n_pages)
-        assert len(self._cached) == len(self._key_of)
-        for key, (p, _seg) in self._cached.items():
-            assert self._key_of.get(p) == key, f"registry desync on page {p}"
+        registered = {p for p in range(self.n_pages)
+                      if self.prefix.is_registered(p)}
+        assert all(0 < p < self.n_pages for p in registered), \
+            f"registered page outside the pool: {registered}"
         for p in lru:
-            assert self.ref[p] == 0 and p in self._key_of, \
+            assert self.ref[p] == 0, \
                 f"LRU page {p} not a refcount-0 registered page"
-        for p in free:
-            assert p not in self._key_of, f"registered page {p} on free list"
+        assert not free & registered, \
+            f"registered page on free list: {free & registered}"
 
 
 @dataclasses.dataclass

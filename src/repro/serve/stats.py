@@ -25,12 +25,18 @@ Version 2 adds the speculative-decoding keys: the ``spec_k`` gauge and
 the ``drafted`` / ``accepted`` / ``rejected`` / ``accept_len_hist``
 counters (the histogram is the one non-scalar counter — a dict mapping
 per-tick accepted-proposal length to tick count).
+Version 3 adds the cross-replica prefix-sharing keys: the engine
+counters ``published_pages`` / ``adopted_pages`` (sealed prefix pages
+exported to / installed from the shared tier), the router counters
+``affinity_hits`` / ``affinity_misses`` (dispatches steered by the
+prefix-affinity probe vs fallen back to least-loaded), and the router
+gauge ``shared_tier_pages``.
 """
 from __future__ import annotations
 
 from typing import Dict, Mapping
 
-STATS_SCHEMA_VERSION = 2
+STATS_SCHEMA_VERSION = 3
 
 # --- Engine.stats() gauges (every layout) --------------------------------
 GAUGES: Dict[str, str] = {
@@ -82,6 +88,8 @@ COUNTERS: Dict[str, str] = {
     "accepted": "draft tokens accepted (argmax-matched) and committed",
     "rejected": "draft tokens rejected (cursor rolled back over them)",
     "accept_len_hist": "dict: accepted-prefix length -> slot-tick count",
+    "published_pages": "sealed prefix pages exported to the shared tier",
+    "adopted_pages": "prefix pages installed from the shared tier",
 }
 
 # --- ReplicaRouter.stats() gauges + counters -----------------------------
@@ -91,6 +99,8 @@ ROUTER_GAUGES: Dict[str, str] = {
     "inflight": "requests dispatched to a replica and not yet terminal",
     "n_replicas": "engine replicas behind the router",
     "replicas": "list of per-replica Engine.stats() payloads",
+    "shared_tier_pages": "page payloads held by the shared prefix tier "
+                         "(0 when the tier is off)",
 }
 
 ROUTER_COUNTERS: Dict[str, str] = {
@@ -101,6 +111,10 @@ ROUTER_COUNTERS: Dict[str, str] = {
     "rejected": "submissions refused because the queue was full",
     "shed_deadline": "queued requests shed at their deadline_tick",
     "cancelled": "requests cancelled through the router",
+    "affinity_hits": "dispatches steered to a replica whose registry "
+                     "already held the request's prefix chain",
+    "affinity_misses": "affinity-enabled dispatches that fell back to "
+                       "least-loaded (no replica held the chain)",
 }
 
 _GAUGE_KEYS = frozenset(GAUGES)

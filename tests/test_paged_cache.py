@@ -257,7 +257,7 @@ def test_allocator_invariants_random_traffic(ops, n_pages):
         held = [p for c in chains for p in c]
         assert len(held) == len(set(held))        # exclusive ownership
         assert al.live == len(held)
-        assert len(al.free) + len(al._lru) + al.live == al.capacity
+        assert len(al.free) + al.lru_pages + al.live == al.capacity
         assert al.peak_live >= al.live
         al.check_invariants()
 

@@ -1,0 +1,384 @@
+"""The PrefixStore subsystem: one conformance suite over BOTH
+implementations (the allocator-owned ``RegistryPrefixStore`` and the
+cross-replica ``SharedPrefixTier``), the tier's payload roundtrip / LRU
+mechanics as pure unit tests, and the engine-level contract the tentpole
+rests on: a replica that ADOPTS a published chain emits greedy tokens
+bit-identical to a cold replica that prefills everything itself, while
+running strictly less prefill work.
+
+The unit half needs no model; the engine half shares one module-scoped
+folded checkpoint like the other serve test files.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import fold as F
+from repro.models import transformer as T
+from repro.serve.engine import Engine, EngineConfig, EngineConfigError, \
+    Request
+from repro.serve.prefix import (RegistryPrefixStore, SealedChain,
+                                SharedPrefixTier, chain_keys)
+
+KEY = jax.random.PRNGKey(0)
+PS = 4          # page size for all unit tests
+
+
+# --- helpers -------------------------------------------------------------
+
+def _toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(0, 1000, (n,))]
+
+
+def _sealed(tokens, n_pages, seed=0):
+    """A payload-backed chain over ``tokens`` with deterministic fake
+    pool bytes: two leaves shaped like real pool leaves (page axis 1)."""
+    pairs = list(chain_keys(tokens, PS, n_pages))
+    keys = tuple(k for k, _ in pairs)
+    segs = tuple(s for _, s in pairs)
+    rng = np.random.default_rng(seed)
+    payload = {
+        "kv": rng.integers(-128, 128, (2, n_pages, PS, 3), dtype=np.int8),
+        "scale": rng.random((2, n_pages, 1)).astype(np.float32),
+    }
+    return SealedChain(PS, keys, segs, payload)
+
+
+def _make_registry():
+    store = RegistryPrefixStore(PS)
+
+    def populate(tokens, n_pages):
+        return store.register(tokens[:n_pages * PS],
+                              list(range(100, 100 + n_pages)))
+    return store, populate
+
+
+def _make_tier():
+    store = SharedPrefixTier(PS, max_pages=64)
+
+    def populate(tokens, n_pages):
+        return store.publish(_sealed(tokens, n_pages))
+    return store, populate
+
+
+@pytest.fixture(params=["registry", "tier"])
+def store_populate(request):
+    return (_make_registry if request.param == "registry"
+            else _make_tier)()
+
+
+# --- chain_keys: the one shared key definition ---------------------------
+
+def test_chain_keys_deterministic_and_cumulative():
+    toks = _toks(16)
+    a = list(chain_keys(toks, PS, 4))
+    b = list(chain_keys(toks, PS, 4))
+    assert a == b                               # deterministic
+    assert len(a) == 4
+    assert len({k for k, _ in a}) == 4          # keys distinct per depth
+    # key_i commits to the WHOLE prefix: flip a token in page 0 and every
+    # downstream key changes, not just page 0's
+    mut = list(toks)
+    mut[1] += 1
+    c = list(chain_keys(mut, PS, 4))
+    assert all(ka != kc for (ka, _), (kc, _) in zip(a, c))
+    # same page-3 segment under a different prefix gets a different key
+    assert a[3][1] == c[3][1] and a[3][0] != c[3][0]
+
+
+# --- conformance: laws every PrefixStore obeys ---------------------------
+
+def test_conformance_fresh_store_is_lawfully_empty(store_populate):
+    store, _ = store_populate
+    assert store.page_size == PS and store.version == 0
+    chain = store.match(_toks(16))
+    assert chain.n_pages == 0 and chain.rows == 0 and chain.tokens() == []
+    assert store.seal(_toks(16)).n_pages == 0
+    assert store.adopt(_toks(16)) is None
+
+
+def test_conformance_match_longest_chain_and_caps(store_populate):
+    store, populate = store_populate
+    toks = _toks(16)
+    populate(toks, 3)
+    full = store.match(toks)
+    assert full.n_pages == 3 and full.rows == 3 * PS
+    assert full.tokens() == toks[:12]
+    assert list(full.keys) == [k for k, _ in chain_keys(toks, PS, 3)]
+    # max_pages caps the walk; shorter token runs match fewer full pages
+    assert store.match(toks, max_pages=2).n_pages == 2
+    assert store.match(toks[:9]).n_pages == 2
+    assert store.match(toks[:3]).n_pages == 0
+    # a mismatched token truncates the chain AT ITS PAGE, not after it
+    mut = list(toks)
+    mut[5] += 1                                 # inside page 1
+    assert store.match(mut).n_pages == 1
+
+
+def test_conformance_match_is_readonly_and_populate_idempotent(
+        store_populate):
+    store, populate = store_populate
+    toks = _toks(16)
+    assert populate(toks, 3) == 3               # three pages newly stored
+    v = store.version
+    assert v >= 3
+    for _ in range(3):                          # match never mutates
+        store.match(toks)
+        store.seal(toks)
+    assert store.version == v
+    assert populate(toks, 3) == 0               # re-store is a no-op
+    assert store.version == v
+
+
+# --- RegistryPrefixStore specifics (the allocator-side surface) ----------
+
+def test_registry_register_skips_known_keys_and_bound_pages():
+    store = RegistryPrefixStore(PS)
+    toks = _toks(16)
+    assert store.register(toks[:8], [10, 11]) == 2
+    # same chain, different pages: keys known, nothing re-bound
+    assert store.register(toks[:8], [20, 21]) == 0
+    # a page already bound to one key cannot serve a second chain
+    other = _toks(16, seed=9)
+    assert store.register(other[:8], [10, 30]) == 1
+    assert store.match(other).n_pages == 0      # chain broke at page 0
+    assert store.cached_count == 3
+    store.check_invariants()
+
+
+def test_registry_park_revive_reclaim_cycle():
+    store = RegistryPrefixStore(PS)
+    toks = _toks(16)
+    store.register(toks[:12], [5, 6, 7])
+    for p in (5, 6, 7):
+        assert store.is_registered(p)
+        store.park(p)
+    assert store.lru_count == 3 and store.lru_pages == frozenset({5, 6, 7})
+    store.revive(6)
+    assert store.lru_pages == frozenset({5, 7})
+    # reclaim pops OLDEST parked first and forgets its registry entry —
+    # page 5 is the chain head, so the whole chain stops matching even
+    # though pages 6/7 stay registered (stranded tail, never stale data)
+    assert store.pop_reclaim() == 5
+    assert not store.is_registered(5) and store.cached_count == 2
+    assert store.match(toks).n_pages == 0
+    assert store.pop_reclaim() == 7
+    assert store.pop_reclaim() is None          # page 6 is revived, not LRU
+    store.check_invariants()
+
+
+def test_registry_publish_adopt_are_lawful_noops():
+    store = RegistryPrefixStore(PS)
+    toks = _toks(16)
+    store.register(toks[:12], [1, 2, 3])
+    assert store.publish(_sealed(toks, 3)) == 0
+    assert store.adopt(toks) is None            # no host payloads behind it
+
+
+# --- SharedPrefixTier specifics (payload roundtrip + LRU bound) ----------
+
+def test_tier_publish_adopt_payload_roundtrip():
+    tier = SharedPrefixTier(PS, max_pages=16)
+    toks = _toks(16)
+    sealed = _sealed(toks, 4)
+    assert tier.publish(sealed) == 4
+    assert tier.n_pages == 4 and tier.version == 4
+    got = tier.adopt(toks)
+    assert got is not None and got.keys == sealed.keys
+    assert got.segs == sealed.segs
+    for leaf in sealed.payload:                 # byte-exact roundtrip
+        assert np.array_equal(got.payload[leaf], sealed.payload[leaf])
+    # partial adoption: cap and shorter prompts slice the chain
+    assert tier.adopt(toks, max_pages=2).n_pages == 2
+    assert tier.adopt(toks[:9]).n_pages == 2
+    assert tier.adopt(_toks(16, seed=3)) is None
+    # slice() composes with adoption the way the engine installs tails
+    tail = got.slice(1, 3)
+    assert tail.keys == sealed.keys[1:3]
+    assert np.array_equal(tail.payload["kv"], sealed.payload["kv"][:, 1:3])
+    tier.check_invariants()
+
+
+def test_tier_publish_dedups_and_page_size_guard():
+    tier = SharedPrefixTier(PS, max_pages=16)
+    toks = _toks(16)
+    assert tier.publish(_sealed(toks, 3)) == 3
+    assert tier.publish(_sealed(toks, 3)) == 0  # known keys skipped
+    assert tier.n_pages == 3
+    with pytest.raises(ValueError, match="page_size"):
+        tier.publish(SealedChain(PS + 1, (1,), ((0,),),
+                                 {"kv": np.zeros((2, 1, PS + 1, 3))}))
+
+
+def test_tier_lru_eviction_and_recency_refresh():
+    tier = SharedPrefixTier(PS, max_pages=3)
+    a, b = _toks(8, seed=1), _toks(4, seed=2)
+    tier.publish(_sealed(a, 2, seed=1))         # pages: a0 a1
+    tier.publish(_sealed(b, 1, seed=2))         # pages: a0 a1 b0
+    assert tier.n_pages == 3
+    assert tier.adopt(a).n_pages == 2           # adoption refreshes a0/a1
+    tier.publish(_sealed(_toks(4, seed=5), 1, seed=5))
+    assert tier.n_pages == 3                    # bound held: b0 evicted
+    assert tier.adopt(b) is None
+    assert tier.adopt(a).n_pages == 2           # survivors intact
+    tier.check_invariants()
+
+
+def test_tier_head_eviction_strands_tail_safely():
+    tier = SharedPrefixTier(PS, max_pages=2)
+    toks = _toks(12, seed=4)
+    tier.publish(_sealed(toks, 3, seed=4))      # 3 pages into capacity 2:
+    assert tier.n_pages == 2                    # head page evicted on entry
+    # adoption walks from key 0 and stops at the first miss — a stranded
+    # tail wastes capacity until it ages out but never serves wrong bytes
+    assert tier.adopt(toks) is None
+    tier.check_invariants()
+
+
+def test_tier_register_is_a_lawful_noop():
+    tier = SharedPrefixTier(PS)
+    assert tier.register(_toks(8), [1, 2]) == 0
+    assert tier.n_pages == 0 and tier.version == 0
+
+
+# --- engine level: publish/adopt preserve token identity -----------------
+
+@pytest.fixture(scope="module")
+def folded_cfg():
+    cfg = smoke_config("yi-6b")
+    params = T.init_params(cfg, KEY)
+    amax = T.init_amax(cfg)
+    calib = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    _, obs, _ = T.forward(cfg, params, amax, calib)
+    return cfg, F.fold_params(cfg, params, obs)
+
+
+def _paged_cfg(**kw):
+    base = dict(batch_slots=2, max_len=64, cache_layout="paged", page_size=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _run_one(eng, prompt, max_new=6):
+    req = Request(prompt=np.asarray(prompt, np.int32), max_new_tokens=max_new)
+    eng.submit(req)
+    ticks = 0
+    while eng.has_work:
+        assert ticks < 500, "engine livelocked"
+        ticks += 1
+        eng.poll()
+        eng.stats(check=True)
+    return req.result().tolist()
+
+
+def test_adopted_chain_bit_identical_to_cold_replica(folded_cfg):
+    """Engine A publishes its prefilled chain; engine B adopts it and must
+    emit byte-identical greedy tokens to cold engine C — while running
+    strictly less prefill work (the whole point of the tier)."""
+    cfg, folded = folded_cfg
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, (18,)).astype(np.int32)
+
+    cold = Engine(cfg, folded, _paged_cfg())
+    truth = _run_one(cold, prompt)
+    cold_prefill = cold.counters["prefill_tokens"]
+
+    tier = SharedPrefixTier(page_size=4)
+    a = Engine(cfg, folded, _paged_cfg())
+    a.attach_prefix_tier(tier)
+    assert _run_one(a, prompt) == truth
+    n_chain = (len(prompt) - 1) // 4            # registered = published = 4
+    assert a.counters["published_pages"] == n_chain
+    assert tier.n_pages == n_chain
+
+    b = Engine(cfg, folded, _paged_cfg())
+    b.attach_prefix_tier(tier)
+    assert _run_one(b, prompt) == truth         # bit-identical via adoption
+    assert b.counters["adopted_pages"] == n_chain
+    assert b.counters["prefix_hits"] == 1
+    assert b.counters["shared_rows"] == n_chain * 4
+    assert b.counters["suffix_prefills"] == 1
+    assert b.counters["prefill_tokens"] < cold_prefill
+    # B re-publishing its (tier-sourced) chain dedups to zero new pages
+    assert b.counters["published_pages"] == 0
+    assert b.alloc.live == 0
+    b.stats(check=True)
+
+
+def test_tier_survives_source_registry_reclaim(folded_cfg):
+    """LRU reclaim on the PUBLISHING replica must not invalidate the tier:
+    the host copies outlive the source's pool pages, and an adopter still
+    gets byte-identical outputs after the source forgot everything."""
+    cfg, folded = folded_cfg
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab_size, (18,)).astype(np.int32)
+
+    cold = Engine(cfg, folded, _paged_cfg())
+    truth = _run_one(cold, prompt)
+
+    tier = SharedPrefixTier(page_size=4)
+    a = Engine(cfg, folded, _paged_cfg())
+    a.attach_prefix_tier(tier)
+    assert _run_one(a, prompt) == truth
+    assert tier.n_pages == 4
+    # drain A's pool through the allocator: every parked registered page
+    # is reclaimed (registry forgets it), exactly like cache pressure
+    taken = a.alloc.alloc(a.alloc.available())
+    assert taken is not None
+    assert a.alloc.prefix.cached_count == 0
+    a.alloc.free_pages(taken)
+    a.stats(check=True)
+    assert tier.n_pages == 4                    # host copies unaffected
+
+    b = Engine(cfg, folded, _paged_cfg())
+    b.attach_prefix_tier(tier)
+    assert _run_one(b, prompt) == truth
+    assert b.counters["adopted_pages"] == 4
+
+
+def test_adoption_skipped_gracefully_under_pool_pressure(folded_cfg):
+    """A dry pool must turn adoption into a no-op (recompute), never a
+    preemption or a crash: the engine waits for pages like any admission,
+    then either adopts or prefills — outputs identical either way."""
+    cfg, folded = folded_cfg
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, (18,)).astype(np.int32)
+
+    cold = Engine(cfg, folded, _paged_cfg())
+    truth = _run_one(cold, prompt)
+
+    tier = SharedPrefixTier(page_size=4)
+    a = Engine(cfg, folded, _paged_cfg())
+    a.attach_prefix_tier(tier)
+    assert _run_one(a, prompt) == truth
+
+    b = Engine(cfg, folded, _paged_cfg())
+    b.attach_prefix_tier(tier)
+    hold = b.alloc.alloc(b.alloc.available())   # pool completely dry
+    req = Request(prompt=prompt.copy(), max_new_tokens=6)
+    b.submit(req)
+    b.poll()                                    # adoption skips, no crash
+    assert b.counters["adopted_pages"] == 0
+    b.alloc.free_pages(hold)
+    ticks = 0
+    while b.has_work:
+        assert ticks < 500
+        ticks += 1
+        b.poll()
+        b.stats(check=True)
+    assert req.result().tolist() == truth
+    assert b.alloc.live == 0
+
+
+def test_attach_prefix_tier_rejects_incompatible_engines(folded_cfg):
+    cfg, folded = folded_cfg
+    contiguous = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="contiguous"))
+    with pytest.raises(EngineConfigError, match="paged"):
+        contiguous.attach_prefix_tier(SharedPrefixTier(page_size=4))
+    paged = Engine(cfg, folded, _paged_cfg())
+    with pytest.raises(EngineConfigError, match="page_size"):
+        paged.attach_prefix_tier(SharedPrefixTier(page_size=8))
+    assert paged.prefix_tier is None and contiguous.prefix_store is None

@@ -19,7 +19,8 @@ from repro.serve import stats as SS
 from repro.serve.engine import (Engine, EngineConfig, Request,
                                 RequestCancelled, RequestFailed,
                                 RequestStatus)
-from repro.serve.router import ReplicaRouter, RouterBusy, RouterConfig
+from repro.serve.router import (ReplicaRouter, RouterBusy, RouterConfig,
+                                RouterConfigError)
 from repro.serve.server import AsyncServer
 
 KEY = jax.random.PRNGKey(0)
@@ -264,6 +265,155 @@ def test_router_cancel_queued_and_dispatched(folded_cfg):
     assert router.counters["cancelled"] == 2
     assert not router.cancel(999)         # unknown rid
     assert replicas[0].alloc.live == 0
+
+
+def test_router_config_validates_and_shims_loose_kwargs(folded_cfg):
+    """RouterConfig is typed + validated like EngineConfig; the loose
+    keyword style still works for one release behind a DeprecationWarning
+    and maps onto the same config object."""
+    with pytest.raises(RouterConfigError, match="max_queue"):
+        RouterConfig(max_queue=0).validate()
+    with pytest.raises(RouterConfigError, match="thresholds"):
+        RouterConfig(min_free_pages=-1).validate()
+    with pytest.raises(RouterConfigError, match="max_affinity_pages"):
+        RouterConfig(max_affinity_pages=0).validate()
+    with pytest.raises(RouterConfigError, match="shed_policy"):
+        RouterConfig(shed_policy="yolo").validate()
+    with pytest.raises(TypeError, match="max_queue"):
+        RouterConfig.from_kwargs(max_q=3)      # typo names the valid fields
+
+    cfg, folded = folded_cfg
+    eng = Engine(cfg, folded, _paged_cfg())
+    with pytest.warns(DeprecationWarning, match="RouterConfig"):
+        router = ReplicaRouter([eng], max_queue=2, affinity=False)
+    assert router.config == RouterConfig(max_queue=2, affinity=False)
+    with pytest.raises(TypeError, match="not both"):
+        ReplicaRouter([eng], RouterConfig(), max_queue=2)
+    with pytest.raises(RouterConfigError, match="max_queue"):
+        ReplicaRouter([eng], RouterConfig(max_queue=0))
+
+
+def test_router_affinity_steers_to_prefix_holder(folded_cfg):
+    """A request whose prefix chain lives on replica 1 must be steered
+    there by affinity — overriding the least-loaded preference for the
+    fresher replica 0 — and to replica 0 with affinity off."""
+    cfg, folded = folded_cfg
+    prompt = _prompts(cfg, [14])[0]
+    truth = _truth(cfg, folded, [prompt], [6])
+
+    def warmed_pair():
+        reps = [Engine(cfg, folded, _paged_cfg()) for _ in range(2)]
+        warm = Request(prompt=prompt.copy(), max_new_tokens=6)
+        reps[1].submit(warm)
+        reps[1].run()
+        assert warm.result().tolist() == truth[0]
+        held = reps[1].prefix_store.match([int(t) for t in prompt])
+        assert held.n_pages == (len(prompt) - 1) // 4
+        return reps
+
+    for affinity, target in ((True, 1), (False, 0)):
+        reps = warmed_pair()
+        router = ReplicaRouter(reps, RouterConfig(affinity=affinity))
+        req = Request(prompt=prompt.copy(), max_new_tokens=6)
+        router.submit(req)
+        router.poll()
+        assert len(router._rev[target]) == 1   # placement, directly
+        while router.has_work:
+            router.poll()
+        assert req.result().tolist() == truth[0]
+        c = router.counters
+        assert (c["affinity_hits"], c["affinity_misses"]) == \
+            ((1, 0) if affinity else (0, 0))
+        assert reps[target].counters["completed"] == 1 + target
+        # the steered replica serves the prefix from its registry
+        assert reps[1].counters["prefix_hits"] == (1 if affinity else 0)
+
+
+def test_router_dispatch_is_deterministic_run_to_run(folded_cfg):
+    """The same trace through a fresh 2-replica router twice: identical
+    tokens AND identical placement (per-replica counters) — the explicit
+    index tiebreak leaves nothing to iteration order."""
+    cfg, folded = folded_cfg
+    base = _prompts(cfg, [8], seed=21)[0]
+    tails = _prompts(cfg, [6, 4, 6, 4, 8], seed=22)
+    prompts = [np.concatenate([base, t]) for t in tails]
+
+    def run_trace():
+        reps = [Engine(cfg, folded, _paged_cfg()) for _ in range(2)]
+        router = ReplicaRouter(reps, RouterConfig())
+        reqs = [Request(prompt=p.copy(), max_new_tokens=6) for p in prompts]
+        for r in reqs:
+            router.submit(r)
+        ticks = 0
+        while router.has_work:
+            assert ticks < 500
+            ticks += 1
+            router.poll()
+        placement = [rep.counters["completed"] for rep in reps]
+        return ([r.result().tolist() for r in reqs], placement,
+                dict(router.counters))
+
+    out1, place1, c1 = run_trace()
+    out2, place2, c2 = run_trace()
+    assert out1 == out2 and place1 == place2 and c1 == c2
+    assert c1["affinity_hits"] + c1["affinity_misses"] == len(prompts)
+
+
+def test_router_shared_tier_adoption_identical_to_single_engine(folded_cfg):
+    """Full tentpole path through the router: replica 0 publishes a prefix
+    chain to the shared tier; after its registry is reclaimed (cache
+    pressure), the next same-prefix request ADOPTS from the tier instead
+    of re-prefilling — tokens stay identical to the single-engine truth."""
+    cfg, folded = folded_cfg
+    base = _prompts(cfg, [12], seed=31)[0]
+    tails = _prompts(cfg, [6, 6], seed=32)
+    prompts = [np.concatenate([base, t]) for t in tails]
+    truth = _truth(cfg, folded, prompts, [6, 6])
+
+    reps = [Engine(cfg, folded, _paged_cfg()) for _ in range(2)]
+    router = ReplicaRouter(reps, RouterConfig(shared_tier=True))
+    assert router.prefix_tier is not None
+    assert all(rep.prefix_tier is router.prefix_tier for rep in reps)
+
+    first = Request(prompt=prompts[0].copy(), max_new_tokens=6)
+    router.submit(first)
+    while router.has_work:
+        router.poll()
+        SS.validate_router_stats(router.stats())
+    assert first.result().tolist() == truth[0]
+    published = router.prefix_tier.n_pages
+    assert published > 0 and reps[0].counters["published_pages"] == published
+
+    # reclaim replica 0's registry through the allocator (cache pressure):
+    # the tier's host copies are now the only place the chain survives
+    taken = reps[0].alloc.alloc(reps[0].alloc.available())
+    reps[0].alloc.free_pages(taken)
+    assert reps[0].prefix_store.match([int(t) for t in base]).n_pages == 0
+    assert router.prefix_tier.n_pages == published
+
+    second = Request(prompt=prompts[1].copy(), max_new_tokens=6)
+    router.submit(second)
+    while router.has_work:
+        router.poll()
+        SS.validate_router_stats(router.stats())
+        for rep in reps:
+            _sweep(rep)
+    assert second.result().tolist() == truth[1]
+    adopter = reps[1] if reps[1].counters["adopted_pages"] else reps[0]
+    assert adopter.counters["adopted_pages"] > 0
+    assert adopter.counters["prefix_hits"] >= 1
+    s = router.stats()
+    assert s["shared_tier_pages"] >= published
+    assert s["counters"]["affinity_hits"] + s["counters"]["affinity_misses"] \
+        == 2
+
+
+def test_router_shared_tier_rejects_ineligible_replicas(folded_cfg):
+    cfg, folded = folded_cfg
+    contiguous = Engine(cfg, folded, EngineConfig(
+        batch_slots=2, max_len=64, cache_layout="contiguous"))
+    with pytest.raises(RouterConfigError, match="paged"):
+        ReplicaRouter([contiguous], RouterConfig(shared_tier=True))
 
 
 def test_async_server_streams_and_matches_truth(folded_cfg):

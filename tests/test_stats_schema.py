@@ -19,12 +19,12 @@ def _gauges(**over):
     return s
 
 
-def test_v1_payload_rejected_by_v2_build():
+def test_v1_payload_rejected_by_current_build():
     """A payload persisted before the spec-decode keys existed (schema v1:
     no spec_k gauge, no drafted/accepted/rejected/accept_len_hist
     counters, version stamp 1) must be rejected outright — first on the
     version stamp, and even with a forged stamp on its key set."""
-    assert SS.STATS_SCHEMA_VERSION == 2
+    assert SS.STATS_SCHEMA_VERSION == 3
     v1_gauges = {k: 0 for k in SS.GAUGES if k != "spec_k"}
     v1_gauges["schema_version"] = 1
     v1_counters = {k: 0 for k in SS.COUNTERS
@@ -41,6 +41,25 @@ def test_v1_payload_rejected_by_v2_build():
         SS.validate_stats(stamped_v1, paged=False)
     with pytest.raises(SS.StatsSchemaError, match="drafted"):
         SS.validate_counters(v1_counters)
+
+
+def test_v2_payload_rejected_by_v3_build():
+    """A v2 payload (pre-cross-replica-sharing: no published_pages /
+    adopted_pages engine counters, no affinity_hits / affinity_misses
+    router counters, version stamp 2) is refused on the stale stamp and,
+    with a forged stamp, on its key set."""
+    v2 = _gauges(schema_version=2)
+    with pytest.raises(SS.StatsSchemaError, match="schema_version=2"):
+        SS.validate_stats(v2, paged=False)
+    v2_counters = {k: 0 for k in SS.COUNTERS
+                   if k not in ("published_pages", "adopted_pages")}
+    with pytest.raises(SS.StatsSchemaError,
+                       match="missing=\\['adopted_pages', 'published_pages'"):
+        SS.validate_counters(v2_counters)
+    v2_router = {k: 0 for k in SS.ROUTER_COUNTERS
+                 if k not in ("affinity_hits", "affinity_misses")}
+    with pytest.raises(SS.StatsSchemaError, match="affinity_hits"):
+        SS.validate_router_counters(v2_router)
 
 
 def test_validate_stats_paged_flag():
